@@ -1,0 +1,58 @@
+"""Benchmark: Fig. 8 — edge latency & energy per image across split points
+(deployment geometry: SAM ViT-H on the calibrated Jetson device model),
+including the paper's quoted deltas (sp1 vs sp11/sp29/full-SAM)."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit
+from repro.configs.lisa7b import CONFIG as DEPLOY
+from repro.core import bottleneck as bn
+from repro.network.energy import (EdgeDevice, bottleneck_flops,
+                                  encoder_flops, patch_embed_flops)
+
+
+def edge_flops_at_split(k: int, ratio: float = 0.10) -> float:
+    d = DEPLOY.sam.d_model
+    rank = bn.rank_for_ratio(d, ratio, 2)
+    f = (patch_embed_flops(d, DEPLOY.patch_size, DEPLOY.sam_tokens)
+         + encoder_flops(DEPLOY.sam, DEPLOY.sam_tokens, k)
+         + bottleneck_flops(d, rank, DEPLOY.sam_tokens))
+    # CLIP runs on the edge for both streams
+    f += (patch_embed_flops(DEPLOY.clip.d_model, DEPLOY.context_patch_size,
+                            DEPLOY.clip_tokens)
+          + encoder_flops(DEPLOY.clip, DEPLOY.clip_tokens))
+    return f
+
+
+def run(log=print):
+    dev = EdgeDevice()
+    rows = []
+    with Timer() as t:
+        lat = {}
+        eng = {}
+        for k in (1, 11, 17, 29, DEPLOY.sam.num_layers):
+            f = edge_flops_at_split(k)
+            lat[k], eng[k] = dev.latency_s(f), dev.compute_energy_j(f)
+        full = (patch_embed_flops(DEPLOY.sam.d_model, DEPLOY.patch_size,
+                                  DEPLOY.sam_tokens)
+                + encoder_flops(DEPLOY.sam, DEPLOY.sam_tokens))
+        lat_f, eng_f = dev.latency_s(full), dev.compute_energy_j(full)
+    for k in (1, 11, 17, 29, DEPLOY.sam.num_layers):
+        rows.append(emit(
+            f"fig8/sp{k}", t.us,
+            f"edge_latency_s={lat[k]:.4f};edge_energy_j={eng[k]:.2f}"))
+    rows.append(emit("fig8/full_sam_onboard", t.us,
+                     f"edge_latency_s={lat_f:.4f};edge_energy_j={eng_f:.2f}"))
+    rows.append(emit(
+        "fig8/claims", t.us,
+        f"sp1_latency_s={lat[1]:.4f};paper_sp1=0.2318;"
+        f"energy_reduction_vs_full={100 * (1 - eng[1] / eng_f):.2f}%;"
+        f"paper=93.98%;"
+        f"sp11_latency_increase={100 * (lat[11] / lat[1] - 1):.1f}%;"
+        f"paper=307.29%;"
+        f"sp29_energy_increase={100 * (eng[29] / eng[1] - 1):.1f}%;"
+        f"paper=1290.23%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Benchmark (beyond-paper, the paper's §6 future-work item): finer tier
+granularity for the runtime controller.
+
+The paper uses 3 tiers and notes "future work will involve more advanced
+control policies with higher granularity" (footnote c). We distillation-
+train three additional bottleneck pairs (r = 0.20, 0.15, 0.075), build a
+6-tier LUT, and re-run the 20-minute dynamic experiment: with smaller
+fidelity steps between adjacent feasible tiers, adaptive switching should
+cut the IoU gap to the static High-Accuracy baseline well below the
+3-tier system's gap, at equal-or-better throughput."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import CKPT, RATIOS, Timer, emit, ensure_lut, \
+    ensure_trained_system
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs.lisa_mini import CONFIG as PCFG
+from repro.core import profile as prof
+from repro.core import training
+from repro.core.lut import SystemLUT, Tier
+from repro.network import paper_trace
+from repro.runtime import MissionSpec, run_mission
+
+EXTRA_RATIOS = (0.20, 0.15, 0.075)
+
+
+def ensure_fine_bottlenecks(params, log=print):
+    out = {}
+    for r in EXTRA_RATIOS:
+        path = os.path.join(CKPT, f"bottleneck_r{r}")
+        if os.path.exists(os.path.join(path, "arrays.npz")):
+            out[r] = load_pytree(path)
+            continue
+        log(f"[fine-tiers] training bottleneck r={r}")
+        out[r] = training.train_bottleneck(PCFG, params, r, steps=250,
+                                           batch_size=16, log_every=0,
+                                           log=lambda s: None)
+        save_pytree(path, out[r])
+    return out
+
+
+def run(log=print):
+    rows = []
+    params, params_ft, bns3 = ensure_trained_system(log)
+    lut3 = ensure_lut(log)
+    with Timer() as t:
+        extra = ensure_fine_bottlenecks(params, log)
+        all_bns = {**bns3, **extra}
+        tiers = []
+        for r, bp in sorted(all_bns.items(), reverse=True):
+            acc = training.evaluate_insight(PCFG, params, bn_params=bp,
+                                            batches=6)
+            acc_ft = training.evaluate_insight(PCFG, params_ft, bn_params=bp,
+                                               batches=6)
+            tiers.append(Tier(name=f"r={r}", ratio=r,
+                              acc_base=acc["avg_iou"],
+                              acc_finetuned=acc_ft["avg_iou"],
+                              payload_mb=prof.deployment_payload_mb(
+                                  __import__("repro.configs.lisa7b",
+                                             fromlist=["CONFIG"]).CONFIG, r)))
+        lut6 = SystemLUT(tiers=tiers, context=lut3.context)
+
+        trace = paper_trace(seed=0)
+        log_ha = run_mission(lut3, trace, MissionSpec(
+            mode="static", static_tier="High Accuracy"))
+        log3 = run_mission(lut3, trace, MissionSpec(mode="avery"))
+        log6 = run_mission(lut6, trace, MissionSpec(mode="avery"))
+    for name, lg in [("avery_3tier", log3), ("avery_6tier", log6),
+                     ("static_HA", log_ha)]:
+        rows.append(emit(f"fine_tiers/{name}", t.us,
+                         f"pps={lg.mean_pps:.3f};iou={lg.mean_iou:.4f}"))
+    gap3 = 100 * (log_ha.mean_iou - log3.mean_iou)
+    gap6 = 100 * (log_ha.mean_iou - log6.mean_iou)
+    rows.append(emit(
+        "fine_tiers/claims", t.us,
+        f"gap_3tier_pp={gap3:.2f};gap_6tier_pp={gap6:.2f};"
+        f"improved={gap6 < gap3};paper_future_work=footnote_c"))
+    for tier in tiers:
+        rows.append(emit(f"fine_tiers/lut/{tier.name}", t.us,
+                         f"acc={tier.acc_base:.4f};"
+                         f"payload_mb={tier.payload_mb:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

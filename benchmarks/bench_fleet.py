@@ -1,0 +1,44 @@
+"""Benchmark (beyond-paper, §6 future work): multi-UAV fleet scaling.
+
+Sweeps fleet size N ∈ {1, 2, 4, 6} on the paper trace with equal
+bandwidth shares. Expected shape: static High-Accuracy hits its 11.68
+Mbps feasibility cliff already at N=2 (share ≤ 10 Mbps), while AVERY
+keeps every UAV above the 0.5 PPS floor by sliding down the tier list,
+trading fidelity for fleet-wide liveness."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, ensure_lut
+from repro.core.controller import MissionGoal
+from repro.network import paper_trace
+from repro.runtime.fleet import run_fleet
+from repro.runtime.mission import MissionSpec
+
+
+def run(log=print):
+    lut = ensure_lut(log)
+    trace = paper_trace(seed=0)
+    rows = []
+    results = []
+    with Timer() as t:
+        for n in (1, 2, 4, 6):
+            fleet_av = run_fleet(lut, trace, n, MissionSpec(mode="avery"))
+            fleet_fb = run_fleet(lut, trace, n,
+                                 MissionSpec(mode="avery", fallback=True))
+            fleet_ha = run_fleet(lut, trace, n, MissionSpec(
+                mode="static", static_tier="High Accuracy"))
+            results.append((n, fleet_av, fleet_fb, fleet_ha))
+    for n, fleet_av, fleet_fb, fleet_ha in results:
+        rows.append(emit(
+            f"fleet/N{n}", t.us,
+            f"avery_agg_pps={fleet_av.aggregate_pps:.2f};"
+            f"avery_iou={fleet_av.mean_iou:.4f};"
+            f"avery_starved_frac={fleet_av.infeasible_frac:.3f};"
+            f"avery_fb_agg_pps={fleet_fb.aggregate_pps:.2f};"
+            f"avery_fb_iou={fleet_fb.mean_iou:.4f};"
+            f"staticHA_agg_pps={fleet_ha.aggregate_pps:.2f};"
+            f"staticHA_iou={fleet_ha.mean_iou:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Benchmark: Table 3 — the System Configuration LUT.
+
+Profiles each bottleneck tier on the trained proxy models (Average IoU for
+the original and flood-finetuned variants) and the deployment payload
+sizes, side-by-side with the paper's published LUT."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, ensure_lut
+from repro.core.lut import paper_lut
+
+
+def run(log=print):
+    rows = []
+    with Timer() as t:
+        lut = ensure_lut(log)
+    paper = paper_lut()
+    for ours, ref in zip(lut.tiers, paper.tiers):
+        rows.append(emit(
+            f"table3/{ours.name.replace(' ', '_')}", t.us,
+            f"ratio={ours.ratio};acc_base={ours.acc_base:.4f};"
+            f"acc_ft={ours.acc_finetuned:.4f};payload_mb={ours.payload_mb:.3f};"
+            f"paper_acc_base={ref.acc_base:.4f};"
+            f"paper_payload_mb={ref.payload_mb:.2f}"))
+    # monotonicity check mirrors the paper's ordering
+    accs = [t_.acc_base for t_ in lut.tiers]
+    rows.append(emit("table3/monotone", t.us,
+                     f"acc_order_ok={accs == sorted(accs, reverse=True)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

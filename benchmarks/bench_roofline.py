@@ -1,0 +1,52 @@
+"""Benchmark: roofline table (ours — deliverable g).
+
+Reads the dry-run artifacts produced by ``python -m repro.launch.dryrun``
+and emits the per-(arch x shape x mesh) roofline terms. Run the dry-run
+first; this bench degrades gracefully (reports what exists)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, Timer, emit
+
+
+def load_records(mesh: str = "16x16", tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(log=print):
+    rows = []
+    with Timer() as t:
+        recs = load_records()
+    if not recs:
+        rows.append(emit("roofline/missing", t.us,
+                         "run `python -m repro.launch.dryrun --all` first"))
+        return rows
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("skipped"):
+            rows.append(emit(name, t.us, f"skipped={r['skipped']}"))
+            continue
+        if r.get("error"):
+            rows.append(emit(name, t.us, f"error={r['error'][:80]}"))
+            continue
+        rows.append(emit(
+            name, t.us,
+            f"compute_s={r['compute_term_s']:.4g};"
+            f"memory_s={r['memory_term_s']:.4g};"
+            f"collective_s={r['collective_term_s']:.4g};"
+            f"bottleneck={r['bottleneck']};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

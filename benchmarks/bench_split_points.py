@@ -1,0 +1,56 @@
+"""Benchmark: Fig. 7 — accuracy across SAM split depths (fixed r=0.10).
+
+Trains one bottleneck per split point of lisa-mini's SAM backbone (the
+proxy of the paper's ViT-1..ViT-31 sweep) and reports Average IoU per
+depth, plus the unsplit upper bound. The paper's observation to reproduce:
+early splits match or beat deeper splits, so split@1 wins once the edge
+cost (Fig. 8, bench_energy) is accounted."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, ensure_trained_system
+from repro.configs.lisa_mini import CONFIG as PCFG
+from repro.core import training
+
+
+def run(log=print):
+    params, _, _ = ensure_trained_system(log)
+    rows = []
+    base = training.evaluate_insight(PCFG, params, batches=4)
+    rows.append(emit("fig7/no_bottleneck", 0,
+                     f"avg_iou={base['avg_iou']:.4f}"))
+    for k in range(1, PCFG.sam.num_layers):
+        with Timer() as t:
+            bp = training.train_bottleneck(
+                PCFG, params, ratio=0.10, steps=100, batch_size=12,
+                log_every=0, log=lambda s: None, seed=100 + k)
+            # evaluate with the bottleneck at split@k
+            import jax
+            import numpy as np
+            import jax.numpy as jnp
+            from repro.core import vlm
+            from repro.data import floodseg
+            rng = np.random.RandomState(999)
+            fwd = jax.jit(lambda p, bp_, img, q: vlm.insight_forward(
+                p, PCFG, img, q, bn_params=bp_, split_k=k))
+            inters = unions = 0.0
+            gious = []
+            for _ in range(4):
+                b = floodseg.make_batch(rng, 32, "segment", augment=False)
+                ml, _ = fwd(params, bp, jnp.asarray(b["images"]),
+                            jnp.asarray(b["query"]))
+                pred = (np.asarray(ml) > 0).astype(np.float64)
+                gt = b["mask"].astype(np.float64)
+                inter = (pred * gt).sum(axis=(1, 2))
+                union = np.maximum(pred, gt).sum(axis=(1, 2))
+                inters += inter.sum()
+                unions += union.sum()
+                gious.append((inter / (union + 1e-6)).mean())
+            avg_iou = 0.5 * (float(np.mean(gious))
+                             + inters / (unions + 1e-6))
+        rows.append(emit(f"fig7/split@{k}", t.us,
+                         f"ratio=0.10;avg_iou={avg_iou:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark: §5.2.2 — dual-stream on-device cost ratio.
+
+The paper reports the CLIP Context stream is ~6.4x faster on-device than
+the Insight stream; we derive the same ratio from the deployment-geometry
+FLOPs model, plus the measured (proxy-scale) payload asymmetry."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit
+from repro.configs.lisa7b import CONFIG as DEPLOY
+from repro.core import profile as prof
+from repro.network.energy import (EdgeDevice, encoder_flops,
+                                  patch_embed_flops)
+from repro.runtime import edge_insight_flops
+
+
+def run(log=print):
+    rows = []
+    with Timer() as t:
+        dev = EdgeDevice()
+        ctx_flops = (patch_embed_flops(DEPLOY.clip.d_model,
+                                       DEPLOY.context_patch_size,
+                                       DEPLOY.clip_tokens)
+                     + encoder_flops(DEPLOY.clip, DEPLOY.clip_tokens))
+        ins_flops = edge_insight_flops(DEPLOY, 0.25)
+        ratio = ins_flops / ctx_flops
+        ctx_mb = prof.deployment_context_mb(DEPLOY)
+        ins_mb = prof.deployment_payload_mb(DEPLOY, 0.25)
+    rows.append(emit(
+        "streams/context", t.us,
+        f"edge_latency_ms={1000 * dev.latency_s(ctx_flops):.1f};"
+        f"payload_mb={ctx_mb:.3f}"))
+    rows.append(emit(
+        "streams/insight", t.us,
+        f"edge_latency_ms={1000 * dev.latency_s(ins_flops):.1f};"
+        f"payload_mb={ins_mb:.3f}"))
+    rows.append(emit("streams/claims", t.us,
+                     f"context_speedup={ratio:.1f}x;paper=6.4x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Benchmark: Fig. 10 — accuracy vs throughput trade-off envelope.
+
+AVERY in both mission modes against the static tiers (original model
+accuracies, as in the paper's figure)."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, ensure_lut
+from repro.core.controller import MissionGoal
+from repro.network import paper_trace
+from repro.runtime import MissionSpec, run_mission
+
+
+def run(log=print):
+    lut = ensure_lut(log)
+    trace = paper_trace(seed=0)
+    rows = []
+    with Timer() as t:
+        pts = {}
+        pts["AVERY_acc_mode"] = run_mission(lut, trace,
+                                            MissionSpec(mode="avery"))
+        pts["AVERY_tput_mode"] = run_mission(
+            lut, trace,
+            MissionSpec(mode="avery",
+                        goal=MissionGoal.PRIORITIZE_THROUGHPUT))
+        for tier in ("High Accuracy", "Balanced", "High Throughput"):
+            pts[tier] = run_mission(
+                lut, trace, MissionSpec(mode="static", static_tier=tier))
+    for name, lg in pts.items():
+        rows.append(emit(f"fig10/{name.replace(' ', '_')}", t.us,
+                         f"avg_pps={lg.mean_pps:.3f};"
+                         f"avg_iou={lg.mean_iou:.4f}"))
+    # blended-profile claim: AVERY(acc) strictly dominates Balanced
+    bal, av = pts["Balanced"], pts["AVERY_acc_mode"]
+    rows.append(emit(
+        "fig10/claims", t.us,
+        f"avery_beats_balanced_iou={av.mean_iou > bal.mean_iou};"
+        f"tput_mode_pps={pts['AVERY_tput_mode'].mean_pps:.2f};"
+        f"paper_tput_pps=1.85"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

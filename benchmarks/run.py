@@ -1,0 +1,58 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The offline phase (training
+lisa-mini + bottleneck tiers) runs once and is cached on disk, so the
+first invocation is the slow one.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig9  # substring filter
+  PYTHONPATH=src python -m benchmarks.run --fast       # skip fig7 sweep
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    ("table3", "benchmarks.bench_lut"),                 # Table 3
+    ("fig7", "benchmarks.bench_split_points"),          # Fig 7
+    ("fig8", "benchmarks.bench_energy"),                # Fig 8
+    ("raw", "benchmarks.bench_raw_compression"),        # §5.2.1 11.2% claim
+    ("streams", "benchmarks.bench_streams"),            # §5.2.2 6.4x claim
+    ("fig9", "benchmarks.bench_dynamic"),               # Fig 9
+    ("fig10", "benchmarks.bench_tradeoff"),             # Fig 10
+    ("fine_tiers", "benchmarks.bench_fine_tiers"),      # beyond-paper (§6 fw)
+    ("fleet", "benchmarks.bench_fleet"),                # beyond-paper (§6 fw)
+    ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the fig7 bottleneck-per-split retrain sweep")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for key, module_name in BENCHES:
+        if args.only and args.only not in key:
+            continue
+        if args.fast and key == "fig7":
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(module_name)
+            mod.run(log=lambda s: print(f"# {s}", flush=True))
+        except Exception:                                  # noqa: BLE001
+            failures.append(key)
+            print(f"# BENCH {key} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Dev-only quick smoke of the model substrate (not part of the test suite)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (HybridConfig, MLAConfig, MoEConfig, ModelConfig,
+                          SSMConfig, decode_step, forward, init_cache,
+                          init_params, loss_fn, make_train_step, prefill_step)
+from repro import optim
+
+CFGS = [
+    ModelConfig(name="t-dense", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97),
+    ModelConfig(name="t-bias-relu2", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                qkv_bias=True, mlp_act="relu2", gated_mlp=False),
+    ModelConfig(name="t-sw", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                sliding_window=8),
+    ModelConfig(name="t-mla", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                attn_type="mla",
+                mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)),
+    ModelConfig(name="t-moe", arch_type="moe", num_layers=3, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                              num_shared_experts=1, d_ff_shared=32,
+                              first_k_dense=1, d_ff_dense=128)),
+    ModelConfig(name="t-moe-scatter", arch_type="moe", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                              dispatch="scatter")),
+    ModelConfig(name="t-mamba1", arch_type="ssm", num_layers=2, d_model=64,
+                num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=97,
+                attn_type="none", rope_style="none",
+                ssm=SSMConfig(version=1, state_size=4)),
+    ModelConfig(name="t-mamba2", arch_type="ssm", num_layers=2, d_model=64,
+                num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=97,
+                attn_type="none", rope_style="none",
+                ssm=SSMConfig(version=2, state_size=8, head_dim=16)),
+    ModelConfig(name="t-hybrid", arch_type="hybrid", num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                ssm=SSMConfig(version=2, state_size=8, head_dim=16),
+                hybrid=HybridConfig(attn_every=2)),
+    ModelConfig(name="t-audio", arch_type="audio", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=31,
+                causal=False, rope_style="none", modality="audio",
+                frontend_dim=24),
+    ModelConfig(name="t-vlm", arch_type="vlm", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                rope_style="mrope", mrope_sections=(4, 2, 2), modality="vlm",
+                frontend_dim=24, num_vision_tokens=4),
+    ModelConfig(name="t-mtp", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97, mtp=True),
+]
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng):
+    if cfg.modality == "audio":
+        return {
+            "frames": jax.random.normal(rng, (B, S, cfg.frontend_dim)),
+            "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+            "mask_positions": jax.random.bernoulli(rng, 0.3, (B, S)),
+        }
+    if cfg.modality == "vlm":
+        t = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S))
+        return {"tokens": t,
+                "vision_embeds": jax.random.normal(
+                    rng, (B, cfg.num_vision_tokens, cfg.frontend_dim)),
+                "positions": pos}
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+def main():
+    failures = []
+    for cfg in CFGS:
+        try:
+            rng = jax.random.PRNGKey(0)
+            params = init_params(cfg, rng)
+            batch = make_batch(cfg, jax.random.PRNGKey(1))
+            logits, aux, _, _ = jax.jit(
+                lambda p, b: forward(p, cfg, b))(params, batch)
+            assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+            assert bool(jnp.all(jnp.isfinite(logits))), "NaN in logits"
+            # one train step
+            opt = optim.adamw(1e-3)
+            st = opt.init(params)
+            ts = jax.jit(make_train_step(cfg, opt))
+            params2, st2, metrics = ts(params, st, batch)
+            assert bool(jnp.isfinite(metrics["total_loss"])), metrics
+            # decode
+            if cfg.supports_decode and cfg.modality == "text":
+                cache = init_cache(cfg, B, S)
+                lg, cache = jax.jit(
+                    lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
+                )(params, cache, batch["tokens"][:, :1], jnp.int32(0))
+                assert lg.shape == (B, 1, cfg.vocab_size)
+                assert bool(jnp.all(jnp.isfinite(lg))), "NaN in decode"
+            print(f"OK   {cfg.name}  loss={float(metrics['loss']):.3f}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((cfg.name, repr(e)[:300]))
+            print(f"FAIL {cfg.name}: {repr(e)[:300]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

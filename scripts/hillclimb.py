@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: run tagged dry-run variants of one
+(arch x shape) pair and print the roofline-term deltas.
+
+  PYTHONPATH=src python scripts/hillclimb.py deepseek-v3-671b train_4k \
+      scatter fsdp scatter+fsdp
+"""
+import dataclasses
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch import dryrun
+
+
+def variant_cfg(arch: str, name: str):
+    """Named config transforms (the §Perf levers)."""
+    cfg = get_config(arch)
+    fsdp = False
+    for part in name.split("+"):
+        if part == "base":
+            pass
+        elif part in ("scatter", "grouped"):
+            cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                      dispatch=part))
+        elif part == "fsdp":
+            fsdp = True
+        elif part.startswith("chunk"):
+            cfg = cfg.replace(attn_chunk=int(part[len("chunk"):]))
+        elif part == "remat":
+            cfg = cfg.replace(remat=True)
+        elif part == "kvhd":
+            cfg = cfg.replace(shard_cache_hd=True)
+        elif part == "skipscores":
+            cfg = cfg.replace(attn_scores_stub=True)
+        elif part == "seqshard":
+            cfg = cfg.replace(seq_shard=True)
+        elif part.startswith("window"):
+            cfg = cfg.with_sliding_window(int(part[len("window"):]))
+        else:
+            raise ValueError(f"unknown variant part {part!r}")
+    return cfg, fsdp
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = sys.argv[3:] or ["base"]
+    print(f"{'variant':>18s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'bottleneck':>11s} {'useful':>7s} "
+          f"{'temp_GB':>8s}")
+    for v in ["base"] + [x for x in variants if x != "base"]:
+        cfg, fsdp = variant_cfg(arch, v)
+        rec = dryrun.run_combo(arch, shape, multi_pod=False,
+                               cfg_override=cfg, tag=v.replace("+", "_"),
+                               fsdp=fsdp)
+        if rec.get("error"):
+            print(f"{v:>18s} ERROR {rec['error'][:90]}")
+            continue
+        print(f"{v:>18s} {rec['compute_term_s']:10.3f} "
+              f"{rec['memory_term_s']:10.3f} "
+              f"{rec['collective_term_s']:10.3f} {rec['bottleneck']:>11s} "
+              f"{rec['useful_flops_ratio']:7.3f} "
+              f"{rec['temp_size_in_bytes'] / 1e9:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table + §Dry-run summary
+from benchmarks/artifacts/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = ["falcon-mamba-7b", "nemotron-4-340b", "qwen1.5-32b",
+              "phi4-mini-3.8b", "zamba2-7b", "hubert-xlarge",
+              "granite-moe-3b-a800m", "deepseek-v3-671b", "minicpm3-4b",
+              "qwen2-vl-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}m"
+    return f"{x * 1e6:.1f}u"
+
+
+def main(dirpath="benchmarks/artifacts/dryrun", mesh="16x16"):
+    recs = {}
+    for p in glob.glob(os.path.join(dirpath, "*.json")):
+        r = json.load(open(p))
+        if r.get("mesh") == mesh and not r.get("tag"):
+            recs[(r["arch"], r["shape"])] = r
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | useful | temp GB/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | - | - | - | - | - | - | MISSING |")
+                continue
+            if r.get("skipped"):
+                print(f"| {a} | {s} | - | - | - | - | - | - | "
+                      f"skipped: {r['skipped']} |")
+                continue
+            if r.get("error"):
+                print(f"| {a} | {s} | - | - | - | - | - | - | "
+                      f"ERROR: {r['error'][:60]} |")
+                continue
+            note = "sliding-window 8192" if (
+                s == "long_500k" and a not in ("falcon-mamba-7b",)) else ""
+            print(f"| {a} | {s} | {fmt_s(r['compute_term_s'])} | "
+                  f"{fmt_s(r['memory_term_s'])} | "
+                  f"{fmt_s(r['collective_term_s'])} | {r['bottleneck']} | "
+                  f"{r['useful_flops_ratio']:.3f} | "
+                  f"{r.get('temp_size_in_bytes', 0) / 1e9:.1f} | {note} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,13 @@
+"""AVERY reproduction: intent-driven adaptive VLM split computing in JAX.
+
+Subpackages:
+  core        the paper's contribution (streams, split, bottleneck,
+              controller, LUT, LISA pipeline)
+  models      architecture zoo (dense/MoE/SSM/hybrid/audio/VLM)
+  configs     the 10 assigned architectures + LISA configs
+  kernels     Pallas TPU kernels (bottleneck, flash attention, ssm scan)
+  sharding    PartitionSpec rules; launch — mesh/dryrun/train/serve
+  optim, data, checkpoint, network, runtime — substrates
+"""
+
+__version__ = "1.0.0"

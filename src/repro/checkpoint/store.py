@@ -1,0 +1,65 @@
+"""Pytree checkpointing: npz arrays + JSON manifest of the tree structure.
+
+No orbax offline; this is a small, dependable substitute. Arrays are
+stored flat under stringified key-paths; the manifest records the
+treedef so arbitrary nested dict/list pytrees round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    """path is a directory; writes arrays.npz + manifest.json."""
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "num_leaves": len(leaves),
+                   "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+                   "shapes": [list(np.asarray(l).shape) for l in leaves]},
+                  f)
+    # store the structure itself for reconstruction
+    struct = jax.tree.map(lambda _: 0, tree)
+    with open(os.path.join(path, "structure.json"), "w") as f:
+        json.dump(_to_jsonable(struct), f)
+
+
+def _to_jsonable(tree):
+    if isinstance(tree, dict):
+        return {"__dict__": {k: _to_jsonable(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__list__": [_to_jsonable(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    return {"__leaf__": True}
+
+
+def _from_jsonable(spec, leaves_iter):
+    if "__leaf__" in spec:
+        return next(leaves_iter)
+    if "__dict__" in spec:
+        return {k: _from_jsonable(v, leaves_iter)
+                for k, v in spec["__dict__"].items()}
+    vals = [_from_jsonable(v, leaves_iter) for v in spec["__list__"]]
+    return tuple(vals) if spec.get("__tuple__") else vals
+
+
+def load_pytree(path: str) -> Any:
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    with open(os.path.join(path, "structure.json")) as f:
+        struct = json.load(f)
+    return _from_jsonable(struct, iter(leaves))

@@ -1,0 +1,32 @@
+"""hubert-xlarge — encoder-only audio transformer. [arXiv:2106.07447]
+
+48L, d_model=1280, 16 heads (kv=16), d_ff=5120, vocab=504 (cluster
+codebook). Bidirectional (non-causal); trained with masked-unit
+prediction. The conv waveform feature extractor is a stub per the
+assignment carve-out: ``input_specs`` provides (B, T, 512) frame features.
+
+Encoder-only ⇒ NO decode step: decode_32k and long_500k are skipped for
+this arch (recorded as N/A in EXPERIMENTS.md; DESIGN.md §3).
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    rope_style="none",
+    norm="layernorm",
+    mlp_act="gelu",
+    gated_mlp=False,
+    modality="audio",
+    frontend_dim=512,
+    param_dtype="bfloat16",
+    act_dtype="bfloat16",
+    source="arXiv:2106.07447 (HuBERT X-Large; w2v2-style encoder)",
+)

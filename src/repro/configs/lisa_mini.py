@@ -1,0 +1,26 @@
+"""LISA-mini — the trainable proxy of the paper's LISA topology
+(DESIGN.md §6). Small enough to train end-to-end on CPU in minutes, real
+enough that the bottleneck tiers produce an honest accuracy-vs-ratio
+curve (Table 3 / Fig 7 analogs).
+
+Scene images are 32x32x3 procedural flood scenes (repro.data.floodseg);
+SAM-mini consumes 4px patches (64 tokens), CLIP-mini consumes 8px patches
+on the same image (16 tokens, the "low-resolution context" pathway).
+The mask head emits 4x4=16 pixel logits per patch -> full 32x32 masks.
+"""
+from repro.configs.lisa7b import LISAPipelineConfig, _encoder
+from repro.models import ModelConfig
+
+CONFIG = LISAPipelineConfig(
+    name="lisa-mini",
+    sam=_encoder("sam-mini", 4, 128, 4, 256, dtype="float32"),
+    clip=_encoder("clip-mini", 2, 64, 4, 128, dtype="float32"),
+    llm=ModelConfig(
+        name="llm-mini", arch_type="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=64,
+        param_dtype="float32", act_dtype="float32"),
+    image_size=32, patch_size=4,
+    context_image_size=32, context_patch_size=8,
+    split_layer=1,
+    mask_pixels_per_patch=16,
+)

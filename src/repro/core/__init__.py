@@ -1,0 +1,30 @@
+"""AVERY core: the paper's contribution as composable JAX modules.
+
+  intent      — operator-intent taxonomy + NL gate (§3.1)
+  streams     — dual-stream (Context/Insight) execution modes (§4.1–4.3)
+  split       — depth-wise head/tail partition of any stacked model
+  bottleneck  — learned low-rank + int8 boundary compression (Fig. 5)
+  lut         — pre-profiled System Configuration LUT (Table 3)
+  controller  — Algorithm 1 Sense/Gate/Evaluate/Select
+  packets     — payload accounting + packetisation
+  vlm         — LISA-style grounded VLM pipeline (Fig. 4)
+"""
+from repro.core.bottleneck import (BottleneckSpec, init_bottleneck,
+                                   rank_for_ratio)
+from repro.core.controller import (MissionGoal, NoFeasibleInsightTier,
+                                   PowerConfig, SelectedConfig,
+                                   select_configuration)
+from repro.core.intent import (DEFAULT_REQUIREMENTS, Intent,
+                               IntentRequirements, classify_intent)
+from repro.core.lut import ContextConfig, SystemLUT, Tier, paper_lut
+from repro.core.split import SplitPlan
+from repro.core.streams import DualStreamExecutor, Stream
+
+__all__ = [
+    "Intent", "IntentRequirements", "classify_intent", "DEFAULT_REQUIREMENTS",
+    "Stream", "DualStreamExecutor", "SplitPlan",
+    "BottleneckSpec", "init_bottleneck", "rank_for_ratio",
+    "SystemLUT", "Tier", "ContextConfig", "paper_lut",
+    "MissionGoal", "PowerConfig", "SelectedConfig", "select_configuration",
+    "NoFeasibleInsightTier",
+]

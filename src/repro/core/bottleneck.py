@@ -1,0 +1,97 @@
+"""Learned bottleneck compression for split activations (paper Fig. 5).
+
+An encoder/decoder pair is inserted at the split point: the edge projects
+the (B, T, d) boundary activation to a low-rank code and int8-quantises it
+(per-token absmax scale); the cloud dequantises and projects back. Each
+pre-trained pair is one LUT operating tier.
+
+TPU adaptation (DESIGN.md §4): the projection+quantisation is fused in a
+single Pallas kernel (``repro.kernels.bottleneck``) so the full-width
+activation never round-trips HBM; this module is the pure-jnp reference
+path and the training path (straight-through estimator for the rounding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fan_in_init
+
+
+@dataclass(frozen=True)
+class BottleneckSpec:
+    d_model: int
+    rank: int                    # code channels
+    orig_bytes_per_el: int = 2   # boundary activation dtype width (bf16)
+
+    @property
+    def ratio(self) -> float:
+        """Compression ratio r = compressed bytes / original bytes
+        (int8 codes vs full-width activation), per token."""
+        return (self.rank * 1 + 2) / (self.d_model * self.orig_bytes_per_el)
+
+
+def rank_for_ratio(d_model: int, ratio: float,
+                   orig_bytes_per_el: int = 2) -> int:
+    """Code rank such that int8 payload ≈ ratio * original activation."""
+    rank = int(round(ratio * d_model * orig_bytes_per_el)) - 2
+    return max(1, min(d_model, rank))
+
+
+def init_bottleneck(rng: jax.Array, spec: BottleneckSpec,
+                    dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "enc": fan_in_init(k1, (spec.d_model, spec.rank), dtype),
+        "dec": fan_in_init(k2, (spec.rank, spec.d_model), dtype),
+    }
+
+
+def _absmax_scale(z: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(z), axis=-1, keepdims=True) / 127.0 + 1e-8
+
+
+def encode(params: dict, x: jax.Array,
+           use_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x (..., d) -> (codes int8 (..., rank), scales f32 (..., 1))."""
+    if use_kernel:
+        from repro.kernels.bottleneck import ops as bops
+        return bops.bottleneck_encode(x, params["enc"])
+    z = (x @ params["enc"].astype(x.dtype)).astype(jnp.float32)
+    s = _absmax_scale(z)
+    codes = jnp.clip(jnp.round(z / s), -127, 127).astype(jnp.int8)
+    return codes, s
+
+
+def decode(params: dict, codes: jax.Array, scales: jax.Array,
+           out_dtype=jnp.float32, use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels.bottleneck import ops as bops
+        return bops.bottleneck_decode(codes, scales, params["dec"], out_dtype)
+    z = codes.astype(jnp.float32) * scales
+    return (z @ params["dec"].astype(jnp.float32)).astype(out_dtype)
+
+
+def roundtrip_st(params: dict, x: jax.Array) -> jax.Array:
+    """Differentiable encode→quantise→decode with a straight-through
+    estimator on the rounding — the training path."""
+    z = (x.astype(jnp.float32) @ params["enc"].astype(jnp.float32))
+    s = _absmax_scale(jax.lax.stop_gradient(z))
+    zq = z / s
+    zq = zq + jax.lax.stop_gradient(jnp.clip(jnp.round(zq), -127, 127) - zq)
+    return ((zq * s) @ params["dec"].astype(jnp.float32)).astype(x.dtype)
+
+
+def payload_bytes(spec: BottleneckSpec, num_tokens: int) -> int:
+    from repro.core.packets import HEADER_BYTES
+    return HEADER_BYTES + num_tokens * spec.rank + num_tokens * 2
+
+
+def recon_loss(params: dict, x: jax.Array) -> jax.Array:
+    """Normalised reconstruction MSE (distillation regulariser)."""
+    xh = roundtrip_st(params, x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return jnp.mean(jnp.square(xh - xf)) / (jnp.mean(jnp.square(xf)) + 1e-8)

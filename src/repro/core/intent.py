@@ -1,0 +1,70 @@
+"""Operator intent taxonomy (paper §3.1).
+
+Two intent levels, mapped 1:1 to admissible streams (§3.2):
+  * CONTEXT — coarse semantic awareness / triage; text answer suffices.
+  * INSIGHT — fine-grained spatial grounding; a segmentation mask is the
+    required semantic product.
+
+``classify_intent`` is the lightweight onboard NL gate: a keyword rule
+set over the operator prompt (the paper's controller is likewise
+"lightweight and interpretable", §4.4). Each intent induces service
+requirements (F_I update-timeliness floor, Q_I fidelity floor).
+"""
+from __future__ import annotations
+
+import enum
+import re
+from dataclasses import dataclass
+
+
+class Intent(enum.Enum):
+    CONTEXT = "context"
+    INSIGHT = "insight"
+
+
+@dataclass(frozen=True)
+class IntentRequirements:
+    """Service-level objectives induced by an intent (paper §3.1)."""
+    min_update_pps: float         # F_I: minimum update throughput (packets/s)
+    min_fidelity: float = 0.0     # Q_I: minimum Average IoU (Insight only)
+
+
+# Deployment defaults (paper §3.3: F_I = 0.5 PPS for Insight-level intents;
+# Q_I is deployment-dependent — 0.0 disables the fidelity floor, matching
+# Algorithm 1's listing; missions can raise it per-intent).
+DEFAULT_REQUIREMENTS = {
+    Intent.CONTEXT: IntentRequirements(min_update_pps=2.0),
+    Intent.INSIGHT: IntentRequirements(min_update_pps=0.5, min_fidelity=0.0),
+}
+
+# Grounding verbs / spatial-output requests => Insight-level.
+_INSIGHT_PATTERNS = [
+    r"\bhighlight\b", r"\bsegment\b", r"\bmark\b", r"\boutline\b",
+    r"\bmask\b", r"\blocal[iz]e\b", r"\bpinpoint\b", r"\bshow exactly\b",
+    r"\bwhere exactly\b", r"\bdraw\b", r"\btrace\b",
+]
+# Triage / existence / counting questions => Context-level.
+_CONTEXT_PATTERNS = [
+    r"\bwhat is happening\b", r"\bany\b", r"\bis there\b", r"\bare there\b",
+    r"\bhow many\b", r"\bdescribe\b", r"\bsummar", r"\bstatus\b",
+    r"\bsurvey\b", r"\boverview\b",
+]
+
+
+def classify_intent(prompt: str) -> Intent:
+    p = prompt.lower()
+    insight = sum(bool(re.search(pat, p)) for pat in _INSIGHT_PATTERNS)
+    context = sum(bool(re.search(pat, p)) for pat in _CONTEXT_PATTERNS)
+    if insight > context:
+        return Intent.INSIGHT
+    if context > insight:
+        return Intent.CONTEXT
+    # tie / no signal: grounding requests usually name a concrete target
+    # ("the red car on the roof"); default to CONTEXT (cheap, escalate later)
+    return Intent.INSIGHT if insight else Intent.CONTEXT
+
+
+def admissible_streams(intent: Intent):
+    """S(I_t) — paper §3.2: the stream set is a singleton per intent level."""
+    from repro.core.streams import Stream
+    return (Stream.INSIGHT,) if intent is Intent.INSIGHT else (Stream.CONTEXT,)

@@ -1,0 +1,91 @@
+"""Dual-stream execution modes (paper §4.1–§4.3).
+
+``Stream`` names the two semantically distinct execution modes; the
+``DualStreamExecutor`` bundles the jitted edge/cloud stage functions for a
+trained LISA pipeline plus the per-tier bottlenecks, and exposes
+``run_context`` / ``run_insight`` used by the serving runtime and the
+mission simulator.
+
+The executor is deliberately channel-agnostic: it returns the numpy
+payloads + packets; the runtime decides what the (simulated or pod-
+disaggregated) link does with them.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lisa7b import LISAPipelineConfig
+from repro.core import bottleneck as bn
+from repro.core import packets as pk
+from repro.core import vlm
+from repro.core.lut import SystemLUT, Tier
+
+
+class Stream(enum.Enum):
+    CONTEXT = "context"   # high-frequency, low-resolution awareness
+    INSIGHT = "insight"   # low-frequency, high-fidelity grounding
+
+
+@dataclass
+class DualStreamExecutor:
+    pcfg: LISAPipelineConfig
+    params: dict
+    bottlenecks: Dict[str, dict]          # tier name -> bottleneck params
+    lut: SystemLUT
+
+    def __post_init__(self):
+        pcfg = self.pcfg
+        self._edge_context = jax.jit(
+            lambda p, img: vlm.clip_encode(p, pcfg, img))
+        self._edge_insight = jax.jit(
+            lambda p, img: vlm.sam_head(p, pcfg, img))
+        self._encode = {
+            name: jax.jit(lambda bp, a: bn.encode(bp, a))
+            for name in self.bottlenecks
+        }
+        def _cloud_insight(p, bp, codes, scales, ctx, query):
+            a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
+            feats = vlm.sam_tail(p, pcfg, a)
+            answer_logits, seg = vlm.llm_reason(p, pcfg, ctx, query)
+            return vlm.mask_decode(p, pcfg, feats, seg), answer_logits
+        self._cloud_insight = jax.jit(_cloud_insight)
+        self._cloud_context = jax.jit(
+            lambda p, ctx, query: vlm.llm_reason(p, pcfg, ctx, query)[0])
+
+    # ---- edge side ----
+
+    def edge_context(self, images, seq_id: int, now: float
+                     ) -> Tuple[pk.Packet, np.ndarray]:
+        ctx = np.asarray(self._edge_context(self.params, images))
+        return pk.make_context_packet(seq_id, now, ctx), ctx
+
+    def edge_insight(self, images, tier: Tier, seq_id: int, now: float
+                     ) -> pk.Packet:
+        a = self._edge_insight(self.params, images)
+        codes, scales = self._encode[tier.name](self.bottlenecks[tier.name], a)
+        ctx = np.asarray(self._edge_context(self.params, images))
+        return pk.make_insight_packet(seq_id, now, tier.name,
+                                      np.asarray(codes), np.asarray(scales),
+                                      clip_feats=ctx)
+
+    # ---- cloud side ----
+
+    def cloud_context(self, packet: pk.Packet, query) -> np.ndarray:
+        return np.asarray(self._cloud_context(
+            self.params, jnp.asarray(packet.content["ctx"]), query))
+
+    def cloud_insight(self, packet: pk.Packet, query
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        bp = self.bottlenecks[packet.tier_name]
+        mask_logits, answer_logits = self._cloud_insight(
+            self.params, bp,
+            jnp.asarray(packet.content["codes"]),
+            jnp.asarray(packet.content["scales"]),
+            jnp.asarray(packet.content["clip"]), query)
+        return np.asarray(mask_logits), np.asarray(answer_logits)

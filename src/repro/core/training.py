@@ -1,0 +1,153 @@
+"""Training drivers for the LISA proxy pipeline and its bottleneck tiers.
+
+Two model variants mirror the paper's LUT columns (§5.1):
+  * "original"  — trained on the broad mixture (both classes, context +
+    insight queries, heavy photometric augmentation) — the stand-in for
+    pre-trained LISA;
+  * "finetuned" — the original weights further specialised on the
+    flood-proxy Insight distribution (the stand-in for LoRA flood
+    fine-tuning on Flood-ReasonSeg).
+
+Bottleneck pairs are distillation-trained per compression ratio with the
+pipeline frozen (paper Fig. 5: "pre-trained compression models").
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lisa7b import LISAPipelineConfig
+from repro.core import bottleneck as bn
+from repro.core import vlm
+from repro.data import floodseg
+from repro import optim
+
+
+def _to_jnp(batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def mixed_loss(params, pcfg, ins_batch, ctx_batch):
+    li, mi = vlm.insight_loss(params, pcfg, ins_batch)
+    lc, mc = vlm.context_loss(params, pcfg, ctx_batch)
+    return li + 0.5 * lc, {**mi, "ctx_ce": mc["answer_ce"]}
+
+
+def train_lisa(pcfg: LISAPipelineConfig, steps: int = 300, batch_size: int = 16,
+               seed: int = 0, lr: float = 3e-4,
+               params: Optional[dict] = None,
+               insight_only: bool = False,
+               log_every: int = 50,
+               log: Callable[[str], None] = print) -> dict:
+    rng = np.random.RandomState(seed)
+    if params is None:
+        params = vlm.init_lisa(pcfg, jax.random.PRNGKey(seed))
+    opt = optim.adamw(optim.cosine_with_warmup(lr, steps // 10, steps))
+    state = opt.init(params)
+
+    def step_fn(p, s, ins, ctx):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda q: mixed_loss(q, pcfg, ins, ctx), has_aux=True)(p)
+        p, s = opt.apply(p, s, grads)
+        return p, s, loss, metrics
+
+    step_jit = jax.jit(step_fn)
+    for i in range(steps):
+        ins = _to_jnp(floodseg.make_batch(rng, batch_size, "segment"))
+        kind = "any" if (i % 2 == 0 or insight_only) else "count"
+        ctx = _to_jnp(floodseg.make_batch(rng, batch_size, kind))
+        params, state, loss, metrics = step_jit(params, state, ins, ctx)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log(f"  step {i:4d} loss={float(loss):.4f} "
+                f"bce={float(metrics['bce']):.4f} "
+                f"dice={float(metrics['dice']):.4f}")
+    return params
+
+
+def finetune_lisa(pcfg: LISAPipelineConfig, params: dict, steps: int = 150,
+                  batch_size: int = 16, seed: int = 1,
+                  lr: float = 1e-4, log=print) -> dict:
+    """Flood-specialisation pass (stand-in for the paper's LoRA FT)."""
+    return train_lisa(pcfg, steps=steps, batch_size=batch_size, seed=seed,
+                      lr=lr, params=params, insight_only=True, log=log)
+
+
+def train_bottleneck(pcfg: LISAPipelineConfig, params: dict, ratio: float,
+                     steps: int = 200, batch_size: int = 16, seed: int = 0,
+                     lr: float = 1e-3, recon_weight: float = 0.1,
+                     log_every: int = 50, log=print) -> dict:
+    """Distillation-train one bottleneck pair at ``ratio`` with the
+    pipeline frozen (gradients flow only into the encoder/decoder)."""
+    d = pcfg.sam.d_model
+    orig_bytes = jnp.dtype(pcfg.sam.adtype).itemsize
+    spec = bn.BottleneckSpec(d, bn.rank_for_ratio(d, ratio, orig_bytes),
+                             orig_bytes)
+    rng = np.random.RandomState(seed + int(ratio * 1000))
+    bn_params = bn.init_bottleneck(
+        jax.random.PRNGKey(seed + int(ratio * 1000)), spec)
+    opt = optim.adamw(lr)
+    state = opt.init(bn_params)
+    frozen = jax.tree.map(jax.lax.stop_gradient, params)
+
+    def loss_fn(bp, ins):
+        task, _ = vlm.insight_loss(frozen, pcfg, ins, bn_params=bp)
+        a = vlm.sam_head(frozen, pcfg, ins["images"])
+        return task + recon_weight * bn.recon_loss(bp, a)
+
+    def step_fn(bp, s, ins):
+        loss, grads = jax.value_and_grad(loss_fn)(bp, ins)
+        bp, s = opt.apply(bp, s, grads)
+        return bp, s, loss
+
+    step_jit = jax.jit(step_fn)
+    for i in range(steps):
+        ins = _to_jnp(floodseg.make_batch(rng, batch_size, "segment"))
+        bn_params, state, loss = step_jit(bn_params, state, ins)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log(f"  bn(r={ratio}) step {i:4d} loss={float(loss):.4f}")
+    return bn_params
+
+
+def evaluate_insight(pcfg: LISAPipelineConfig, params: dict,
+                     bn_params: Optional[dict] = None, batches: int = 8,
+                     batch_size: int = 32, seed: int = 999) -> Dict[str, float]:
+    """Average IoU (mean of gIoU and cIoU, paper Table 3) on held-out
+    un-augmented scenes."""
+    rng = np.random.RandomState(seed)
+    fwd = jax.jit(lambda p, bp, img, q: vlm.insight_forward(
+        p, pcfg, img, q, bn_params=bp))
+    inters, unions, gious = [], [], []
+    for _ in range(batches):
+        b = _to_jnp(floodseg.make_batch(rng, batch_size, "segment",
+                                        augment=False))
+        if bn_params is None:
+            ml, _ = jax.jit(lambda p, img, q: vlm.insight_forward(
+                p, pcfg, img, q))(params, b["images"], b["query"])
+        else:
+            ml, _ = fwd(params, bn_params, b["images"], b["query"])
+        pred = (np.asarray(ml) > 0).astype(np.float64)
+        gt = np.asarray(b["mask"]).astype(np.float64)
+        inter = (pred * gt).sum(axis=(1, 2))
+        union = np.maximum(pred, gt).sum(axis=(1, 2))
+        inters.append(inter.sum())
+        unions.append(union.sum())
+        gious.append((inter / (union + 1e-6)).mean())
+    giou = float(np.mean(gious))
+    ciou = float(sum(inters) / (sum(unions) + 1e-6))
+    return {"giou": giou, "ciou": ciou, "avg_iou": 0.5 * (giou + ciou)}
+
+
+def evaluate_context(pcfg: LISAPipelineConfig, params: dict, batches: int = 8,
+                     batch_size: int = 32, seed: int = 999) -> float:
+    rng = np.random.RandomState(seed)
+    fwd = jax.jit(lambda p, img, q: vlm.context_forward(p, pcfg, img, q))
+    accs = []
+    for _ in range(batches):
+        b = _to_jnp(floodseg.make_batch(rng, batch_size, "any", augment=False))
+        logits = fwd(params, b["images"], b["query"])
+        accs.append(float(np.mean(np.argmax(np.asarray(logits), -1)
+                                  == np.asarray(b["answer"]))))
+    return float(np.mean(accs))

@@ -1,0 +1,275 @@
+"""LISA-style grounded VLM pipeline (paper Fig. 4), built from the stack
+substrate: SAM vision backbone + CLIP context encoder + multi-modal LLM +
+<SEG>-conditioned mask decoder.
+
+Instantiated at two scales (repro.configs.lisa7b / lisa_mini — DESIGN.md
+§6). All pipeline stages are pure functions so the split-computing runtime
+can place them on either side of the channel:
+
+  EDGE : patchify -> SAM blocks [0,k)        (Insight head, split@k)
+         patchify_lowres -> CLIP encoder     (Context stream)
+  LINK : bottleneck codes (+ CLIP features)
+  CLOUD: bottleneck decode -> SAM blocks [k,L) -> mask features
+         LLM([ctx tokens; query]) -> answer logits + <SEG> embedding
+         mask decoder(SAM feats, <SEG>) -> segmentation mask logits
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lisa7b import LISAPipelineConfig
+from repro.core import bottleneck as bn
+from repro.models import stack
+from repro.models.common import (causal_mask, fan_in_init, gelu, linear,
+                                 normal_init)
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# patch embedding
+# ---------------------------------------------------------------------------
+
+
+def patchify(images: jax.Array, patch: int) -> jax.Array:
+    """(B, H, W, C) -> (B, T, patch*patch*C), row-major patches."""
+    B, H, W, C = images.shape
+    gh, gw = H // patch, W // patch
+    x = images.reshape(B, gh, patch, gw, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, gh * gw, patch * patch * C)
+
+
+def _init_encoder(rng: jax.Array, cfg: ModelConfig, patch: int,
+                  num_tokens: int, in_ch: int = 3) -> dict:
+    ks = jax.random.split(rng, 3)
+    spec = stack.layer_groups(cfg)[0]
+    return {
+        "patch_w": fan_in_init(ks[0], (patch * patch * in_ch, cfg.d_model),
+                               cfg.pdtype),
+        "patch_b": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "pos": normal_init(ks[1], (num_tokens, cfg.d_model), 0.02, cfg.pdtype),
+        "groups": [stack.init_group(ks[2], cfg, spec)],
+        "norm": stack.init_norm(cfg),
+    }
+
+
+def _encoder_embed(p: dict, cfg: ModelConfig, images: jax.Array,
+                   patch: int) -> jax.Array:
+    x = linear(patchify(images, patch).astype(cfg.adtype),
+               p["patch_w"], p["patch_b"])
+    return x + p["pos"][None].astype(cfg.adtype)
+
+
+def _encoder_blocks(p_groups, cfg: ModelConfig, x: jax.Array,
+                    lo: int = 0, hi: Optional[int] = None) -> jax.Array:
+    """Run encoder blocks [lo, hi) — supports the depth-wise split."""
+    import dataclasses
+    full = stack.layer_groups(cfg)[0]
+    hi = full.count if hi is None else hi
+    if lo == hi:
+        return x
+    gp = jax.tree.map(lambda a: a[lo:hi], p_groups[0])
+    spec = dataclasses.replace(full, count=hi - lo)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mask = jnp.zeros((1, S, S), jnp.float32)
+    x, _, _ = stack.group_forward(gp, cfg, spec, x, positions, mask)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# LISA model
+# ---------------------------------------------------------------------------
+
+
+def init_lisa(pcfg: LISAPipelineConfig, rng: jax.Array) -> dict:
+    ks = jax.random.split(rng, 8)
+    llm = pcfg.llm
+    d_sam, d_clip, d_llm = pcfg.sam.d_model, pcfg.clip.d_model, llm.d_model
+    llm_spec = stack.layer_groups(llm)[0]
+    return {
+        "sam": _init_encoder(ks[0], pcfg.sam, pcfg.patch_size, pcfg.sam_tokens),
+        "clip": _init_encoder(ks[1], pcfg.clip, pcfg.context_patch_size,
+                              pcfg.clip_tokens),
+        "clip_proj": fan_in_init(ks[2], (d_clip, d_llm), llm.pdtype),
+        "llm": {
+            "embed": normal_init(ks[3], (llm.vocab_size, d_llm), 0.02,
+                                 llm.pdtype),
+            "groups": [stack.init_group(ks[4], llm, llm_spec)],
+            "norm": stack.init_norm(llm),
+            "answer_head": fan_in_init(ks[5], (d_llm, llm.vocab_size),
+                                       llm.pdtype),
+        },
+        "seg_proj": fan_in_init(ks[6], (d_llm, d_sam), llm.pdtype),
+        "mask_head": {
+            "w1": fan_in_init(ks[7], (d_sam, d_sam), pcfg.sam.pdtype),
+            "b1": jnp.zeros((d_sam,), pcfg.sam.pdtype),
+            "w2": fan_in_init(jax.random.fold_in(ks[7], 1),
+                              (d_sam, max(1, pcfg.mask_pixels_per_patch)),
+                              pcfg.sam.pdtype),
+        },
+    }
+
+
+# ----- edge-side stages -----
+
+
+def sam_head(params: dict, pcfg: LISAPipelineConfig, images: jax.Array,
+             split_k: Optional[int] = None) -> jax.Array:
+    """Edge prefix of the SAM backbone: patchify + blocks [0, k)."""
+    k = pcfg.split_layer if split_k is None else split_k
+    p = params["sam"]
+    x = _encoder_embed(p, pcfg.sam, images, pcfg.patch_size)
+    return _encoder_blocks(p["groups"], pcfg.sam, x, 0, k)
+
+
+def clip_encode(params: dict, pcfg: LISAPipelineConfig,
+                images: jax.Array) -> jax.Array:
+    """Context stream: low-res CLIP features, projected to LLM width.
+    Returns (B, clip_tokens, d_llm). Images are resized down to the
+    context resolution first (the low-res pathway, paper §4.1)."""
+    p = params["clip"]
+    if images.shape[1] != pcfg.context_image_size:
+        B = images.shape[0]
+        images = jax.image.resize(
+            images.astype(jnp.float32),
+            (B, pcfg.context_image_size, pcfg.context_image_size, 3),
+            method="linear").astype(images.dtype)
+    x = _encoder_embed(p, pcfg.clip, images, pcfg.context_patch_size)
+    x = _encoder_blocks(p["groups"], pcfg.clip, x)
+    x = stack.apply_norm(x, p["norm"], pcfg.clip)
+    return linear(x, params["clip_proj"])
+
+
+# ----- cloud-side stages -----
+
+
+def sam_tail(params: dict, pcfg: LISAPipelineConfig, x: jax.Array,
+             split_k: Optional[int] = None) -> jax.Array:
+    """Cloud suffix: blocks [k, L) + final norm -> mask features."""
+    k = pcfg.split_layer if split_k is None else split_k
+    p = params["sam"]
+    x = _encoder_blocks(p["groups"], pcfg.sam, x, k, None)
+    return stack.apply_norm(x, p["norm"], pcfg.sam)
+
+
+def llm_reason(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
+               query_tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Multi-modal LLM over [ctx; query]. Returns (answer_logits (B,V),
+    seg_embedding (B, d_sam)) taken at the final (<SEG>) position."""
+    llm = pcfg.llm
+    p = params["llm"]
+    x_q = jnp.take(p["embed"], query_tokens, axis=0).astype(llm.adtype)
+    x = jnp.concatenate([ctx_tokens.astype(llm.adtype), x_q], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mask = causal_mask(S)[None]
+    spec = stack.layer_groups(llm)[0]
+    x, _, _ = stack.group_forward(p["groups"][0], llm, spec, x, positions,
+                                  mask)
+    x = stack.apply_norm(x, p["norm"], llm)
+    last = x[:, -1]                                   # <SEG> position
+    answer_logits = linear(last, p["answer_head"])
+    seg = linear(last, params["seg_proj"])
+    return answer_logits, seg
+
+
+def mask_decode(params: dict, pcfg: LISAPipelineConfig, sam_feats: jax.Array,
+                seg: jax.Array) -> jax.Array:
+    """<SEG>-conditioned mask decoder: (B, T, d_sam) x (B, d_sam) ->
+    per-pixel logits (B, H, W)."""
+    mh = params["mask_head"]
+    fused = sam_feats * seg[:, None, :].astype(sam_feats.dtype)
+    h = gelu(linear(fused, mh["w1"], mh["b1"]))
+    pix = linear(h, mh["w2"])                         # (B, T, pp)
+    B, T, pp = pix.shape
+    g = pcfg.image_size // pcfg.patch_size
+    if pp == 1:
+        return pix.reshape(B, g, g)
+    s = int(round(pp ** 0.5))
+    pix = pix.reshape(B, g, g, s, s)
+    pix = pix.transpose(0, 1, 3, 2, 4)
+    return pix.reshape(B, g * s, g * s)
+
+
+# ----- end-to-end pipelines -----
+
+
+def insight_forward(params: dict, pcfg: LISAPipelineConfig,
+                    images: jax.Array, query_tokens: jax.Array,
+                    bn_params: Optional[dict] = None,
+                    split_k: Optional[int] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Full Insight pipeline; with ``bn_params`` the boundary activation is
+    compressed with the straight-through bottleneck (training/eval path).
+    Returns (mask_logits (B,H,W), answer_logits (B,V))."""
+    a = sam_head(params, pcfg, images, split_k)
+    if bn_params is not None:
+        a = bn.roundtrip_st(bn_params, a)
+    feats = sam_tail(params, pcfg, a, split_k)
+    ctx = clip_encode(params, pcfg, images)
+    answer_logits, seg = llm_reason(params, pcfg, ctx, query_tokens)
+    mask_logits = mask_decode(params, pcfg, feats, seg)
+    return mask_logits, answer_logits
+
+
+def context_forward(params: dict, pcfg: LISAPipelineConfig,
+                    images: jax.Array, query_tokens: jax.Array) -> jax.Array:
+    """Context pipeline: CLIP-only features -> LLM -> text answer logits."""
+    ctx = clip_encode(params, pcfg, images)
+    answer_logits, _ = llm_reason(params, pcfg, ctx, query_tokens)
+    return answer_logits
+
+
+# ----- losses / metrics -----
+
+
+def insight_loss(params: dict, pcfg: LISAPipelineConfig, batch: Dict,
+                 bn_params: Optional[dict] = None,
+                 pos_weight: float = 25.0) -> Tuple[jax.Array, Dict]:
+    mask_logits, answer_logits = insight_forward(
+        params, pcfg, batch["images"], batch["query"], bn_params)
+    m = batch["mask"].astype(jnp.float32)
+    ml = mask_logits.astype(jnp.float32)
+    # positive-class weighting: targets cover ~2% of pixels, so unweighted
+    # BCE collapses to the empty-mask optimum
+    w = 1.0 + (pos_weight - 1.0) * m
+    bce = jnp.mean(w * (jnp.maximum(ml, 0) - ml * m
+                        + jnp.log1p(jnp.exp(-jnp.abs(ml)))))
+    # dice loss stabilises IoU on small targets
+    p = jax.nn.sigmoid(ml)
+    inter = jnp.sum(p * m, axis=(1, 2))
+    dice = 1 - jnp.mean((2 * inter + 1) /
+                        (jnp.sum(p, axis=(1, 2)) + jnp.sum(m, axis=(1, 2)) + 1))
+    ans = _answer_ce(answer_logits, batch["answer"])
+    loss = bce + dice + 0.5 * ans
+    return loss, {"bce": bce, "dice": dice, "answer_ce": ans}
+
+
+def context_loss(params: dict, pcfg: LISAPipelineConfig,
+                 batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits = context_forward(params, pcfg, batch["images"], batch["query"])
+    ce = _answer_ce(logits, batch["answer"])
+    return ce, {"answer_ce": ce}
+
+
+def _answer_ce(logits: jax.Array, answer: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, answer[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def iou_metrics(mask_logits: jax.Array, gt: jax.Array) -> Dict[str, jax.Array]:
+    """gIoU (mean per-image IoU), cIoU (cumulative), and their mean —
+    the paper's 'Average IoU' (Table 3 note)."""
+    pred = (mask_logits > 0).astype(jnp.float32)
+    gt = gt.astype(jnp.float32)
+    inter = jnp.sum(pred * gt, axis=(1, 2))
+    union = jnp.sum(jnp.maximum(pred, gt), axis=(1, 2))
+    giou = jnp.mean(inter / (union + 1e-6))
+    ciou = jnp.sum(inter) / (jnp.sum(union) + 1e-6)
+    return {"giou": giou, "ciou": ciou, "avg_iou": 0.5 * (giou + ciou)}

@@ -1,0 +1,3 @@
+from repro.data import floodseg, lm, requests
+
+__all__ = ["floodseg", "lm", "requests"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  bottleneck      — fused low-rank projection + int8 quantisation at the
+                    split boundary (the paper's per-frame edge hot-spot)
+  flash_attention — blocked online-softmax causal GQA attention (prefill)
+  ssm_scan        — chunked selective-scan recurrence (Mamba prefill)
+  decode_attention— flash-decode: one token vs a long KV cache (the
+                    Insight-serving decode hot loop; HBM traffic = one
+                    cache read, the Pair-2 roofline floor)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True on CPU), ref.py (pure-jnp oracle used by tests).
+"""

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused bottleneck encode/decode kernels."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_ref(x: jax.Array, w_enc: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x (T, d), w_enc (d, r) -> (codes int8 (T, r), scales f32 (T, 1))."""
+    z = jnp.dot(x.astype(jnp.float32), w_enc.astype(jnp.float32))
+    s = jnp.max(jnp.abs(z), axis=-1, keepdims=True) / 127.0 + 1e-8
+    codes = jnp.clip(jnp.round(z / s), -127, 127).astype(jnp.int8)
+    return codes, s
+
+
+def decode_ref(codes: jax.Array, scales: jax.Array, w_dec: jax.Array,
+               out_dtype=jnp.float32) -> jax.Array:
+    """codes (T, r) int8, scales (T, 1) -> (T, d)."""
+    z = codes.astype(jnp.float32) * scales
+    return jnp.dot(z, w_dec.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,85 @@
+"""Flash-decode kernel: one query token against a long KV cache.
+
+The decode serving hot loop (Insight-stream token generation on the
+cloud/pod side). Grid (B*H, kv_blocks) with the cache dimension innermost
+and sequential: k/v blocks stream HBM->VMEM once, the online-softmax
+running statistics (m, l, acc) stay in VMEM scratch, and the (1, hd)
+output tile is written on the last block. HBM traffic is exactly one read
+of the cache — the roofline floor the Pair-2 §Perf hillclimb drove decode
+to.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, num_kv_blocks: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # (1, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bk)
+    s = s + bias_ref[0].astype(jnp.float32)[None, :]
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_call(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+                *, group: int, block_k: int = 512,
+                interpret: bool = True) -> jax.Array:
+    """q (BH, 1, hd); k/v (BK, W, hd); bias (B, W). BH = B*H laid out
+    kv-major so query row p reads kv row p // group and bias row
+    p // (H) — H passed implicitly via bias grid math below."""
+    BH, _, hd = q.shape
+    BK, W, _ = k.shape
+    assert W % block_k == 0, (W, block_k)
+    nk = W // block_k
+    B = bias.shape[0]
+    heads_per_batch = BH // B
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale, num_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda h, ki: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, ki: (h // group, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, ki: (h // group, ki, 0)),
+            pl.BlockSpec((1, block_k),
+                         lambda h, ki: (h // heads_per_batch, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda h, ki: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

@@ -1,0 +1,33 @@
+"""Jit'd wrapper: (B,H,hd) / (B,W,K,hd) layouts, cache-length padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _k
+
+_INTERPRET = True  # CPU container: interpret mode; flip on real TPU.
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     bias: jax.Array, block_k: int = 512) -> jax.Array:
+    """q (B,H,hd); k/v (B,W,K,hd); bias (B,W) additive. -> (B,H,hd)."""
+    B, H, hd = q.shape
+    W, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_k = min(block_k, W)
+    pad = (-W) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    qh = q.reshape(B, K, G, hd).reshape(B * H, 1, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, W + pad, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, W + pad, hd)
+    out = _k.decode_call(qh, kh, vh, bias, group=G, block_k=block_k,
+                         interpret=_INTERPRET)
+    return out.reshape(B, K, G, hd).reshape(B, H, hd)

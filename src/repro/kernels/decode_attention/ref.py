@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-token decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         bias: jax.Array) -> jax.Array:
+    """q (B,H,hd); k/v (B,W,K,hd); bias (B,W) additive slot mask.
+    Returns (B,H,hd). fp32 softmax over the cache axis."""
+    B, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bwkh->bkgw", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(float(hd)) + bias[:, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgw,bwkh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.ssm_scan.ops import chunked_scan
+
+__all__ = ["chunked_scan"]

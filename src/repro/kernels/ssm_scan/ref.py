@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the chunked selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_ref(decay: jax.Array, drive: jax.Array) -> jax.Array:
+    """h_t = decay_t * h_{t-1} + drive_t along axis 1.
+
+    decay/drive: (B, S, C, N) fp32. Returns h (B, S, C, N).
+    """
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (decay.astype(jnp.float32), drive.astype(jnp.float32)),
+        axis=1)
+    return h

@@ -1,0 +1,431 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+combination on the production meshes, and extract the roofline terms.
+
+For each combo this produces:
+  * compiled.memory_analysis()  — per-device bytes (does it fit?)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes accessed
+  * collective bytes parsed from the partitioned HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+  * MODEL_FLOPS = 2·N_active·D (x3 for training) and the HLO/model ratio
+
+Results land in benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+and are consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          make_train_step, prefill_step)
+from repro.models import stack
+from repro.models.config import ModelConfig
+from repro.sharding import specs as sh
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SLIDING_WINDOW = 8192            # long_500k variant for dense archs
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeSpec) -> Optional[ModelConfig]:
+    """Apply shape-dependent config adaptation; None => combo skipped."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return None              # encoder-only (hubert): no decode exists
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        if cfg.arch_type in ("dense", "moe", "vlm"):
+            # beyond-paper sliding-window variant (DESIGN.md §3)
+            return cfg.with_sliding_window(SLIDING_WINDOW)
+        return None
+    if shape.name == "long_500k" and cfg.arch_type == "hybrid":
+        # shared attention block also windows at 500k context
+        return cfg.with_sliding_window(SLIDING_WINDOW)
+    return cfg
+
+
+def cache_width(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    w = shape.seq_len
+    if cfg.sliding_window:
+        w = min(w, cfg.sliding_window)
+    return w
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    act = cfg.adtype
+    if shape.kind in ("train", "prefill"):
+        if cfg.modality == "audio":
+            return {"frames": SDS((B, S, cfg.frontend_dim), act),
+                    "targets": SDS((B, S), tok),
+                    "mask_positions": SDS((B, S), jnp.bool_)}
+        if cfg.modality == "vlm":
+            return {"tokens": SDS((B, S), tok),
+                    "vision_embeds": SDS((B, cfg.num_vision_tokens,
+                                          cfg.frontend_dim), act),
+                    "positions": SDS((3, B, S), tok)}
+        return {"tokens": SDS((B, S), tok)}
+    # decode: one token against a seq_len context
+    return {"tokens": SDS((B, 1), tok), "pos": SDS((), tok)}
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec):
+    W = cache_width(cfg, shape)
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, W))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-bytes extraction
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in partitioned HLO.
+    (Per-device bytes, since post-SPMD HLO shapes are per-device.)"""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z0-9\-]+)",
+                     rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        # match e.g. all-reduce, all-gather-start (count once, not -done)
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_lowerable(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    fsdp: bool = False):
+    """Returns (jitted_fn, example_args) ready for .lower(*args)."""
+    aparams = abstract_params(cfg)
+    pspecs = sh.param_specs(cfg, aparams, mesh, fsdp=fsdp)
+    psh = sh.to_shardings(mesh, pspecs)
+    batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = optim.adamw(3e-4)
+        aopt = jax.eval_shape(opt.init, aparams)
+        ospecs = sh.opt_state_specs(cfg, aopt, pspecs, mesh)
+        osh = sh.to_shardings(mesh, ospecs)
+        bsh = sh.to_shardings(mesh, sh.batch_specs(batch, mesh))
+        fn = jax.jit(make_train_step(cfg, opt),
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1))
+        return fn, (aparams, aopt, batch)
+
+    if shape.kind == "prefill":
+        bsh = sh.to_shardings(mesh, sh.batch_specs(batch, mesh))
+        fn = jax.jit(lambda p, b: prefill_step(p, cfg, b),
+                     in_shardings=(psh, bsh))
+        return fn, (aparams, batch)
+
+    # decode
+    acache = abstract_cache(cfg, shape)
+    cspecs = sh.cache_specs(cfg, acache, mesh)
+    csh = sh.to_shardings(mesh, cspecs)
+    tok_sh = sh.to_shardings(mesh, sh.batch_specs(
+        {"tokens": batch["tokens"]}, mesh))["tokens"]
+    pos = shape.seq_len - 1
+    fn = jax.jit(
+        lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+        in_shardings=(psh, csh, tok_sh, None),
+        out_shardings=(None, csh),
+        donate_argnums=(1,))
+    return fn, (aparams, acache, batch["tokens"], SDS((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# cost extraction via depth-variant extrapolation
+#
+# XLA's cost_analysis counts a while (lax.scan) body ONCE regardless of trip
+# count, so FLOPs/bytes/collectives from the scanned full-depth lowering are
+# wrong. Per-layer costs are exactly linear in group counts, so we lower
+# small fully-unrolled depth variants and solve
+#     m(counts) = fixed + sum_g counts_g * per_layer_g
+# exactly, then evaluate at the real depths. Memory analysis still comes
+# from the full scanned lowering (buffers are reused across iterations, so
+# scan memory IS the truth).
+# ---------------------------------------------------------------------------
+
+
+def _cfg_with_counts(cfg: ModelConfig, counts) -> ModelConfig:
+    if cfg.arch_type == "hybrid":
+        return cfg.replace(num_layers=counts[0] * cfg.hybrid.attn_every,
+                           scan_unroll=True)
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        import dataclasses as dc
+        return cfg.replace(
+            num_layers=counts[0] + counts[1],
+            moe=dc.replace(cfg.moe, first_k_dense=counts[0]),
+            scan_unroll=True)
+    return cfg.replace(num_layers=counts[0], scan_unroll=True)
+
+
+def _real_counts(cfg: ModelConfig):
+    if cfg.arch_type == "hybrid":
+        return (cfg.num_layers // cfg.hybrid.attn_every,)
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return (cfg.moe.first_k_dense, cfg.num_layers - cfg.moe.first_k_dense)
+    return (cfg.num_layers,)
+
+
+def _variant_counts(cfg: ModelConfig):
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return [(1, 2), (2, 4), (1, 4)]
+    return [(1,), (2,)]
+
+
+def _extract_metrics(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll_total": float(coll["total"])}
+    for c in _COLLECTIVES:
+        out[f"coll_{c}"] = float(coll[c])
+    return out
+
+
+def measure_costs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                  fsdp: bool = False) -> Dict[str, float]:
+    """Extrapolated full-depth per-device costs from unrolled variants."""
+    variants = _variant_counts(cfg)
+    rows = []
+    metrics = []
+    for counts in variants:
+        vcfg = _cfg_with_counts(cfg, counts)
+        fn, args = build_lowerable(vcfg, shape, mesh, fsdp=fsdp)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+        rows.append((1.0,) + tuple(float(c) for c in counts))
+        metrics.append(_extract_metrics(compiled))
+    A = np.array(rows)                      # (V, 1+G)
+    real = np.array((1.0,) + tuple(float(c) for c in _real_counts(cfg)))
+    out: Dict[str, float] = {}
+    for key in metrics[0]:
+        y = np.array([m[key] for m in metrics])
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        out[key] = float(max(0.0, real @ coef))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12              # bf16 / chip (v5e)
+HBM_BW = 819e9                   # bytes/s / chip
+ICI_BW = 50e9                    # bytes/s / link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    n_active = stack.count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # one token
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              out_dir: str = "benchmarks/artifacts/dryrun",
+              cfg_override: Optional[ModelConfig] = None,
+              tag: str = "", with_costs: Optional[bool] = None,
+              fsdp: bool = False) -> Dict[str, Any]:
+    # roofline cost extraction is a single-pod deliverable; the multi-pod
+    # pass proves the "pod" axis shards (lower+compile+memory only)
+    if with_costs is None:
+        with_costs = not multi_pod
+    shape = SHAPES[shape_name]
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    cfg = adapt_config(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "tag": tag}
+    if cfg is None:
+        rec["skipped"] = ("encoder-only: no decode step"
+                          if shape.kind == "decode" else "not applicable")
+        _save(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        t0 = time.time()
+        fn, args = build_lowerable(cfg, shape, mesh, fsdp=fsdp)
+        with mesh:
+            lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        # raw (scan-body-counted-once) numbers, for reference only
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["raw_scan_flops"] = float(cost.get("flops", 0.0))
+        rec["raw_scan_collectives"] = collective_bytes(compiled.as_text())
+        if not with_costs:
+            rec["n_chips"] = n_chips
+            _save(rec, out_dir)
+            return rec
+
+        # extrapolated full-depth per-device costs (see header comment)
+        t0 = time.time()
+        costs = measure_costs(cfg, shape, mesh, fsdp=fsdp)
+        rec["cost_extraction_s"] = round(time.time() - t0, 2)
+        rec["hlo_flops"] = costs["flops"]
+        rec["hlo_bytes"] = costs["bytes"]
+        rec["collectives"] = {k[len("coll_"):]: v for k, v in costs.items()
+                              if k.startswith("coll_")}
+        rec["collectives"]["total"] = costs["coll_total"]
+
+        # roofline terms (seconds). Costs are PER-DEVICE (post-SPMD HLO).
+        mf = model_flops(cfg, shape)
+        rec["model_flops"] = mf
+        rec["compute_term_s"] = rec["hlo_flops"] / PEAK_FLOPS
+        rec["memory_term_s"] = rec["hlo_bytes"] / HBM_BW
+        rec["collective_term_s"] = rec["collectives"]["total"] / ICI_BW
+        rec["useful_flops_ratio"] = (mf / n_chips) / max(rec["hlo_flops"], 1)
+        terms = {"compute": rec["compute_term_s"],
+                 "memory": rec["memory_term_s"],
+                 "collective": rec["collective_term_s"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["n_chips"] = n_chips
+    except Exception as e:                                    # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"[:500]
+    _save(rec, out_dir)
+    return rec
+
+
+def _save(rec: Dict[str, Any], out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_combo(arch, shape, mp, out_dir=args.out)
+                if rec.get("skipped") or rec.get("error"):
+                    status = rec.get("skipped") or rec.get("error")
+                elif "hlo_flops" in rec:
+                    status = (
+                        f"ok flops={rec['hlo_flops']:.3g} "
+                        f"bytes={rec['hlo_bytes']:.3g} "
+                        f"coll={rec['collectives']['total']:.3g} "
+                        f"bottleneck={rec['bottleneck']} "
+                        f"[lower {rec['lower_s']}s compile {rec['compile_s']}s]")
+                else:
+                    status = (f"ok (compile-only) "
+                              f"[lower {rec['lower_s']}s "
+                              f"compile {rec['compile_s']}s]")
+                print(f"[dryrun] {arch} x {shape} x "
+                      f"{'2x16x16' if mp else '16x16'}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

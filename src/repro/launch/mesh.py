@@ -1,0 +1,30 @@
+"""Production mesh factory (DESIGN.md §7).
+
+A function — not a module-level constant — so importing this module never
+touches jax device state. The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import; smoke tests and benchmarks see the real single CPU device.
+
+Single pod : (16, 16)      axes ("data", "model")   = 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+In the AVERY mapping, the "pod" axis doubles as the edge/cloud
+disaggregation boundary for split serving (launch/serve.py): pod 0 runs
+the head + bottleneck encoder, pod 1 the decoder + tail, and the
+inter-pod link carries exactly the compressed boundary payload.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Single-host mesh for tests: uses however many devices exist."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

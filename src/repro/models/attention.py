@@ -1,0 +1,311 @@
+"""Attention variants: GQA (optionally biased / sliding-window) and MLA.
+
+Two execution paths per variant:
+  * full-sequence (training / prefill) — optionally emits cache contents;
+  * single-token decode against a ring-buffer KV cache.
+
+Cache layout (per layer, stacked along a leading layer axis by the stack):
+  GQA: {"k": (B, W, K, hd), "v": (B, W, K, hd)}      — k stored post-RoPE
+  MLA: {"ckv": (B, W, r_kv), "krope": (B, W, d_r)}   — the latent cache that
+       makes DeepSeek-style decode memory-light (this *is* MLA's bottleneck
+       affinity noted in DESIGN.md).
+Slot-position bookkeeping ((B?, W) absolute positions) lives at the model
+level and arrives here as a pre-computed additive mask.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (NEG_INF, apply_mrope, apply_rope,
+                                 fan_in_init, linear, zeros_init)
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(rng: jax.Array, cfg: ModelConfig) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    dt = cfg.pdtype
+    p = {
+        "wq": fan_in_init(ks[0], (d, H * hd), dt),
+        "wk": fan_in_init(ks[1], (d, K * hd), dt),
+        "wv": fan_in_init(ks[2], (d, K * hd), dt),
+        "wo": fan_in_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((H * hd,), dt)
+        p["bk"] = zeros_init((K * hd,), dt)
+        p["bv"] = zeros_init((K * hd,), dt)
+    return p
+
+
+def init_mla(rng: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    assert m is not None
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(rng, 5)
+    dt = cfg.pdtype
+    return {
+        "wq_a": fan_in_init(ks[0], (d, m.q_lora_rank), dt),
+        "q_norm": jnp.ones((m.q_lora_rank,), dt),
+        "wq_b": fan_in_init(ks[1], (m.q_lora_rank, H * qk), dt),
+        "wkv_a": fan_in_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wkv_b": fan_in_init(ks[3], (m.kv_lora_rank,
+                                     H * (m.qk_nope_head_dim + m.v_head_dim)), dt),
+        "wo": fan_in_init(ks[4], (H * m.v_head_dim, d), dt),
+    }
+
+
+def init_attention(rng: jax.Array, cfg: ModelConfig) -> dict:
+    return init_mla(rng, cfg) if cfg.attn_type == "mla" else init_gqa(rng, cfg)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def _rope_q_or_k(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.rope_style == "none":
+        return x
+    if cfg.rope_style == "mrope":
+        return apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+          scale: float) -> jax.Array:
+    """q (B,S,H,hd) k/v (B,T,K,hd) grouped attention, fp32 softmax.
+
+    mask: additive, broadcastable to (B, 1, S, T). Matmuls run on the
+    native (bf16) operands with fp32 accumulation (preferred_element_type)
+    — the MXU idiom; no materialised fp32 copies of q/k/v (§Perf).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + mask.reshape(mask.shape[0], 1, 1, *mask.shape[1:])
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _sdpa_chunked(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array, scale: float, chunk: int) -> jax.Array:
+    """Query-chunked attention: lax.scan over q blocks so only a
+    (chunk, S) score tile is live at once — the flash-attention access
+    pattern at the XLA level (§Perf memory lever)."""
+    B, S, H, hd = q.shape
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    Bm = mask.shape[0]
+    mc = mask.reshape(Bm, nc, chunk, mask.shape[-1]).transpose(1, 0, 2, 3)
+
+    def body(_, xs):
+        qb, mb = xs
+        return None, _sdpa(qb, k, v, mb, scale)
+
+    _, out = jax.lax.scan(body, None, (qc, mc), unroll=cfg.scan_unroll)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def gqa_full(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+             mask: jax.Array) -> Tuple[jax.Array, dict]:
+    """Full-sequence GQA. Returns (out, cache_contents)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, K, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, K, hd)
+    pos1d = positions if cfg.rope_style != "mrope" else positions
+    q = _rope_q_or_k(cfg, q, pos1d)
+    k = _rope_q_or_k(cfg, k, pos1d)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    if cfg.attn_scores_stub:
+        # perf-analysis stub: keep q/k/v projections alive, skip the
+        # score/softmax/PV stage (see config docstring)
+        out = q + 1e-6 * (jnp.mean(k) + jnp.mean(v))
+    elif cfg.use_flash and cfg.causal and cfg.sliding_window is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True)
+    elif cfg.attn_chunk and S > cfg.attn_chunk and S % cfg.attn_chunk == 0:
+        out = _sdpa_chunked(cfg, q, k, v, mask, scale, cfg.attn_chunk)
+    else:
+        out = _sdpa(q, k, v, mask, scale)
+    out = linear(out.reshape(B, S, H * hd), p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+               cache: dict, slot: jax.Array, mask: jax.Array) -> Tuple[jax.Array, dict]:
+    """Single-token decode. x (B,1,d); cache k/v (B,W,K,hd); slot scalar;
+    mask (B,W) additive over cache slots (already includes the new token's
+    slot as valid)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, K, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, K, hd)
+    q = _rope_q_or_k(cfg, q, positions)
+    k = _rope_q_or_k(cfg, k, positions)
+    if cfg.shard_cache_hd:
+        # align the fresh k/v (and q) with the head_dim-sharded cache at the
+        # source, so the cache update and attention reads stay local and the
+        # only collective left is the small score partial-sum (§Perf)
+        from repro.models.common import wsc
+        q = wsc(q, "BATCH", None, None, "model")
+        k = wsc(k, "BATCH", None, None, "model")
+        v = wsc(v, "BATCH", None, None, "model")
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    out = _sdpa(q, k_cache, v_cache, mask[:, None, :], scale)
+    out = linear(out.reshape(B, S, H * hd), p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def gqa_empty_cache(cfg: ModelConfig, batch: int, width: int) -> dict:
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = cfg.adtype
+    return {
+        "k": jnp.zeros((batch, width, K, hd), dt),
+        "v": jnp.zeros((batch, width, K, hd), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv_full(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    from repro.models.common import rms_norm
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_n, qk_r, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = linear(rms_norm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(B, S, H, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = linear(x, p["wkv_a"])
+    ckv = rms_norm(kv_a[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:].reshape(B, S, 1, qk_r)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_full(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+             mask: jax.Array) -> Tuple[jax.Array, dict]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_n, qk_r, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_full(p, cfg, x, positions)
+    kv = linear(ckv, p["wkv_b"]).reshape(B, S, H, qk_n + dv)
+    k_nope, v = kv[..., :qk_n], kv[..., qk_n:]
+    scale = 1.0 / jnp.sqrt(float(qk_n + qk_r))
+
+    def attend(qn, qr, mb):
+        scores = (jnp.einsum("bshn,bthn->bhst", qn.astype(jnp.float32),
+                             k_nope.astype(jnp.float32))
+                  + jnp.einsum("bshr,btr->bhst", qr.astype(jnp.float32),
+                               k_rope.astype(jnp.float32))) * scale
+        scores = scores + mb.reshape(mb.shape[0], 1, *mb.shape[1:])
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhst,bthv->bshv", probs,
+                          v.astype(jnp.float32)).astype(x.dtype)
+
+    c = cfg.attn_chunk
+    if c and S > c and S % c == 0:
+        nc = S // c
+        qn_c = q_nope.reshape(B, nc, c, H, qk_n).transpose(1, 0, 2, 3, 4)
+        qr_c = q_rope.reshape(B, nc, c, H, qk_r).transpose(1, 0, 2, 3, 4)
+        Bm = mask.shape[0]
+        m_c = mask.reshape(Bm, nc, c, mask.shape[-1]).transpose(1, 0, 2, 3)
+
+        def body(_, xs):
+            return None, attend(*xs)
+
+        _, out = jax.lax.scan(body, None, (qn_c, qr_c, m_c),
+                              unroll=cfg.scan_unroll)
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv)
+    else:
+        out = attend(q_nope, q_rope, mask)
+    out = linear(out.reshape(B, S, H * dv), p["wo"])
+    return out, {"ckv": ckv, "krope": k_rope}
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+               cache: dict, slot: jax.Array, mask: jax.Array) -> Tuple[jax.Array, dict]:
+    """Absorbed-matmul MLA decode: scores are computed in the latent space so
+    the cache stays (r_kv + d_r) per token — the memory win of MLA."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_n, qk_r, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_full(p, cfg, x, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, slot, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new, slot, axis=1)
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, qk_n + dv)
+    w_uk = wkv_b[..., :qk_n]                       # (r, H, qk_n)
+    w_uv = wkv_b[..., qk_n:]                       # (r, H, dv)
+    # absorb k up-projection into the query
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))   # (B,1,H,r)
+    scale = 1.0 / jnp.sqrt(float(qk_n + qk_r))
+    scores = (jnp.einsum("bshr,bwr->bhsw", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bshr,bwr->bhsw", q_rope.astype(jnp.float32),
+                           krope.astype(jnp.float32))) * scale
+    scores = scores + mask[:, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhsw,bwr->bshr", probs, ckv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = linear(out.reshape(B, S, H * dv), p["wo"])
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def mla_empty_cache(cfg: ModelConfig, batch: int, width: int) -> dict:
+    m = cfg.mla
+    dt = cfg.adtype
+    return {
+        "ckv": jnp.zeros((batch, width, m.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, width, m.qk_rope_head_dim), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def attn_full(p, cfg: ModelConfig, x, positions, mask):
+    if cfg.attn_type == "mla":
+        return mla_full(p, cfg, x, positions, mask)
+    return gqa_full(p, cfg, x, positions, mask)
+
+
+def attn_decode(p, cfg: ModelConfig, x, positions, cache, slot, mask):
+    if cfg.attn_type == "mla":
+        return mla_decode(p, cfg, x, positions, cache, slot, mask)
+    return gqa_decode(p, cfg, x, positions, cache, slot, mask)
+
+
+def empty_cache(cfg: ModelConfig, batch: int, width: int) -> dict:
+    if cfg.attn_type == "mla":
+        return mla_empty_cache(cfg, batch, width)
+    return gqa_empty_cache(cfg, batch, width)

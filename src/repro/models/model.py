@@ -1,0 +1,267 @@
+"""Top-level model API: init / forward / loss / train_step / prefill / decode.
+
+All functions are pure; ``cfg`` is static (closed over before ``jax.jit``).
+Batch formats (see ``repro/launch/dryrun.py::input_specs`` for the
+ShapeDtypeStruct stand-ins):
+
+  text : {"tokens": (B,S) i32}
+  audio: {"frames": (B,S,frontend_dim) f, "targets": (B,S) i32,
+          "mask_positions": (B,S) bool}           (HuBERT masked prediction)
+  vlm  : {"tokens": (B,S) i32, "vision_embeds": (B,n_vis,frontend_dim) f,
+          "positions": (3,B,S) i32}               (M-RoPE position triples)
+
+The audio conv feature extractor and the VLM ViT are *stubs per the
+assignment carve-out*: inputs arrive as precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stack
+from repro.models.common import (cache_mask, causal_mask, fan_in_init,
+                                 linear, normal_init, sinusoid_positions)
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Params:
+    specs = stack.layer_groups(cfg)
+    ks = jax.random.split(rng, len(specs) + 5)
+    p: Params = {
+        "embed": normal_init(ks[0], (cfg.vocab_size, cfg.d_model), 0.02,
+                             cfg.pdtype),
+        "groups": [stack.init_group(ks[1 + i], cfg, s)
+                   for i, s in enumerate(specs)],
+        "final_norm": stack.init_norm(cfg),
+    }
+    nk = len(specs) + 1
+    if not cfg.tie_embeddings:
+        p["head"] = fan_in_init(ks[nk], (cfg.d_model, cfg.vocab_size),
+                                cfg.pdtype)
+    if cfg.arch_type == "hybrid":
+        p["shared_attn"] = stack._init_dense_layer(ks[nk + 1], cfg, cfg.d_ff)
+    if cfg.modality == "audio":
+        p["feat_proj"] = fan_in_init(ks[nk + 2], (cfg.frontend_dim, cfg.d_model),
+                                     cfg.pdtype)
+    if cfg.modality == "vlm":
+        p["vision_proj"] = fan_in_init(ks[nk + 2],
+                                       (cfg.frontend_dim, cfg.d_model),
+                                       cfg.pdtype)
+    if cfg.mtp:
+        k_a, k_b = jax.random.split(ks[nk + 3])
+        p["mtp"] = {
+            "proj": fan_in_init(k_a, (2 * cfg.d_model, cfg.d_model), cfg.pdtype),
+            "block": stack._init_dense_layer(
+                k_b, cfg, cfg.d_ff or (cfg.moe.d_ff_dense if cfg.moe else 0)),
+            "norm": stack.init_norm(cfg),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(p: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embed"], tokens, axis=0).astype(cfg.adtype)
+
+
+def _embed_inputs(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Returns (x (B,S,d), positions) where positions is (B,S) or (3,B,S)."""
+    if cfg.modality == "audio":
+        frames = batch["frames"]
+        B, S, _ = frames.shape
+        x = linear(frames.astype(cfg.adtype), p["feat_proj"])
+        x = x + sinusoid_positions(S, cfg.d_model, cfg.adtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, positions
+    if cfg.modality == "vlm":
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        nv = cfg.num_vision_tokens
+        x_vis = linear(batch["vision_embeds"].astype(cfg.adtype),
+                       p["vision_proj"])
+        x_txt = _embed_tokens(p, cfg, tokens[:, nv:])
+        x = jnp.concatenate([x_vis, x_txt], axis=1)
+        return x, batch["positions"]
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(p, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def _head(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = stack.apply_norm(x, p["final_norm"], cfg)
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return linear(x, w)
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def forward(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            want_cache: bool = False):
+    """Returns (logits, aux_loss, caches, hidden)."""
+    x, positions = _embed_inputs(p, cfg, batch)
+    B, S, _ = x.shape
+    if cfg.causal:
+        mask = causal_mask(S, cfg.sliding_window)[None]
+    else:
+        mask = jnp.zeros((1, S, S), jnp.float32)
+    aux = jnp.float32(0.0)
+    caches = []
+    for spec, gparams in zip(stack.layer_groups(cfg), p["groups"]):
+        x, a, c = stack.group_forward(gparams, cfg, spec, x, positions, mask,
+                                      shared_attn=p.get("shared_attn"),
+                                      want_cache=want_cache)
+        aux = aux + a
+        caches.append(c)
+    logits = _head(p, cfg, x)
+    return logits, aux, (caches if want_cache else None), x
+
+
+# ---------------------------------------------------------------------------
+# losses / train step
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, targets: jax.Array,
+          mask: Optional[jax.Array] = None) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / (jnp.sum(mask) + 1e-6)
+
+
+def loss_fn(p: Params, cfg: ModelConfig,
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux, _, hidden = forward(p, cfg, batch)
+    if cfg.modality == "audio":
+        loss = _xent(logits, batch["targets"], batch["mask_positions"])
+    else:
+        tokens = batch["tokens"]
+        lmask = None
+        if cfg.modality == "vlm":
+            # vision positions carry patch embeddings, not predictable tokens
+            lmask = jnp.broadcast_to(
+                jnp.arange(tokens.shape[1] - 1) >= cfg.num_vision_tokens,
+                tokens[:, 1:].shape)
+        loss = _xent(logits[:, :-1], tokens[:, 1:], lmask)
+    total = loss + aux
+    metrics = {"loss": loss, "aux_loss": aux}
+    if cfg.mtp and cfg.modality == "text":
+        tokens = batch["tokens"]
+        emb_next = _embed_tokens(p, cfg, tokens[:, 1:])
+        h_in = jnp.concatenate(
+            [stack.apply_norm(hidden[:, :-1], p["mtp"]["norm"], cfg), emb_next],
+            axis=-1)
+        h_in = linear(h_in, p["mtp"]["proj"])
+        S1 = h_in.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(S1, dtype=jnp.int32)[None], h_in.shape[:2])
+        mtp_h, _ = stack._dense_block_full(
+            p["mtp"]["block"], cfg, h_in, positions,
+            causal_mask(S1, cfg.sliding_window)[None])
+        mtp_logits = _head(p, cfg, mtp_h)[:, :-1]
+        mtp_loss = _xent(mtp_logits, tokens[:, 2:])
+        total = total + cfg.mtp_weight * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer):
+    """optimizer: repro.optim.Optimizer (init/update pair)."""
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state = optimizer.apply(params, opt_state, grads)
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return params, opt_state, metrics
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# inference: prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, width: int) -> Dict[str, Any]:
+    """Decode cache. ``width`` is the KV-cache length; for sliding-window
+    configs callers should pass min(width, cfg.sliding_window) — slots are a
+    ring buffer indexed pos % width. SSM groups carry O(1) state instead."""
+    groups = [stack.group_empty_cache(cfg, s, batch, width)
+              for s in stack.layer_groups(cfg)]
+    return {
+        "groups": groups,
+        "positions": jnp.full((batch, width), -1, jnp.int32),
+    }
+
+
+def prefill_step(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Full forward that also returns cache contents (width == S) and the
+    last-position logits — the inference-prefill workload shape."""
+    logits, aux, caches, _ = forward(p, cfg, batch, want_cache=True)
+    if cfg.modality == "audio":
+        return logits, None  # encoder-only: no decode, cache is meaningless
+    some = batch["tokens"]
+    B, S = some.shape[0], logits.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache = {"groups": caches, "positions": positions}
+    return logits[:, -1:], cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array):
+    """One decode step. tokens (B,1) i32; pos scalar i32 (absolute position
+    of the new token). Returns (logits (B,1,V), new_cache)."""
+    assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+    B = tokens.shape[0]
+    x = _embed_tokens(p, cfg, tokens)
+
+    has_attn = any(s.kind in ("dense", "moe", "hybrid")
+                   for s in stack.layer_groups(cfg))
+    if has_attn:
+        W = cache["positions"].shape[1]
+        slot = jnp.asarray(pos, jnp.int32) % W
+        pos_arr = jax.lax.dynamic_update_slice(
+            cache["positions"],
+            jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1)),
+            (0, slot))
+        mask = cache_mask(pos_arr, pos, cfg.sliding_window)
+    else:
+        W, slot, pos_arr = 1, jnp.int32(0), cache["positions"]
+        mask = jnp.zeros((B, 1), jnp.float32)
+
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (3, B, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+
+    new_groups = []
+    for spec, gparams, gcache in zip(stack.layer_groups(cfg), p["groups"],
+                                     cache["groups"]):
+        x, c2 = stack.group_decode(gparams, cfg, spec, x, positions, gcache,
+                                   slot, mask, shared_attn=p.get("shared_attn"))
+        new_groups.append(c2)
+    logits = _head(p, cfg, x)
+    return logits, {"groups": new_groups, "positions": pos_arr}

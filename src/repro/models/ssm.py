@@ -1,0 +1,252 @@
+"""Mamba-1 (selective scan) and Mamba-2 (SSD) blocks.
+
+Both expose:
+  * ``*_full``  — full-sequence path via ``jax.lax.associative_scan``
+                  (or the Pallas chunked-scan kernel when enabled);
+  * ``*_step``  — O(1) single-token recurrence for decode, carrying
+                  {"conv": (B, K-1, d_conv_ch), "h": state}.
+
+This is the attention-free substrate for falcon-mamba-7b and the hybrid
+zamba2-7b. Decode state is constant in sequence length, which is why these
+archs run the long_500k shape natively (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fan_in_init, linear, normal_init, silu
+from repro.models.config import ModelConfig
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return s.dt_rank if s.dt_rank else max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(rng: jax.Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d, di, N, K = cfg.d_model, d_inner(cfg), s.state_size, s.conv_kernel
+    R = _dt_rank(cfg)
+    ks = jax.random.split(rng, 6)
+    dt = cfg.pdtype
+    # S4D-real initialisation of A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[5], (di,), jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": fan_in_init(ks[0], (d, 2 * di), dt),
+        "conv_w": normal_init(ks[1], (K, di), 0.1, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": fan_in_init(ks[2], (di, R + 2 * N), dt),
+        "dt_proj": fan_in_init(ks[3], (R, di), dt),
+        "dt_bias": dt_bias.astype(dt),
+        "A_log": jnp.log(A).astype(dt),
+        "D": jnp.ones((di,), dt),
+        "out_proj": fan_in_init(ks[4], (di, d), dt),
+    }
+
+
+def _causal_conv_full(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _scan_combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _selective_scan(decay: jax.Array, drive: jax.Array) -> jax.Array:
+    """h_t = decay_t * h_{t-1} + drive_t, scan over axis 1 (seq)."""
+    _, h = jax.lax.associative_scan(_scan_combine, (decay, drive), axis=1)
+    return h
+
+
+def _mamba1_core(p: dict, cfg: ModelConfig, u: jax.Array):
+    """Shared Δ/B/C computation. u: (B,S,di) post-conv activations."""
+    s = cfg.ssm
+    N, R = s.state_size, _dt_rank(cfg)
+    dbc = linear(u, p["x_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(linear(dbc[..., :R], p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,S,di)
+    Bm = dbc[..., R:R + N]                                        # (B,S,N)
+    Cm = dbc[..., R + N:]                                         # (B,S,N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (di,N)
+    decay = jnp.exp(dt[..., None] * A[None, None])                # (B,S,di,N)
+    drive = (dt * u.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    return decay, drive, Cm
+
+
+def mamba1_full(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    di = d_inner(cfg)
+    xz = linear(x, p["in_proj"])
+    u, z = xz[..., :di], xz[..., di:]
+    u = silu(_causal_conv_full(u, p["conv_w"], p["conv_b"]))
+    if cfg.use_ssm_kernel:
+        from repro.kernels.ssm_scan import ops as scan_ops
+        decay, drive, Cm = _mamba1_core(p, cfg, u)
+        h = scan_ops.chunked_scan(decay, drive)
+        y = jnp.einsum("bscn,bsn->bsc", h, Cm)
+    else:
+        decay, drive, Cm = _mamba1_core(p, cfg, u)
+        h = _selective_scan(decay, drive)                         # (B,S,di,N)
+        y = jnp.einsum("bscn,bsn->bsc", h, Cm)
+    y = y + p["D"].astype(jnp.float32) * u.astype(jnp.float32)
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    return linear(y, p["out_proj"])
+
+
+def mamba1_empty_state(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    di = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di), cfg.adtype),
+        "h": jnp.zeros((batch, di, s.state_size), jnp.float32),
+    }
+
+
+def mamba1_step(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: dict) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d). Returns (out (B,1,d), new_state)."""
+    B = x.shape[0]
+    di = d_inner(cfg)
+    xz = linear(x[:, 0], p["in_proj"])
+    u, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([state["conv"], u[:, None, :]], axis=1)  # (B,K,di)
+    u = silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(window.dtype))
+             + p["conv_b"].astype(window.dtype))
+    decay, drive, Cm = _mamba1_core(p, cfg, u[:, None, :])
+    h = decay[:, 0] * state["h"] + drive[:, 0]                    # (B,di,N)
+    y = jnp.einsum("bcn,bn->bc", h, Cm[:, 0])
+    y = y + p["D"].astype(jnp.float32) * u.astype(jnp.float32)
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = linear(y, p["out_proj"])[:, None, :]
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, scalar decay per head)
+# ---------------------------------------------------------------------------
+
+
+def _m2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = d_inner(cfg)
+    nh = di // s.head_dim
+    return di, nh, s.head_dim, s.state_size
+
+
+def init_mamba2(rng: jax.Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    di, nh, P, N = _m2_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    dt = cfg.pdtype
+    dt_init = jnp.exp(jax.random.uniform(ks[3], (nh,), jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    # in_proj emits [z(di), x(di), B(N), C(N), dt(nh)]
+    return {
+        "in_proj": fan_in_init(ks[0], (d, 2 * di + 2 * N + nh), dt),
+        "conv_w": normal_init(ks[1], (s.conv_kernel, di + 2 * N), 0.1, dt),
+        "conv_b": jnp.zeros((di + 2 * N,), dt),
+        "A_log": jnp.zeros((nh,), dt),        # A = -exp(0) = -1 init
+        "dt_bias": dt_bias.astype(dt),
+        "D": jnp.ones((nh,), dt),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": fan_in_init(ks[2], (di, d), dt),
+    }
+
+
+def _m2_split(p, cfg, raw):
+    di, nh, P, N = _m2_dims(cfg)
+    z = raw[..., :di]
+    xBC = raw[..., di:2 * di + 2 * N]
+    dt = raw[..., 2 * di + 2 * N:]
+    return z, xBC, dt
+
+
+def _m2_gated_out(p, cfg, y, z, x_dtype):
+    from repro.models.common import rms_norm
+    y = (y * silu(z.astype(jnp.float32)))
+    y = rms_norm(y.astype(x_dtype), p["norm_w"], cfg.norm_eps)
+    return linear(y, p["out_proj"])
+
+
+def mamba2_full(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    di, nh, P, N = _m2_dims(cfg)
+    raw = linear(x, p["in_proj"])
+    z, xBC, dt = _m2_split(p, cfg, raw)
+    xBC = silu(_causal_conv_full(xBC, p["conv_w"], p["conv_b"]))
+    u = xBC[..., :di].reshape(B, S, nh, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (nh,)
+    decay = jnp.exp(dt * A[None, None, :])                        # (B,S,nh)
+    drive = (dt[..., None] * u.astype(jnp.float32))[..., None] \
+        * Bm[:, :, None, None, :].astype(jnp.float32)             # (B,S,nh,P,N)
+    if cfg.use_ssm_kernel:
+        from repro.kernels.ssm_scan import ops as scan_ops
+        h = scan_ops.chunked_scan(
+            jnp.broadcast_to(decay[..., None, None], drive.shape).reshape(
+                B, S, nh * P, N),
+            drive.reshape(B, S, nh * P, N)).reshape(B, S, nh, P, N)
+    else:
+        h = _selective_scan(jnp.broadcast_to(decay[..., None, None], drive.shape),
+                            drive)                                # (B,S,nh,P,N)
+    y = jnp.einsum("bshpn,bsn->bshp", h, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * u.astype(jnp.float32)
+    return _m2_gated_out(p, cfg, y.reshape(B, S, di), z, x.dtype)
+
+
+def mamba2_empty_state(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    di, nh, P, N = _m2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di + 2 * N), cfg.adtype),
+        "h": jnp.zeros((batch, nh, P, N), jnp.float32),
+    }
+
+
+def mamba2_step(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: dict) -> Tuple[jax.Array, dict]:
+    B = x.shape[0]
+    di, nh, P, N = _m2_dims(cfg)
+    raw = linear(x[:, 0], p["in_proj"])
+    z, xBC, dt = _m2_split(p, cfg, raw)
+    window = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)
+    xBC = silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(window.dtype))
+               + p["conv_b"].astype(window.dtype))
+    u = xBC[..., :di].reshape(B, nh, P)
+    Bm = xBC[..., di:di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                              # (B,nh)
+    h = decay[..., None, None] * state["h"] \
+        + (dt[..., None] * u.astype(jnp.float32))[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * u.astype(jnp.float32)
+    out = _m2_gated_out(p, cfg, y.reshape(B, di), z, x.dtype)[:, None, :]
+    return out, {"conv": window[:, 1:], "h": h}

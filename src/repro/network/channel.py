@@ -1,0 +1,58 @@
+"""Simulated uplink channel: serialises packet transmissions against a
+bandwidth trace. Transmission of a packet occupies the link for
+bytes*8 / bw(t) seconds (integrated across trace samples); the channel is
+FIFO, single-flow — matching the paper's single-UAV uplink model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.packets import Packet
+from repro.network.traces import BandwidthTrace
+
+
+@dataclass
+class TransmitRecord:
+    packet: Packet
+    start_s: float
+    end_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.end_s - self.packet.created_at
+
+
+@dataclass
+class Channel:
+    trace: BandwidthTrace
+    busy_until: float = 0.0
+    log: List[TransmitRecord] = field(default_factory=list)
+
+    def measure_bandwidth(self, t: float) -> float:
+        """The controller's Sense stage reads the current estimate (the
+        paper assumes an onboard bandwidth monitor)."""
+        return self.trace.at(t)
+
+    def transmit(self, packet: Packet, now: float) -> TransmitRecord:
+        """Send a packet; returns the delivery record. Integrates the
+        per-second trace so long transmissions see bandwidth changes."""
+        t = max(now, self.busy_until)
+        start = t
+        remaining_bits = packet.payload_bytes * 8.0
+        while remaining_bits > 0:
+            bw = self.trace.at(t) * 1e6              # bits/s
+            # bits transferable until the next whole-second boundary
+            boundary = float(int(t) + 1)
+            dt = boundary - t
+            cap = bw * dt
+            if cap >= remaining_bits:
+                t += remaining_bits / bw
+                remaining_bits = 0.0
+            else:
+                remaining_bits -= cap
+                t = boundary
+        rec = TransmitRecord(packet=packet, start_s=start, end_s=t)
+        self.busy_until = t
+        self.log.append(rec)
+        return rec

@@ -1,0 +1,5 @@
+from repro.optim.adamw import Optimizer, adamw, sgd
+from repro.optim.schedules import constant, cosine_with_warmup, linear_warmup
+
+__all__ = ["Optimizer", "adamw", "sgd",
+           "cosine_with_warmup", "linear_warmup", "constant"]

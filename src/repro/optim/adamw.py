@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+optax is not available offline, so this is a small, self-contained pytree
+optimizer. Moments are kept in float32 regardless of parameter dtype
+(mixed-precision training: bf16 params / fp32 optimizer state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    apply: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)) + 1e-12)
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01, clip_norm: float = 1.0) -> Optimizer:
+    if not callable(schedule):
+        lr_value = float(schedule)
+        schedule = lambda step: jnp.float32(lr_value)  # noqa: E731
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def apply(params, state, grads):
+        step = state["step"] + 1
+        lr = schedule(step)
+        grads = _clip_by_global_norm(grads, clip_norm)
+        m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * g * g,
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mo, vo):
+            mhat = mo / bc1
+            vhat = vo / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init=init, apply=apply)
+
+
+def sgd(schedule, momentum: float = 0.9, clip_norm: float = 1.0) -> Optimizer:
+    if not callable(schedule):
+        lr_value = float(schedule)
+        schedule = lambda step: jnp.float32(lr_value)  # noqa: E731
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def apply(params, state, grads):
+        step = state["step"] + 1
+        lr = schedule(step)
+        grads = _clip_by_global_norm(grads, clip_norm)
+        m = jax.tree.map(lambda mo, g: momentum * mo + g, state["m"], grads)
+        params = jax.tree.map(
+            lambda p, mo: (p.astype(jnp.float32) - lr * mo).astype(p.dtype),
+            params, m)
+        return params, {"step": step, "m": m}
+
+    return Optimizer(init=init, apply=apply)

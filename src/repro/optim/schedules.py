@@ -1,0 +1,28 @@
+"""Learning-rate schedules as pure functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.float32(lr)
+    return sched
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def sched(step):
+        frac = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return jnp.float32(lr) * frac
+    return sched
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.1):
+    def sched(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * warm * cos
+    return sched

@@ -1,0 +1,6 @@
+from repro.runtime.mission import (FrameResult, MissionLog, MissionSpec,
+                                   edge_insight_flops, full_edge_flops,
+                                   run_mission)
+
+__all__ = ["MissionSpec", "MissionLog", "FrameResult", "run_mission",
+           "edge_insight_flops", "full_edge_flops"]

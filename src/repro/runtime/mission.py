@@ -1,0 +1,209 @@
+"""Closed-loop mission simulator — the paper's dynamic evaluation (§5.3).
+
+Simulates a UAV streaming the Insight pathway over a fluctuating uplink
+for ``duration_s`` (paper: 20 minutes, 8–20 Mbps). Each frame:
+
+  1. Sense: read current bandwidth from the channel;
+  2. the controller (Algorithm 1) selects the tier — adaptive AVERY mode —
+     or a fixed tier (the static High-Accuracy / Balanced /
+     High-Throughput baselines of §5.3.1);
+  3. edge compute (analytic Jetson model at the DEPLOYMENT geometry) +
+     packet transmission (serialised on the simulated channel);
+  4. cloud inference; per-packet fidelity is measured by real lisa-mini
+     inference when an executor is provided, else drawn from the LUT
+     (fast mode for property tests).
+
+Frame capture pipelines with transmission (frame k+1 is computed while
+packet k is in flight), so steady-state throughput is min(compute rate,
+link rate) — matching the paper's PPS accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.lisa7b import LISAPipelineConfig
+from repro.core import bottleneck as bn
+from repro.core.controller import (MissionGoal, NoFeasibleInsightTier,
+                                   PowerConfig, select_configuration)
+from repro.core.intent import DEFAULT_REQUIREMENTS, Intent
+from repro.core.lut import SystemLUT, Tier
+from repro.data import floodseg
+from repro.network.channel import Channel
+from repro.network.energy import EdgeDevice, bottleneck_flops, encoder_flops, \
+    patch_embed_flops
+from repro.network.traces import BandwidthTrace
+
+
+@dataclass(frozen=True)
+class MissionSpec:
+    duration_s: float = 1200.0
+    goal: MissionGoal = MissionGoal.PRIORITIZE_ACCURACY
+    mode: str = "avery"               # "avery" | "static"
+    static_tier: Optional[str] = None  # tier name for mode="static"
+    finetuned: bool = False
+    min_pps: float = 0.5              # F_I for Insight intents
+    seed: int = 0
+    # beyond-paper (fleet finding, EXPERIMENTS §Beyond-paper): when no tier
+    # satisfies F_I, transmit the lightest tier best-effort instead of
+    # idling — Algorithm 1 reports NoFeasible; this is the graceful
+    # degradation policy layered on top
+    fallback: bool = False
+
+
+@dataclass
+class FrameResult:
+    t_capture: float
+    t_delivered: float
+    tier: str
+    payload_mb: float
+    iou: Optional[float]
+    edge_energy_j: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_delivered - self.t_capture
+
+
+@dataclass
+class MissionLog:
+    spec: MissionSpec
+    frames: List[FrameResult] = field(default_factory=list)
+    infeasible_s: float = 0.0
+
+    @property
+    def mean_pps(self) -> float:
+        if not self.frames:
+            return 0.0
+        return len(self.frames) / self.spec.duration_s
+
+    @property
+    def mean_iou(self) -> float:
+        vals = [f.iou for f in self.frames if f.iou is not None]
+        return float(np.mean(vals)) if vals else 0.0
+
+    @property
+    def total_edge_energy_j(self) -> float:
+        return sum(f.edge_energy_j for f in self.frames)
+
+    def pps_timeline(self, window_s: float = 60.0) -> np.ndarray:
+        n = int(np.ceil(self.spec.duration_s / window_s))
+        out = np.zeros(n)
+        for f in self.frames:
+            out[min(n - 1, int(f.t_delivered / window_s))] += 1
+        return out / window_s
+
+    def tier_timeline(self, window_s: float = 60.0) -> List[str]:
+        n = int(np.ceil(self.spec.duration_s / window_s))
+        buckets: List[List[str]] = [[] for _ in range(n)]
+        for f in self.frames:
+            buckets[min(n - 1, int(f.t_capture / window_s))].append(f.tier)
+        return [max(set(b), key=b.count) if b else "-" for b in buckets]
+
+
+def edge_insight_flops(deploy: LISAPipelineConfig, ratio: float) -> float:
+    """Edge-side FLOPs per Insight frame at the deployment geometry:
+    patch embed + SAM blocks [0, k) + bottleneck encode + CLIP encoder."""
+    d = deploy.sam.d_model
+    orig_bytes = 2 if deploy.sam.param_dtype == "bfloat16" else 4
+    rank = bn.rank_for_ratio(d, ratio, orig_bytes)
+    return (patch_embed_flops(d, deploy.patch_size, deploy.sam_tokens)
+            + encoder_flops(deploy.sam, deploy.sam_tokens,
+                            deploy.split_layer)
+            + bottleneck_flops(d, rank, deploy.sam_tokens)
+            + patch_embed_flops(deploy.clip.d_model,
+                                deploy.context_patch_size, deploy.clip_tokens)
+            + encoder_flops(deploy.clip, deploy.clip_tokens))
+
+
+def full_edge_flops(deploy: LISAPipelineConfig) -> float:
+    """Full onboard execution of the Insight segmentation backbone."""
+    d = deploy.sam.d_model
+    return (patch_embed_flops(d, deploy.patch_size, deploy.sam_tokens)
+            + encoder_flops(deploy.sam, deploy.sam_tokens))
+
+
+class FidelityOracle:
+    """Per-frame fidelity: real lisa-mini inference (executor mode) or the
+    LUT expectation plus per-scene variation (fast mode)."""
+
+    def __init__(self, lut: SystemLUT, spec: MissionSpec,
+                 executor=None, pcfg: Optional[LISAPipelineConfig] = None):
+        self.lut = lut
+        self.spec = spec
+        self.executor = executor
+        self.pcfg = pcfg
+        self.rng = np.random.RandomState(spec.seed + 77)
+
+    def measure(self, tier: Tier) -> float:
+        if self.executor is not None:
+            batch = floodseg.make_batch(self.rng, 1, "segment", augment=False)
+            import jax.numpy as jnp
+            pkt = self.executor.edge_insight(
+                jnp.asarray(batch["images"]), tier, 0, 0.0)
+            mask_logits, _ = self.executor.cloud_insight(
+                pkt, jnp.asarray(batch["query"]))
+            pred = (mask_logits[0] > 0).astype(np.float64)
+            gt = batch["mask"][0].astype(np.float64)
+            inter = (pred * gt).sum()
+            union = np.maximum(pred, gt).sum()
+            return float(inter / (union + 1e-6))
+        base = tier.acc_finetuned if self.spec.finetuned else tier.acc_base
+        return float(np.clip(base + self.rng.randn() * 0.02, 0.0, 1.0))
+
+
+def run_mission(lut: SystemLUT, trace: BandwidthTrace, spec: MissionSpec,
+                executor=None, pcfg: Optional[LISAPipelineConfig] = None,
+                deploy: Optional[LISAPipelineConfig] = None) -> MissionLog:
+    if deploy is None:
+        from repro.configs.lisa7b import CONFIG as deploy
+    from repro.core import packets as pk
+
+    channel = Channel(trace)
+    device = EdgeDevice()
+    oracle = FidelityOracle(lut, spec, executor=executor, pcfg=pcfg)
+    log = MissionLog(spec=spec)
+    reqs = DEFAULT_REQUIREMENTS[Intent.INSIGHT]
+    if spec.min_pps != reqs.min_update_pps:
+        import dataclasses
+        reqs = dataclasses.replace(reqs, min_update_pps=spec.min_pps)
+
+    t = 0.0
+    seq = 0
+    while t < spec.duration_s:
+        bw = channel.measure_bandwidth(t)
+        if spec.mode == "avery":
+            try:
+                sel = select_configuration(bw, PowerConfig(), spec.goal,
+                                           Intent.INSIGHT, reqs, lut,
+                                           finetuned=spec.finetuned)
+                tier = sel.tier
+            except NoFeasibleInsightTier:
+                log.infeasible_s += 1.0
+                if spec.fallback:
+                    tier = min(lut.tiers, key=lambda x: x.payload_mb)
+                else:
+                    t += 1.0
+                    continue
+        else:
+            tier = lut.by_name(spec.static_tier)
+
+        flops = edge_insight_flops(deploy, tier.ratio)
+        compute_s = device.latency_s(flops)
+        energy = device.compute_energy_j(flops) \
+            + device.tx_energy_j(tier.payload_mb * 1e6)
+        packet = pk.Packet(kind="insight", tier_name=tier.name, seq_id=seq,
+                           created_at=t, payload_bytes=int(tier.payload_mb * 1e6))
+        rec = channel.transmit(packet, t + compute_s)
+        iou = oracle.measure(tier)
+        log.frames.append(FrameResult(
+            t_capture=t, t_delivered=rec.end_s, tier=tier.name,
+            payload_mb=tier.payload_mb, iou=iou, edge_energy_j=energy))
+        # pipelined capture: next frame overlaps with this transmission
+        t = max(t + compute_s, rec.end_s - compute_s, t + 1e-3)
+        seq += 1
+        if seq > 100_000:
+            break
+    return log

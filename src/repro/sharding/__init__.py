@@ -1,0 +1,4 @@
+from repro.sharding.specs import (batch_specs, cache_specs, param_specs,
+                                  to_shardings)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "to_shardings"]

@@ -1,0 +1,207 @@
+"""PartitionSpec rules for every parameter / batch / cache pytree.
+
+Baseline sharding scheme (DESIGN.md §7):
+  * activations/batch  -> batch dims over ("pod","data"), model dim intact
+  * attention          -> heads (fused into the projection output axis)
+                          over "model"; output projections over input axis
+  * MLPs               -> d_ff over "model" (megatron style)
+  * MoE experts        -> expert axis over "model" when divisible
+                          (deepseek 256 % 16 == 0), else expert-internal
+                          d_ff over "model" (granite 40e)
+  * Mamba              -> d_inner over "model"
+  * embeddings         -> vocab over "model"; norms/routers replicated
+  * KV caches          -> batch over ("pod","data"), kv-heads over "model"
+                          when divisible
+
+Rules are applied by key-path over abstract pytrees, so they cover every
+architecture (incl. nested hybrid caches) without per-arch spec tables.
+Axes that do not divide evenly fall back to replication (``_maybe``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# parameters whose LAST axis shards over "model" (column parallel)
+_COL = {"wq", "wk", "wv", "bq", "bk", "bv", "wq_b", "wkv_b", "w_gate",
+        "w_up", "in_proj", "dt_proj", "conv_w", "conv_b", "dt_bias", "D",
+        "feat_proj", "vision_proj", "patch_w"}
+# parameters whose SECOND-TO-LAST axis shards over "model" (row parallel)
+_ROW = {"wo", "w_down", "out_proj", "x_proj", "A_log"}
+# always replicated
+_REP = {"w", "b", "norm_w", "q_norm", "kv_norm", "router", "patch_b", "pos",
+        "scale", "step", "clip_proj", "seg_proj", "w1", "b1", "w2"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _maybe(dim: int, axis: str, mesh: Mesh) -> Optional[str]:
+    n = _axis_size(mesh, axis)
+    return axis if n > 1 and dim % n == 0 else None
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _maybe_batch(dim: int, mesh: Mesh):
+    axes = _batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= _axis_size(mesh, a)
+    return axes if axes and dim % total == 0 else None
+
+
+def _path_names(path) -> list:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+    return names
+
+
+def _param_rule(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+
+    if name == "embed":
+        return P(_maybe(shape[0], "model", mesh), None)
+    if name in ("head", "answer_head"):
+        return P(None, _maybe(shape[-1], "model", mesh))
+    if name in _REP or nd <= 1:
+        return P(*([None] * nd))
+
+    # MoE expert tensors: (L, E, d, f) / (L, E, f, d)
+    if name in ("w_gate", "w_up", "w_down") and nd == 4:
+        E = shape[1]
+        if _maybe(E, "model", mesh):
+            return P(None, "model", None, None)
+        # fall back to expert-internal sharding
+        if name == "w_down":
+            return P(None, None, _maybe(shape[2], "model", mesh), None)
+        return P(None, None, None, _maybe(shape[3], "model", mesh))
+
+    if name in _COL:
+        spec = [None] * nd
+        spec[-1] = _maybe(shape[-1], "model", mesh)
+        return P(*spec)
+    if name in _ROW and nd >= 2:
+        spec = [None] * nd
+        spec[-2] = _maybe(shape[-2], "model", mesh)
+        return P(*spec)
+    # default: replicate
+    return P(*([None] * nd))
+
+
+def _add_fsdp(spec: P, leaf, mesh: Mesh) -> P:
+    """ZeRO/FSDP extension (§Perf lever): additionally shard the largest
+    still-unsharded axis over "data", so parameters + optimizer state are
+    fully sharded; XLA inserts per-layer all-gathers (reduce-scatter on
+    the backward) inside the scan body — standard FSDP semantics."""
+    n = _axis_size(mesh, "data")
+    if n <= 1 or leaf.ndim == 0:
+        return spec
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    best, best_dim = None, 0
+    for i, (dim, ax) in enumerate(zip(leaf.shape, entries)):
+        if ax is None and dim % n == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best is None or best_dim < n:
+        return spec
+    entries[best] = "data"
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, abstract_params: Any, mesh: Mesh,
+                fsdp: bool = False) -> Any:
+    def rule(p, l):
+        spec = _param_rule(p, l, cfg, mesh)
+        return _add_fsdp(spec, l, mesh) if fsdp else spec
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def _cache_rule(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    if name == "positions":                      # (B, W)
+        return P(_maybe_batch(shape[0], mesh), None)
+    # stacked per-layer caches: leading layer axis, then batch
+    if name in ("k", "v"):                       # (L, B, W, K, hd)
+        kv_ax = _maybe(shape[3], "model", mesh)
+        hd_ax = None
+        if cfg.shard_cache_hd and kv_ax is None:
+            hd_ax = _maybe(shape[4], "model", mesh)
+        return P(None, _maybe_batch(shape[1], mesh), None, kv_ax, hd_ax)
+    if name in ("ckv", "krope"):                 # (L, B, W, r)
+        return P(None, _maybe_batch(shape[1], mesh), None, None)
+    if name == "h":
+        if nd == 4:                              # mamba1 (L, B, di, N)
+            return P(None, _maybe_batch(shape[1], mesh),
+                     _maybe(shape[2], "model", mesh), None)
+        # mamba2 (L, B, nh, P, N) or hybrid (G, ae, B, nh, P, N)
+        b_axis = 1 if nd == 5 else 2
+        spec = [None] * nd
+        spec[b_axis] = _maybe_batch(shape[b_axis], mesh)
+        spec[b_axis + 1] = _maybe(shape[b_axis + 1], "model", mesh)
+        return P(*spec)
+    if name == "conv":                           # (L, B, K-1, C) (+hybrid G)
+        b_axis = 1 if nd == 4 else 2
+        spec = [None] * nd
+        spec[b_axis] = _maybe_batch(shape[b_axis], mesh)
+        spec[-1] = _maybe(shape[-1], "model", mesh)
+        return P(*spec)
+    return P(*([None] * nd))
+
+
+def cache_specs(cfg: ModelConfig, abstract_cache: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _cache_rule(p, l, cfg, mesh), abstract_cache)
+
+
+def _batch_rule(path, leaf, mesh: Mesh) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    if name == "positions" and nd == 3:          # M-RoPE (3, B, S)
+        return P(None, _maybe_batch(shape[1], mesh), None)
+    if nd == 0:
+        return P()
+    spec = [None] * nd
+    spec[0] = _maybe_batch(shape[0], mesh)
+    return P(*spec)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _batch_rule(p, l, mesh), batch)
+
+
+def opt_state_specs(cfg: ModelConfig, abstract_opt: Any, pspecs: Any,
+                    mesh: Mesh) -> Any:
+    """Optimizer state mirrors the parameter sharding (m, v trees)."""
+    return {
+        "step": P(),
+        "m": pspecs,
+        "v": pspecs,
+    } if set(abstract_opt) == {"step", "m", "v"} else {
+        "step": P(), "m": pspecs,
+    }
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))

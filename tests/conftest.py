@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benchmarks must see the real single CPU device; only the dry-run
+# entrypoint (repro.launch.dryrun) requests 512 placeholder devices.

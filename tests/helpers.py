@@ -1,0 +1,37 @@
+"""Shared test utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 1):
+    rng = jax.random.PRNGKey(seed)
+    if cfg.modality == "audio":
+        return {
+            "frames": jax.random.normal(rng, (batch, seq, cfg.frontend_dim)),
+            "targets": jax.random.randint(rng, (batch, seq), 0,
+                                          cfg.vocab_size),
+            "mask_positions": jax.random.bernoulli(rng, 0.3, (batch, seq)),
+        }
+    if cfg.modality == "vlm":
+        nv = cfg.num_vision_tokens
+        side = max(1, int(round(nv ** 0.5)))
+        pos = np.zeros((3, batch, seq), np.int32)
+        pos[:, :, :] = np.arange(seq)[None, None, :]
+        return {
+            "tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size),
+            "vision_embeds": jax.random.normal(
+                rng, (batch, nv, cfg.frontend_dim)),
+            "positions": jnp.asarray(pos),
+        }
+    return {"tokens": jax.random.randint(rng, (batch, seq), 0,
+                                         cfg.vocab_size)}
+
+
+def finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(tree)
+               if jnp.issubdtype(l.dtype, jnp.floating))

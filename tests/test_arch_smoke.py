@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (assignment requirement f): a REDUCED
+variant of each assigned family runs one forward/train step on CPU with
+correct output shapes and no NaNs; decoders also run one decode step."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          make_train_step)
+
+from helpers import make_batch
+
+B, S = 2, 16
+
+
+@pytest.fixture(scope="module")
+def trained_state():
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S)
+    logits, aux, _, hidden = jax.jit(
+        lambda p, b: forward(p, cfg, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"NaN logits for {arch}"
+
+    opt = optim.adamw(1e-3)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    params2, state2, metrics = step(params, state, batch)
+    assert bool(jnp.isfinite(metrics["total_loss"])), metrics
+    # params actually changed
+    delta = sum(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    if not cfg.supports_decode:
+        pytest.skip("encoder-only arch has no decode step (by design)")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, B, S)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
+    )(params, cache, tokens, jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["nemotron-4-340b", "qwen1.5-32b"])
+def test_sliding_window_variant(arch):
+    """long_500k path for dense archs uses the sliding-window variant."""
+    cfg = get_reduced(arch).with_sliding_window(8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S)
+    logits, *_ = forward(params, cfg, batch)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # ring-buffer decode at a position far beyond the window
+    cache = init_cache(cfg, B, 8)
+    logits, _ = decode_step(params, cfg, cache, jnp.zeros((B, 1), jnp.int32),
+                            jnp.int32(1000))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_full_configs_match_assignment():
+    expect = {
+        "falcon-mamba-7b": (64, 4096, 65024),
+        "nemotron-4-340b": (96, 18432, 256000),
+        "qwen1.5-32b": (64, 5120, 152064),
+        "phi4-mini-3.8b": (32, 3072, 200064),
+        "zamba2-7b": (81, 3584, 32000),
+        "hubert-xlarge": (48, 1280, 504),
+        "granite-moe-3b-a800m": (32, 1536, 49155),
+        "deepseek-v3-671b": (61, 7168, 129280),
+        "minicpm3-4b": (62, 2560, 73448),
+        "qwen2-vl-2b": (28, 1536, 151936),
+    }
+    for arch, (L, d, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.vocab_size) == (L, d, v), arch
+
+
+def test_param_counts_plausible():
+    """Sanity-pin the analytic parameter counts to the model names."""
+    import repro.models.stack as stack
+    assert abs(stack.count_params(get_config("deepseek-v3-671b")) / 1e9
+               - 671) < 10
+    assert abs(stack.count_params(get_config("deepseek-v3-671b"),
+                                  active_only=True) / 1e9 - 37.9) < 2
+    assert abs(stack.count_params(get_config("nemotron-4-340b")) / 1e9
+               - 341) < 10
+    assert abs(stack.count_params(get_config("falcon-mamba-7b")) / 1e9
+               - 7.3) < 1

@@ -1,0 +1,137 @@
+"""Algorithm-1 controller: unit tests against the paper's published
+operating points + hypothesis property tests on the selection invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Intent, IntentRequirements, MissionGoal,
+                        NoFeasibleInsightTier, PowerConfig, paper_lut,
+                        select_configuration)
+from repro.core.controller import min_bandwidth_for_tier
+from repro.core.intent import classify_intent
+from repro.core.lut import SystemLUT, Tier
+
+LUT = paper_lut()
+REQ = IntentRequirements(min_update_pps=0.5)
+PC = PowerConfig()
+
+
+def sel(bw, goal=MissionGoal.PRIORITIZE_ACCURACY, intent=Intent.INSIGHT,
+        req=REQ, lut=LUT):
+    return select_configuration(bw, PC, goal, intent, req, lut)
+
+
+# ------------------------------ unit --------------------------------------
+
+
+def test_paper_thresholds():
+    """§3.3: High-Accuracy needs >= 11.68 Mbps at 0.5 PPS."""
+    assert min_bandwidth_for_tier(LUT.by_name("High Accuracy"), 0.5) == \
+        pytest.approx(11.68)
+
+
+def test_accuracy_mode_picks_high_accuracy_when_feasible():
+    out = sel(15.0)
+    assert out.tier.name == "High Accuracy"
+
+
+def test_accuracy_mode_degrades_to_balanced_below_threshold():
+    out = sel(10.0)   # 10 < 11.68, Balanced needs 5.4
+    assert out.tier.name == "Balanced"
+
+
+def test_throughput_mode_picks_smallest_payload():
+    out = sel(15.0, goal=MissionGoal.PRIORITIZE_THROUGHPUT)
+    assert out.tier.name == "High Throughput"
+
+
+def test_context_intent_early_return():
+    out = sel(15.0, intent=Intent.CONTEXT)
+    assert out.stream == "context" and out.tier is None
+
+
+def test_no_feasible_tier_raises():
+    with pytest.raises(NoFeasibleInsightTier):
+        sel(1.0)      # High Throughput needs 3.32 Mbps
+
+
+def test_fidelity_floor_filters_tiers():
+    """Q_I (paper §3.3 formal model): a high fidelity floor excludes the
+    low-accuracy tiers even when they satisfy timeliness."""
+    req = IntentRequirements(min_update_pps=0.5, min_fidelity=0.83)
+    out = select_configuration(20.0, PC, MissionGoal.PRIORITIZE_THROUGHPUT,
+                               Intent.INSIGHT, req, LUT)
+    assert out.tier.name == "High Accuracy"   # only tier with acc >= 0.83
+    with pytest.raises(NoFeasibleInsightTier):
+        # HA needs 11.68 Mbps: at 8 Mbps nothing satisfies both floors
+        select_configuration(8.0, PC, MissionGoal.PRIORITIZE_ACCURACY,
+                             Intent.INSIGHT, req, LUT)
+
+
+def test_intent_classifier():
+    assert classify_intent(
+        "Highlight the living beings on that roof") is Intent.INSIGHT
+    assert classify_intent(
+        "What is happening in this sector?") is Intent.CONTEXT
+    assert classify_intent(
+        "Are there any persons near the submerged car?") is Intent.CONTEXT
+    assert classify_intent(
+        "Segment the vehicles stranded by floodwater") is Intent.INSIGHT
+
+
+# --------------------------- properties ------------------------------------
+
+tiers_strategy = st.lists(
+    st.builds(
+        Tier,
+        name=st.sampled_from(["A", "B", "C", "D"]),
+        ratio=st.floats(0.01, 0.5),
+        acc_base=st.floats(0.3, 0.95),
+        acc_finetuned=st.floats(0.3, 0.95),
+        payload_mb=st.floats(0.05, 10.0),
+    ),
+    min_size=1, max_size=4, unique_by=lambda t: t.name)
+
+
+@given(bw=st.floats(0.1, 100.0), tiers=tiers_strategy,
+       fi=st.floats(0.05, 5.0),
+       goal=st.sampled_from(list(MissionGoal)))
+@settings(max_examples=200, deadline=None)
+def test_selection_always_feasible(bw, tiers, fi, goal):
+    """Whatever is selected satisfies the F_I timeliness floor; if nothing
+    can, NoFeasibleInsightTier is raised (Algorithm 1 lines 22-28)."""
+    lut = SystemLUT(tiers=tiers)
+    req = IntentRequirements(min_update_pps=fi)
+    try:
+        out = select_configuration(bw, PC, goal, Intent.INSIGHT, req, lut)
+    except NoFeasibleInsightTier:
+        assert all(t.max_pps(bw) < fi for t in tiers)
+        return
+    assert out.throughput_pps >= fi
+    assert out.tier.max_pps(bw) == pytest.approx(out.throughput_pps)
+    feas = [t for t in tiers if t.max_pps(bw) >= fi]
+    if goal is MissionGoal.PRIORITIZE_ACCURACY:
+        assert out.tier.acc_base == max(t.acc_base for t in feas)
+    else:
+        assert out.tier.payload_mb == min(t.payload_mb for t in feas)
+
+
+@given(bw_lo=st.floats(1.0, 50.0), delta=st.floats(0.1, 50.0))
+@settings(max_examples=100, deadline=None)
+def test_accuracy_monotone_in_bandwidth(bw_lo, delta):
+    """More bandwidth never selects a lower-fidelity tier in accuracy mode
+    (paper Fig. 9b's switching behaviour)."""
+    def acc_at(bw):
+        try:
+            return sel(bw).tier.acc_base
+        except NoFeasibleInsightTier:
+            return -1.0
+    assert acc_at(bw_lo + delta) >= acc_at(bw_lo)
+
+
+@given(bw=st.floats(3.4, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_throughput_goal_maximises_pps(bw):
+    out_t = sel(bw, goal=MissionGoal.PRIORITIZE_THROUGHPUT)
+    out_a = sel(bw, goal=MissionGoal.PRIORITIZE_ACCURACY)
+    assert out_t.throughput_pps >= out_a.throughput_pps
+    assert out_a.tier.acc_base >= out_t.tier.acc_base

@@ -1,0 +1,66 @@
+"""Decode path must reproduce full-sequence forward logits step by step —
+validates cache bookkeeping, rotary offsets, ring buffers, SSM recurrence
+and MLA absorbed-matmul decode across every attention/mixer family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import (HybridConfig, MLAConfig, MoEConfig, ModelConfig,
+                          SSMConfig, decode_step, forward, init_cache,
+                          init_params)
+
+B, S = 2, 16
+
+CASES = [
+    ModelConfig(name="gqa", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97),
+    ModelConfig(name="sw", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                sliding_window=8),
+    ModelConfig(name="mla", arch_type="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                attn_type="mla",
+                mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)),
+    ModelConfig(name="moe", arch_type="moe", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                              capacity_factor=8.0)),
+    ModelConfig(name="mamba1", arch_type="ssm", num_layers=2, d_model=64,
+                num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=97,
+                attn_type="none", rope_style="none",
+                ssm=SSMConfig(version=1, state_size=4)),
+    ModelConfig(name="mamba2", arch_type="ssm", num_layers=2, d_model=64,
+                num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=97,
+                attn_type="none", rope_style="none",
+                ssm=SSMConfig(version=2, state_size=8, head_dim=16)),
+    ModelConfig(name="hybrid", arch_type="hybrid", num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                ssm=SSMConfig(version=2, state_size=8, head_dim=16),
+                hybrid=HybridConfig(attn_every=2)),
+]
+
+
+@pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+def test_decode_matches_forward(cfg):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    logits_full, *_ = forward(params, cfg, {"tokens": tokens})
+    if cfg.sliding_window:
+        # full forward masks by window; decode must agree within the window
+        pass
+    cache = init_cache(cfg, B, S if not cfg.sliding_window
+                       else cfg.sliding_window)
+    dec = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+    outs = []
+    for t in range(S):
+        lg, cache = dec(params, cache, tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec)))
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1.0
+    assert err < 2e-3 * scale, f"{cfg.name}: decode mismatch {err}"

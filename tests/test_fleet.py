@@ -1,0 +1,39 @@
+"""Multi-UAV fleet extension (beyond-paper, EXPERIMENTS §Beyond-paper)."""
+from repro.core import paper_lut
+from repro.network import constant_trace, paper_trace
+from repro.runtime.fleet import run_fleet
+from repro.runtime.mission import MissionSpec
+
+LUT = paper_lut()
+
+
+def test_fleet_shares_bandwidth():
+    """Per-UAV throughput at N=2 is roughly half the N=1 throughput when
+    link-bound (constant 10 Mbps: Balanced tier, tx-limited)."""
+    one = run_fleet(LUT, constant_trace(10.0, 600), 1,
+                    MissionSpec(duration_s=600, mode="avery"))
+    two = run_fleet(LUT, constant_trace(10.0, 600), 2,
+                    MissionSpec(duration_s=600, mode="avery"))
+    per_uav = two.aggregate_pps / 2
+    assert per_uav < one.aggregate_pps
+    assert two.aggregate_pps > one.aggregate_pps * 0.8  # aggregate holds up
+
+
+def test_strict_controller_starves_at_scale():
+    """At N=6 on the paper trace no tier meets F_I at a 1/6 share for most
+    of the mission — the fleet-scale failure mode of hard feasibility."""
+    fleet = run_fleet(LUT, paper_trace(seed=0), 6,
+                      MissionSpec(mode="avery"))
+    assert fleet.infeasible_frac > 0.5
+
+
+def test_fallback_restores_liveness():
+    strict = run_fleet(LUT, paper_trace(seed=0), 6,
+                       MissionSpec(mode="avery"))
+    fb = run_fleet(LUT, paper_trace(seed=0), 6,
+                   MissionSpec(mode="avery", fallback=True))
+    assert fb.aggregate_pps > 10 * strict.aggregate_pps
+    assert fb.infeasible_frac > 0.2       # still reported, just not idle
+    # fidelity cost is bounded by the lightest tier's accuracy
+    lightest = min(LUT.tiers, key=lambda t: t.payload_mb)
+    assert fb.mean_iou > lightest.acc_base - 0.02

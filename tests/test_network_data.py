@@ -1,0 +1,167 @@
+"""Network simulator, energy model, data pipelines, checkpoint, optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.packets import Packet
+from repro.data import floodseg, lm
+from repro.network import (Channel, EdgeDevice, constant_trace, paper_trace,
+                           random_trace)
+
+
+# ------------------------------ traces -------------------------------------
+
+
+def test_paper_trace_bounds_and_duration():
+    tr = paper_trace(seed=0)
+    assert tr.duration_s == 1200
+    assert tr.samples.min() >= 8.0 and tr.samples.max() <= 20.0
+    # must contain both a high-bandwidth regime and a sustained drop
+    assert (tr.samples > 15).mean() > 0.2
+    assert (tr.samples < 10).mean() > 0.1
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_random_trace_bounds(seed):
+    tr = random_trace(seed, duration_s=100)
+    assert tr.samples.min() >= 8.0 and tr.samples.max() <= 20.0
+
+
+# ------------------------------ channel -------------------------------------
+
+
+def test_channel_constant_bw_latency():
+    """1 MB at a constant 8 Mbps must take exactly 1 second."""
+    ch = Channel(constant_trace(8.0))
+    pkt = Packet(kind="insight", tier_name="t", seq_id=0, created_at=0.0,
+                 payload_bytes=1_000_000)
+    rec = ch.transmit(pkt, 0.0)
+    assert rec.latency_s == pytest.approx(1.0, rel=1e-6)
+
+
+def test_channel_fifo_serialisation():
+    ch = Channel(constant_trace(8.0))
+    p = lambda i: Packet("insight", "t", i, 0.0, 500_000)  # noqa: E731
+    r1 = ch.transmit(p(0), 0.0)
+    r2 = ch.transmit(p(1), 0.0)
+    assert r2.start_s == pytest.approx(r1.end_s)
+    assert r2.end_s == pytest.approx(1.0, rel=1e-6)
+
+
+@given(bw=st.floats(8.0, 20.0), nbytes=st.integers(1_000, 5_000_000))
+@settings(max_examples=50, deadline=None)
+def test_channel_conserves_bytes(bw, nbytes):
+    """Transmission time integrates to exactly bytes*8/bw on a flat trace."""
+    ch = Channel(constant_trace(bw, duration_s=3600))
+    rec = ch.transmit(Packet("insight", "t", 0, 0.0, nbytes), 0.0)
+    assert rec.latency_s == pytest.approx(nbytes * 8 / (bw * 1e6), rel=1e-5)
+
+
+# ------------------------------ energy --------------------------------------
+
+
+def test_energy_model_paper_calibration():
+    """split@1 edge latency/energy must stay near the paper's Fig. 8
+    measurements (0.2318 s, 3.12 J) — the model is calibrated, so drift
+    here means someone broke the constants."""
+    from repro.configs.lisa7b import CONFIG as deploy
+    from repro.runtime import edge_insight_flops, full_edge_flops
+    dev = EdgeDevice()
+    lat = dev.latency_s(edge_insight_flops(deploy, 0.25))
+    energy = dev.compute_energy_j(edge_insight_flops(deploy, 0.25))
+    assert 0.15 < lat < 0.35
+    assert 2.0 < energy < 5.0
+    reduction = 1 - energy / dev.compute_energy_j(full_edge_flops(deploy))
+    assert 0.90 < reduction < 0.97        # paper: 93.98%
+
+
+# ------------------------------ data ----------------------------------------
+
+
+def test_floodseg_masks_consistent():
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        scene = floodseg.generate_scene(rng)
+        for cls in ("person", "vehicle"):
+            assert scene.masks[cls].any() == (scene.counts[cls] > 0)
+        assert scene.image.shape == (32, 32, 3)
+        assert scene.image.min() >= 0 and scene.image.max() <= 1
+
+
+def test_floodseg_batch_contract():
+    rng = np.random.RandomState(0)
+    b = floodseg.make_batch(rng, 8, "segment")
+    assert b["images"].shape == (8, 32, 32, 3)
+    assert b["query"].shape == (8, floodseg.QUERY_LEN)
+    assert b["mask"].shape == (8, 32, 32)
+    assert b["answer"].shape == (8,)
+    assert b["query"].max() < floodseg.VOCAB
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_photometric_augment_stays_valid(seed):
+    rng = np.random.RandomState(seed)
+    scene = floodseg.generate_scene(rng)
+    img = floodseg.photometric_augment(rng, scene.image)
+    assert img.min() >= 0.0 and img.max() <= 1.0 and img.dtype == np.float32
+
+
+def test_lm_batches_match_modality_contract():
+    from repro.configs import get_reduced
+    for arch in ("phi4-mini-3.8b", "hubert-xlarge", "qwen2-vl-2b"):
+        cfg = get_reduced(arch)
+        rng = np.random.RandomState(0)
+        b = lm.lm_batch(rng, cfg, 4, 32)
+        if cfg.modality == "audio":
+            assert b["frames"].shape == (4, 32, cfg.frontend_dim)
+            assert b["mask_positions"].any()
+        elif cfg.modality == "vlm":
+            assert b["positions"].shape == (3, 4, 32)
+            assert b["vision_embeds"].shape[1] == cfg.num_vision_tokens
+        else:
+            assert b["tokens"].shape == (4, 32)
+
+
+# --------------------------- checkpoint -------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": [jnp.ones((4,)), {"c": jnp.zeros((2, 2), jnp.int32)}],
+            "d": (jnp.full((3,), 2.5),)}
+    save_pytree(str(tmp_path / "ck"), tree)
+    back = load_pytree(str(tmp_path / "ck"))
+    assert jax.tree.structure(jax.tree.map(lambda x: 0, tree)) == \
+        jax.tree.structure(jax.tree.map(lambda x: 0, back))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------- optimizer ------------------------------------
+
+
+def test_adamw_optimises_quadratic():
+    opt = optim.adamw(0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(params)
+        params, state = opt.apply(params, state, grads)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clipping_bounds_update():
+    opt = optim.adamw(1.0, clip_norm=1e-3, weight_decay=0.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e9)}
+    p2, _ = opt.apply(params, state, huge)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 10.0

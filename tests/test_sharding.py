@@ -1,0 +1,91 @@
+"""Sharding-spec rules: every spec must be structurally valid for its
+tensor (rank match + divisibility) across all 10 architectures and all
+cache/batch trees; and a reduced train step must lower under a mesh."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.launch.dryrun import SHAPES, abstract_cache, abstract_params, \
+    adapt_config, input_specs
+from repro.models import make_train_step
+from repro.sharding import specs as sh
+
+
+def fake_mesh():
+    """Abstract 16x16 mesh for spec validation (no devices needed)."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def fake_mesh_multipod():
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _check_tree(specs, tree, mesh):
+    for (path, spec), (_, leaf) in zip(
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0],
+            jax.tree_util.tree_flatten_with_path(tree)[0]):
+        assert isinstance(spec, P), (path, spec)
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (path, spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_fn", [fake_mesh, fake_mesh_multipod])
+def test_param_specs_valid(arch, mesh_fn):
+    cfg = get_config(arch)
+    mesh = mesh_fn()
+    aparams = abstract_params(cfg)
+    _check_tree(sh.param_specs(cfg, aparams, mesh), aparams, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_valid(arch, shape):
+    cfg = adapt_config(get_config(arch), SHAPES[shape])
+    if cfg is None:
+        pytest.skip("combo skipped by design")
+    mesh = fake_mesh()
+    acache = abstract_cache(cfg, SHAPES[shape])
+    _check_tree(sh.cache_specs(cfg, acache, mesh), acache, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_specs_valid(arch):
+    cfg = get_config(arch)
+    mesh = fake_mesh()
+    batch = input_specs(cfg, SHAPES["train_4k"])
+    _check_tree(sh.batch_specs(batch, mesh), batch, mesh)
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "granite-moe-3b-a800m",
+                                  "falcon-mamba-7b", "zamba2-7b"])
+def test_reduced_train_step_lowers_on_local_mesh(arch):
+    """End-to-end jit lowering with NamedShardings on the (1,1) local mesh
+    — catches spec/structure mismatches that AbstractMesh checks miss."""
+    cfg = get_reduced(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    aparams = abstract_params(cfg)
+    pspecs = sh.param_specs(cfg, aparams, mesh)
+    psh = sh.to_shardings(mesh, pspecs)
+    opt = optim.adamw(1e-3)
+    aopt = jax.eval_shape(opt.init, aparams)
+    osh = sh.to_shardings(mesh, sh.opt_state_specs(cfg, aopt, pspecs, mesh))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    bsh = sh.to_shardings(mesh, sh.batch_specs(batch, mesh))
+    fn = jax.jit(make_train_step(cfg, opt), in_shardings=(psh, osh, bsh))
+    with mesh:
+        lowered = fn.lower(aparams, aopt, batch)
+    assert lowered is not None

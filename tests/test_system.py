@@ -1,0 +1,95 @@
+"""End-to-end system behaviour: offline phase (train -> LUT) feeding the
+online phase (dual-stream executor + Algorithm-1 control over a channel).
+This is the paper's full workflow at proxy scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.lisa_mini import CONFIG as PCFG
+from repro.core import (DualStreamExecutor, Intent, MissionGoal,
+                        classify_intent, paper_lut)
+from repro.core import profile as prof
+from repro.core import training, vlm
+from repro.data import floodseg, requests
+from repro.network import Channel, paper_trace
+from repro.runtime import MissionSpec, run_mission
+
+
+@pytest.fixture(scope="module")
+def system():
+    """Small-budget offline phase: original + finetuned + one bottleneck."""
+    params = training.train_lisa(PCFG, steps=300, batch_size=16,
+                                 log_every=0, log=lambda s: None)
+    bns = {0.25: training.train_bottleneck(PCFG, params, 0.25, steps=80,
+                                           batch_size=16, log_every=0,
+                                           log=lambda s: None)}
+    return params, bns
+
+
+def test_build_lut_from_trained_system(system):
+    params, bns = system
+    lut = prof.build_lut(PCFG, params, params, bns, eval_batches=2)
+    assert len(lut.tiers) == 1
+    t = lut.tiers[0]
+    assert t.name == "High Accuracy"
+    assert 0.15 < t.acc_base <= 1.0
+    # deployment payload must be in the paper's band (Table 3: 2.92 MB)
+    assert 2.0 < t.payload_mb < 4.0
+    assert lut.context.payload_mb < 3.0
+
+
+def test_dual_stream_executor_roundtrip(system):
+    params, bns = system
+    lut = prof.build_lut(PCFG, params, params, bns, eval_batches=1)
+    execu = DualStreamExecutor(pcfg=PCFG, params=params,
+                               bottlenecks={"High Accuracy": bns[0.25]},
+                               lut=lut)
+    rng = np.random.RandomState(0)
+    b = floodseg.make_batch(rng, 2, "segment", augment=False)
+    images, query = jnp.asarray(b["images"]), jnp.asarray(b["query"])
+
+    pkt = execu.edge_insight(images, lut.tiers[0], 0, 0.0)
+    assert pkt.payload_bytes > 0 and pkt.kind == "insight"
+    mask_logits, answer_logits = execu.cloud_insight(pkt, query)
+    assert mask_logits.shape == (2, 32, 32)
+
+    cpkt, _ = execu.edge_context(images, 0, 0.0)
+    assert cpkt.payload_bytes < pkt.payload_bytes   # context is lightweight
+    logits = execu.cloud_context(cpkt, query)
+    assert logits.shape == (2, PCFG.llm.vocab_size)
+
+    # the compressed Insight packet must match the mini-scale payload model
+    from repro.core import bottleneck as bn
+    d = PCFG.sam.d_model
+    rank = bn.rank_for_ratio(d, 0.25, 4)
+    expected = 64 * rank  # 64 SAM-mini tokens of int8 codes dominate
+    assert pkt.payload_bytes >= expected
+
+
+def test_mission_with_real_inference(system):
+    """Closed-loop mission with real model inference in the fidelity oracle
+    (executor mode) — short horizon."""
+    params, bns = system
+    lut = prof.build_lut(PCFG, params, params, bns, eval_batches=1)
+    execu = DualStreamExecutor(pcfg=PCFG, params=params,
+                               bottlenecks={"High Accuracy": bns[0.25]},
+                               lut=lut)
+    log = run_mission(lut, paper_trace(seed=3, duration_s=60),
+                      MissionSpec(duration_s=60.0, mode="avery"),
+                      executor=execu, pcfg=PCFG)
+    assert len(log.frames) >= 20
+    assert 0.0 < log.mean_iou <= 1.0
+
+
+def test_intent_gate_routes_mission_requests():
+    ctx = ins = 0
+    for req in requests.mission_requests(0, 300.0):
+        intent = classify_intent(req.prompt)
+        if req.kind == "segment":
+            assert intent is Intent.INSIGHT, req.prompt
+            ins += 1
+        else:
+            assert intent is Intent.CONTEXT, req.prompt
+            ctx += 1
+    assert ctx > 10 and ins > 10
