@@ -24,6 +24,8 @@ BENCHES = [
     ("fig10", "benchmarks.bench_tradeoff"),             # Fig 10
     ("fine_tiers", "benchmarks.bench_fine_tiers"),      # beyond-paper (§6 fw)
     ("fleet", "benchmarks.bench_fleet"),                # beyond-paper (§6 fw)
+    ("serving", "benchmarks.bench_serving"),            # KV-cache engine
+
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
 ]
 

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast tier-1 selection: everything except the @pytest.mark.slow
+# end-to-end tests (offline-phase training + long missions), so CI gets a
+# signal in minutes. The full suite remains the default `pytest` run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -m "not slow" "$@"

@@ -1,4 +1,5 @@
-"""Dual-stream execution modes (paper §4.1–§4.3).
+"""Dual-stream execution modes (paper §4.1–§4.3) + the batched cloud
+serving engine.
 
 ``Stream`` names the two semantically distinct execution modes; the
 ``DualStreamExecutor`` bundles the jitted edge/cloud stage functions for a
@@ -6,15 +7,25 @@ trained LISA pipeline plus the per-tier bottlenecks, and exposes
 ``run_context`` / ``run_insight`` used by the serving runtime and the
 mission simulator.
 
+Cloud serving is batched: ``cloud_context_batch`` / ``cloud_insight_batch``
+stack multiple packets of the same tier into one device call, and
+``cloud_generate_batch`` serves multi-token answers through the
+prefill + flash-decode KV-cache path (``vlm.llm_prefill`` /
+``vlm.llm_decode_step``). Request counts are padded up to a small set of
+bucket sizes and every jitted stage is held in an explicit compile cache
+keyed on (stage, tier, bucket, query_len), so varying request counts
+never retrigger XLA compilation.
+
 The executor is deliberately channel-agnostic: it returns the numpy
 payloads + packets; the runtime decides what the (simulated or pod-
 disaggregated) link does with them.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,31 +43,107 @@ class Stream(enum.Enum):
     INSIGHT = "insight"   # low-frequency, high-fidelity grounding
 
 
+def _pad_rows(arr: np.ndarray, bucket: int) -> np.ndarray:
+    """Pad axis 0 up to ``bucket`` by repeating the last row (rows past the
+    real count are sliced away after the call)."""
+    n = arr.shape[0]
+    if n == bucket:
+        return arr
+    reps = np.repeat(arr[-1:], bucket - n, axis=0)
+    return np.concatenate([arr, reps], axis=0)
+
+
 @dataclass
 class DualStreamExecutor:
     pcfg: LISAPipelineConfig
     params: dict
     bottlenecks: Dict[str, dict]          # tier name -> bottleneck params
     lut: SystemLUT
+    # batch buckets for the cloud stages: request counts are padded up to
+    # the smallest bucket >= n so the jit cache sees a fixed shape set
+    buckets: Tuple[int, ...] = (1, 2, 4, 8, 16)
+    # answer length for the generate path (continuous-batching serving)
+    max_new_tokens: int = 4
+    # route decode attention through the flash-decode Pallas kernel
+    flash_decode: bool = True
 
     def __post_init__(self):
         pcfg = self.pcfg
+        self.buckets = tuple(sorted(self.buckets))
+        # decode steps run with the flash-decode kernel on the attention
+        # hot loop; prefill keeps the full-sequence path
+        self._gen_pcfg = dataclasses.replace(
+            pcfg, llm=pcfg.llm.replace(use_flash_decode=self.flash_decode))
         self._edge_context = jax.jit(
             lambda p, img: vlm.clip_encode(p, pcfg, img))
         self._edge_insight = jax.jit(
             lambda p, img: vlm.sam_head(p, pcfg, img))
-        self._encode = {
-            name: jax.jit(lambda bp, a: bn.encode(bp, a))
-            for name in self.bottlenecks
-        }
-        def _cloud_insight(p, bp, codes, scales, ctx, query):
-            a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
-            feats = vlm.sam_tail(p, pcfg, a)
-            answer_logits, seg = vlm.llm_reason(p, pcfg, ctx, query)
-            return vlm.mask_decode(p, pcfg, feats, seg), answer_logits
-        self._cloud_insight = jax.jit(_cloud_insight)
-        self._cloud_context = jax.jit(
-            lambda p, ctx, query: vlm.llm_reason(p, pcfg, ctx, query)[0])
+        # one shared jitted bottleneck encode for every tier (tiers differ
+        # only in code rank, which the jit cache keys on via shape)
+        self._encode = jax.jit(lambda bp, a: bn.encode(bp, a))
+        # explicit compile cache: (stage, tier, bucket, query_len) ->
+        # jitted callable.
+        # Each entry owns exactly one compiled executable (bucket shapes
+        # are fixed), so len(self._compiled) == number of XLA compiles.
+        self._compiled: Dict[Tuple, Callable] = {}
+
+    # ---- compile cache ----
+
+    def _stage_fn(self, stage: str) -> Callable:
+        pcfg, T = self.pcfg, self.max_new_tokens
+        gcfg = dataclasses.replace(
+            pcfg, llm=pcfg.llm.replace(use_flash_decode=self.flash_decode))
+
+        if stage == "cloud_insight":
+            def fn(p, bp, codes, scales, ctx, query):
+                a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
+                feats = vlm.sam_tail(p, pcfg, a)
+                answer_logits, seg = vlm.llm_reason(p, pcfg, ctx, query)
+                return vlm.mask_decode(p, pcfg, feats, seg), answer_logits
+        elif stage == "cloud_context":
+            def fn(p, ctx, query):
+                return vlm.llm_reason(p, pcfg, ctx, query)[0]
+        elif stage == "cloud_insight_gen":
+            def fn(p, bp, codes, scales, ctx, query):
+                a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
+                feats = vlm.sam_tail(p, pcfg, a)
+                tokens, logits0, seg = vlm.llm_generate(p, gcfg, ctx, query, T)
+                return vlm.mask_decode(p, pcfg, feats, seg), logits0, tokens
+        elif stage == "cloud_context_gen":
+            def fn(p, ctx, query):
+                tokens, logits0, _ = vlm.llm_generate(p, gcfg, ctx, query, T)
+                return logits0, tokens
+        else:
+            raise ValueError(stage)
+        return fn
+
+    def _jitted(self, stage: str, tier_name: Optional[str], bucket: int,
+                qlen: int) -> Callable:
+        # max_new_tokens / flash_decode are baked into the staged fns, so
+        # they are part of the key: mutating them after some buckets have
+        # compiled must not serve stale-T answers from the old entries
+        key = (stage, tier_name, bucket, qlen, self.max_new_tokens,
+               self.flash_decode)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = jax.jit(self._stage_fn(stage))
+            self._compiled[key] = fn
+        return fn
+
+    @property
+    def num_compiled_stages(self) -> int:
+        return len(self._compiled)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n; oversized direct calls round up to a
+        multiple of the largest bucket instead of failing (the scheduler
+        never builds such microbatches, but per-packet callers may pass
+        arbitrarily large frame batches, as the seed path allowed)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        top = self.buckets[-1]
+        return ((n + top - 1) // top) * top
 
     # ---- edge side ----
 
@@ -65,27 +152,110 @@ class DualStreamExecutor:
         ctx = np.asarray(self._edge_context(self.params, images))
         return pk.make_context_packet(seq_id, now, ctx), ctx
 
-    def edge_insight(self, images, tier: Tier, seq_id: int, now: float
-                     ) -> pk.Packet:
+    def edge_insight(self, images, tier: Tier, seq_id: int, now: float,
+                     ctx: Optional[np.ndarray] = None) -> pk.Packet:
+        """``ctx``: precomputed CLIP context features for this frame (e.g.
+        from an ``edge_context`` call on the same image) — passing them
+        keeps the edge at one CLIP pass per frame."""
         a = self._edge_insight(self.params, images)
-        codes, scales = self._encode[tier.name](self.bottlenecks[tier.name], a)
-        ctx = np.asarray(self._edge_context(self.params, images))
+        codes, scales = self._encode(self.bottlenecks[tier.name], a)
+        if ctx is None:
+            ctx = np.asarray(self._edge_context(self.params, images))
         return pk.make_insight_packet(seq_id, now, tier.name,
                                       np.asarray(codes), np.asarray(scales),
-                                      clip_feats=ctx)
+                                      clip_feats=np.asarray(ctx))
 
-    # ---- cloud side ----
+    # ---- cloud side (single packet, kept as the thin compat wrappers) ----
 
     def cloud_context(self, packet: pk.Packet, query) -> np.ndarray:
-        return np.asarray(self._cloud_context(
-            self.params, jnp.asarray(packet.content["ctx"]), query))
+        return self.cloud_context_batch([packet], [np.asarray(query)])[0]
 
     def cloud_insight(self, packet: pk.Packet, query
                       ) -> Tuple[np.ndarray, np.ndarray]:
-        bp = self.bottlenecks[packet.tier_name]
-        mask_logits, answer_logits = self._cloud_insight(
-            self.params, bp,
-            jnp.asarray(packet.content["codes"]),
-            jnp.asarray(packet.content["scales"]),
-            jnp.asarray(packet.content["clip"]), query)
-        return np.asarray(mask_logits), np.asarray(answer_logits)
+        return self.cloud_insight_batch([packet], [np.asarray(query)])[0]
+
+    # ---- cloud side (batched serving engine) ----
+
+    def _stack(self, packets: Sequence[pk.Packet],
+               queries: Sequence[np.ndarray], keys: Sequence[str]
+               ) -> Tuple[List[np.ndarray], np.ndarray, List[int], int]:
+        """Concatenate per-packet content rows + queries along the batch
+        axis and pad to the bucket. Returns (stacked content arrays in
+        ``keys`` order, stacked queries, per-packet row counts, bucket)."""
+        rows = [np.asarray(q).reshape(-1, np.asarray(q).shape[-1])
+                for q in queries]
+        counts = [p.content[keys[0]].shape[0] for p in packets]
+        if any(r.shape[0] != c for r, c in zip(rows, counts)):
+            raise ValueError(
+                f"query batch rows {[r.shape[0] for r in rows]} do not match "
+                f"packet batch rows {counts}")
+        n = sum(counts)
+        bucket = self.bucket_for(n)
+        content = [_pad_rows(np.concatenate(
+            [np.asarray(p.content[k]) for p in packets], axis=0), bucket)
+            for k in keys]
+        query = _pad_rows(np.concatenate(rows, axis=0), bucket)
+        return content, query, counts, bucket
+
+    @staticmethod
+    def _split(arrs: Sequence[np.ndarray], counts: Sequence[int]
+               ) -> List[Tuple[np.ndarray, ...]]:
+        """Slice off the pad rows and split back into per-packet results."""
+        out, lo = [], 0
+        for c in counts:
+            out.append(tuple(np.asarray(a[lo:lo + c]) for a in arrs))
+            lo += c
+        return out
+
+    def cloud_context_batch(self, packets: Sequence[pk.Packet],
+                            queries: Sequence[np.ndarray]
+                            ) -> List[np.ndarray]:
+        """Batched Context stage: K packets -> K answer-logit arrays."""
+        (ctx,), query, counts, bucket = self._stack(packets, queries, ["ctx"])
+        fn = self._jitted("cloud_context", None, bucket, query.shape[-1])
+        logits = fn(self.params, jnp.asarray(ctx), jnp.asarray(query))
+        return [r[0] for r in self._split([logits], counts)]
+
+    def cloud_insight_batch(self, packets: Sequence[pk.Packet],
+                            queries: Sequence[np.ndarray]
+                            ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Batched Insight stage: K same-tier packets -> K
+        (mask_logits, answer_logits) pairs."""
+        tier = self._same_tier(packets)
+        content, query, counts, bucket = self._stack(
+            packets, queries, ["codes", "scales", "clip"])
+        fn = self._jitted("cloud_insight", tier, bucket, query.shape[-1])
+        mask, logits = fn(self.params, self.bottlenecks[tier],
+                          *map(jnp.asarray, content), jnp.asarray(query))
+        return self._split([mask, logits], counts)
+
+    def cloud_generate_batch(self, packets: Sequence[pk.Packet],
+                             queries: Sequence[np.ndarray]
+                             ) -> List[Tuple[np.ndarray, ...]]:
+        """Batched multi-token serving through the KV-cache decode path.
+        Context packets -> (answer_logits, tokens); Insight packets ->
+        (mask_logits, answer_logits, tokens). ``tokens`` is the greedy
+        ``max_new_tokens``-long answer."""
+        if packets[0].kind == "context":
+            (ctx,), query, counts, bucket = self._stack(packets, queries,
+                                                        ["ctx"])
+            fn = self._jitted("cloud_context_gen", None, bucket, query.shape[-1])
+            logits, tokens = fn(self.params, jnp.asarray(ctx),
+                                jnp.asarray(query))
+            return self._split([logits, tokens], counts)
+        tier = self._same_tier(packets)
+        content, query, counts, bucket = self._stack(
+            packets, queries, ["codes", "scales", "clip"])
+        fn = self._jitted("cloud_insight_gen", tier, bucket, query.shape[-1])
+        mask, logits, tokens = fn(self.params, self.bottlenecks[tier],
+                                  *map(jnp.asarray, content),
+                                  jnp.asarray(query))
+        return self._split([mask, logits, tokens], counts)
+
+    @staticmethod
+    def _same_tier(packets: Sequence[pk.Packet]) -> str:
+        tiers = {p.tier_name for p in packets}
+        if len(tiers) != 1:
+            raise ValueError(f"mixed tiers in one microbatch: {tiers} — "
+                             "bucket packets by tier before batching")
+        return next(iter(tiers))

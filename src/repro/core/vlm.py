@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from repro.configs.lisa7b import LISAPipelineConfig
 from repro.core import bottleneck as bn
 from repro.models import stack
-from repro.models.common import (causal_mask, fan_in_init, gelu, linear,
-                                 normal_init)
+from repro.models.common import (cache_mask, causal_mask, fan_in_init, gelu,
+                                 linear, normal_init)
 from repro.models.config import ModelConfig
 
 
@@ -156,10 +156,13 @@ def sam_tail(params: dict, pcfg: LISAPipelineConfig, x: jax.Array,
     return stack.apply_norm(x, p["norm"], pcfg.sam)
 
 
-def llm_reason(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
-               query_tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Multi-modal LLM over [ctx; query]. Returns (answer_logits (B,V),
-    seg_embedding (B, d_sam)) taken at the final (<SEG>) position."""
+def _llm_trunk(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
+               query_tokens: jax.Array, want_cache: bool = False):
+    """Shared full-sequence LLM trunk over [ctx; query]: embed, causal
+    attention stack, final norm. Returns (x (B,S,d), kv_cache_or_None) —
+    the single source of truth for both ``llm_reason`` and
+    ``llm_prefill`` so the fast path and the serving prefill can't
+    diverge."""
     llm = pcfg.llm
     p = params["llm"]
     x_q = jnp.take(p["embed"], query_tokens, axis=0).astype(llm.adtype)
@@ -168,13 +171,125 @@ def llm_reason(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     mask = causal_mask(S)[None]
     spec = stack.layer_groups(llm)[0]
-    x, _, _ = stack.group_forward(p["groups"][0], llm, spec, x, positions,
-                                  mask)
-    x = stack.apply_norm(x, p["norm"], llm)
+    x, _, kv = stack.group_forward(p["groups"][0], llm, spec, x, positions,
+                                   mask, want_cache=want_cache)
+    return stack.apply_norm(x, p["norm"], llm), kv
+
+
+def llm_reason(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
+               query_tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Multi-modal LLM over [ctx; query]. Returns (answer_logits (B,V),
+    seg_embedding (B, d_sam)) taken at the final (<SEG>) position."""
+    x, _ = _llm_trunk(params, pcfg, ctx_tokens, query_tokens)
     last = x[:, -1]                                   # <SEG> position
-    answer_logits = linear(last, p["answer_head"])
+    answer_logits = linear(last, params["llm"]["answer_head"])
     seg = linear(last, params["seg_proj"])
     return answer_logits, seg
+
+
+def _llm_outputs(params: dict, x_last: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Answer logits + <SEG> embedding from the hidden state at one
+    position (B, d_llm)."""
+    answer_logits = linear(x_last, params["llm"]["answer_head"])
+    seg = linear(x_last, params["seg_proj"])
+    return answer_logits, seg
+
+
+def llm_prefill(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
+                query_tokens: jax.Array, width: Optional[int] = None
+                ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Full-sequence forward over [ctx; query] that also materialises the
+    per-layer KV cache (the serving prefill stage). Returns
+    (answer_logits (B,V), seg (B,d_sam), cache).
+
+    The cache is laid out for ``llm_decode_step``: ring-buffer slots of
+    ``width`` (>= S; defaults to S) with per-slot absolute positions, the
+    same contract as ``models.model.init_cache``. Equivalent to
+    ``llm_reason`` at the last position.
+    """
+    llm = pcfg.llm
+    x, kv = _llm_trunk(params, pcfg, ctx_tokens, query_tokens,
+                       want_cache=True)
+    B, S, _ = x.shape
+    answer_logits, seg = _llm_outputs(params, x[:, -1])
+
+    W = S if width is None else width
+    assert W >= S, (W, S)
+    if W > S:
+        kv = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, W - S)]
+                              + [(0, 0)] * (a.ndim - 3)), kv)
+    pos_arr = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
+         jnp.full((B, W - S), -1, jnp.int32)], axis=1)
+    cache = {"groups": [kv], "positions": pos_arr}
+    return answer_logits, seg, cache
+
+
+def llm_decode_step(params: dict, pcfg: LISAPipelineConfig, cache: Dict,
+                    tokens: jax.Array, pos: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One autoregressive decode step against the KV cache. tokens (B,1)
+    i32; pos scalar i32 (absolute position of the new token). Returns
+    (answer_logits (B,V), seg (B,d_sam), new_cache). The attention hot
+    loop routes through the flash-decode Pallas kernel when
+    ``pcfg.llm.use_flash_decode`` is set."""
+    llm = pcfg.llm
+    p = params["llm"]
+    B = tokens.shape[0]
+    x = jnp.take(p["embed"], tokens, axis=0).astype(llm.adtype)
+    W = cache["positions"].shape[1]
+    slot = jnp.asarray(pos, jnp.int32) % W
+    pos_arr = jax.lax.dynamic_update_slice(
+        cache["positions"],
+        jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1)), (0, slot))
+    mask = cache_mask(pos_arr, pos, llm.sliding_window)
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+    spec = stack.layer_groups(llm)[0]
+    x, kv = stack.group_decode(p["groups"][0], llm, spec, x, positions,
+                               cache["groups"][0], slot, mask)
+    x = stack.apply_norm(x, p["norm"], llm)
+    answer_logits, seg = _llm_outputs(params, x[:, -1])
+    return answer_logits, seg, {"groups": [kv], "positions": pos_arr}
+
+
+def llm_generate(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
+                 query_tokens: jax.Array, max_new_tokens: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Greedy multi-token answer generation: one prefill over [ctx; query]
+    then flash-decode steps (the first answer token comes from the prefill
+    logits). Returns (tokens (B, T) i32, first_answer_logits (B, V),
+    seg (B, d_sam)). The seg embedding is always read from the hidden
+    state of the *final generated* token — the answer's trailing <SEG>
+    position — for every T, so mask conditioning doesn't change
+    convention between T == 1 and T > 1. jit-able with static
+    ``max_new_tokens``."""
+    S = ctx_tokens.shape[1] + query_tokens.shape[1]
+    W = S + max_new_tokens
+    logits0, _, cache = llm_prefill(params, pcfg, ctx_tokens, query_tokens,
+                                    width=W)
+    tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+    if max_new_tokens > 1:
+        def step(carry, pos):
+            tok, c = carry
+            logits, _, c2 = llm_decode_step(params, pcfg, c, tok[:, None],
+                                            pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, c2), nxt
+
+        (last, cache), toks = jax.lax.scan(
+            step, (tok0, cache), jnp.arange(S, S + max_new_tokens - 1,
+                                            dtype=jnp.int32))
+        tokens = jnp.concatenate([tok0[:, None], toks.T], axis=1)
+    else:
+        last, tokens = tok0, tok0[:, None]
+    # one more decode step to read the <SEG> hidden state at the last
+    # generated token itself (its logits predict beyond the answer and
+    # are discarded)
+    _, seg, _ = llm_decode_step(params, pcfg, cache, last[:, None],
+                                jnp.int32(S + max_new_tokens - 1))
+    return tokens, logits0, seg
 
 
 def mask_decode(params: dict, pcfg: LISAPipelineConfig, sam_feats: jax.Array,

@@ -31,14 +31,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def serve_local(duration_s: float, seed: int) -> None:
+def serve_local(duration_s: float, seed: int, max_batch: int = 8) -> None:
     from repro.configs.lisa_mini import CONFIG as pcfg
     from repro.core import (DualStreamExecutor, MissionGoal, classify_intent,
                             Intent, paper_lut)
     from repro.core import profile as prof
+    from repro.core.controller import PowerConfig, select_configuration
+    from repro.core.intent import DEFAULT_REQUIREMENTS
     from repro.core.vlm import iou_metrics
     from repro.data import floodseg, requests
     from repro.network import Channel, paper_trace
+    from repro.runtime.scheduler import MicrobatchScheduler, ServeRequest
 
     print("[serve] training lisa-mini system (offline phase, small budget)")
     params, params_ft, bns = prof.train_full_system(
@@ -49,42 +52,53 @@ def serve_local(duration_s: float, seed: int) -> None:
         bottlenecks={lut.tiers[i].name: bns[r]
                      for i, r in enumerate(sorted(bns, reverse=True))},
         lut=lut)
+    sched = MicrobatchScheduler(executor=execu, max_batch=max_batch)
     trace = paper_trace(seed=seed, duration_s=int(duration_s))
     channel = Channel(trace)
     rng = np.random.RandomState(seed)
 
-    n_ctx = n_ins = 0
-    ious, ctx_correct = [], []
+    # edge loop: encode each frame, put the packet on the channel, and hand
+    # it to the cloud scheduler; full microbatches are served as soon as
+    # they form (continuous batching), stragglers at the end of the stream
+    truth = {}
+    results = []
+    seq = 0
     for req in requests.mission_requests(seed, duration_s):
         intent = classify_intent(req.prompt)
         batch = floodseg.make_batch(rng, 1, req.kind, augment=False,
                                     cls=req.cls)
         images = jnp.asarray(batch["images"])
-        query = jnp.asarray(batch["query"])
         if intent is Intent.CONTEXT:
-            pkt, _ = execu.edge_context(images, n_ctx, req.time_s)
-            channel.transmit(pkt, req.time_s)
-            logits = execu.cloud_context(pkt, query)
-            ctx_correct.append(
-                float(np.argmax(logits[0]) == batch["answer"][0]))
-            n_ctx += 1
+            pkt, _ = execu.edge_context(images, seq, req.time_s)
         else:
-            from repro.core.controller import (PowerConfig,
-                                               select_configuration)
-            from repro.core.intent import DEFAULT_REQUIREMENTS
             sel = select_configuration(
                 channel.measure_bandwidth(req.time_s), PowerConfig(),
                 MissionGoal.PRIORITIZE_ACCURACY, Intent.INSIGHT,
                 DEFAULT_REQUIREMENTS[Intent.INSIGHT], lut)
-            pkt = execu.edge_insight(images, sel.tier, n_ins, req.time_s)
-            channel.transmit(pkt, req.time_s)
-            mask_logits, _ = execu.cloud_insight(pkt, query)
-            m = iou_metrics(jnp.asarray(mask_logits),
+            pkt = execu.edge_insight(images, sel.tier, seq, req.time_s)
+        channel.transmit(pkt, req.time_s)
+        sched.submit(ServeRequest(seq_id=seq, intent=intent, packet=pkt,
+                                  query=batch["query"],
+                                  arrival_s=req.time_s))
+        truth[seq] = batch
+        results.extend(sched.step_ready())
+        seq += 1
+    results.extend(sched.drain())
+
+    ious, ctx_correct = [], []
+    for res in results:
+        batch = truth[res.seq_id]
+        if res.intent is Intent.CONTEXT:
+            ctx_correct.append(
+                float(np.argmax(res.answer_logits[0]) == batch["answer"][0]))
+        else:
+            m = iou_metrics(jnp.asarray(res.mask_logits),
                             jnp.asarray(batch["mask"]))
             ious.append(float(m["avg_iou"]))
-            n_ins += 1
-    print(f"[serve] served {n_ctx} context + {n_ins} insight requests over "
-          f"{duration_s:.0f}s")
+    print(f"[serve] served {len(ctx_correct)} context + {len(ious)} insight "
+          f"requests over {duration_s:.0f}s in {sched.n_microbatches} "
+          f"microbatches (mean batch {sched.mean_batch_size:.1f}, "
+          f"{execu.num_compiled_stages} compiled cloud stages)")
     if ctx_correct:
         print(f"[serve] context answer accuracy: {np.mean(ctx_correct):.3f}")
     if ious:
@@ -166,11 +180,13 @@ def main() -> None:
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="cloud scheduler microbatch cap")
     args = ap.parse_args()
     if args.dryrun:
         serve_dryrun()
     else:
-        serve_local(args.duration, args.seed)
+        serve_local(args.duration, args.seed, args.max_batch)
 
 
 if __name__ == "__main__":

@@ -170,8 +170,13 @@ def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         v = wsc(v, "BATCH", None, None, "model")
     k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
     v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
-    out = _sdpa(q, k_cache, v_cache, mask[:, None, :], scale)
+    if cfg.use_flash_decode and S == 1 and not cfg.shard_cache_hd:
+        from repro.kernels.decode_attention import ops as decode_ops
+        out = decode_ops.decode_attention(q[:, 0], k_cache, v_cache,
+                                          mask)[:, None]
+    else:
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+        out = _sdpa(q, k_cache, v_cache, mask[:, None, :], scale)
     out = linear(out.reshape(B, S, H * hd), p["wo"])
     return out, {"k": k_cache, "v": v_cache}
 

@@ -97,6 +97,11 @@ class ModelConfig:
     act_dtype: str = "float32"
     remat: bool = False       # activation checkpointing around each block
     use_flash: bool = False   # route full-seq attention through Pallas kernel
+    # route single-token GQA decode attention through the flash-decode
+    # Pallas kernel (kernels/decode_attention): one streaming read of the
+    # KV cache per step — the serving decode hot loop (MLA decode keeps
+    # the absorbed-matmul path)
+    use_flash_decode: bool = False
     # query-chunked attention (§Perf lever): lax.scan over q blocks of this
     # size so only a (chunk x S) score tile is ever materialised — the
     # flash-attention access pattern expressed at the XLA level

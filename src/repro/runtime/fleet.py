@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core.lut import SystemLUT
 from repro.network.traces import BandwidthTrace
-from repro.runtime.mission import MissionLog, MissionSpec, run_mission
+from repro.runtime.mission import (FidelityOracle, MissionLog, MissionSpec,
+                                   run_mission)
 
 
 @dataclass
@@ -43,15 +44,25 @@ class FleetResult:
 
 
 def run_fleet(lut: SystemLUT, trace: BandwidthTrace, n_uavs: int,
-              spec: MissionSpec) -> FleetResult:
-    """Equal-share scheduler: each UAV sees trace/N."""
+              spec: MissionSpec, executor=None) -> FleetResult:
+    """Equal-share scheduler: each UAV sees trace/N.
+
+    With ``executor`` per-frame fidelity comes from real lisa-mini
+    inference on the shared cloud executor: all N missions report into one
+    ``FidelityOracle`` whose evaluation pool and per-(tier, scene)
+    measurements are built once and memoised, so fleet cost does not
+    scale with N on the cloud side. (Evals are per-packet calls; they are
+    shared, not stacked into one device batch.)"""
     share = BandwidthTrace(trace.samples / n_uavs,
                            name=f"{trace.name}/share{n_uavs}")
+    oracle = (FidelityOracle(lut, spec, executor=executor)
+              if executor is not None else None)
     logs = []
     for i in range(n_uavs):
         s = MissionSpec(duration_s=spec.duration_s, goal=spec.goal,
                         mode=spec.mode, static_tier=spec.static_tier,
                         finetuned=spec.finetuned, min_pps=spec.min_pps,
                         seed=spec.seed + 101 * i, fallback=spec.fallback)
-        logs.append(run_mission(lut, share, s))
+        logs.append(run_mission(lut, share, s, executor=executor,
+                                oracle=oracle))
     return FleetResult(n_uavs=n_uavs, logs=logs)

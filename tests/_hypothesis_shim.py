@@ -1,0 +1,84 @@
+"""Minimal stand-in for ``hypothesis`` covering exactly the API surface the
+suite uses (given / settings / floats / integers / sampled_from / lists /
+builds). Imported only when hypothesis isn't installed, so minimal
+environments still collect and run the property tests — as deterministic
+seeded random sampling rather than guided search + shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable, Optional
+
+_SHIM_MAX_EXAMPLES = 25    # cap: sampling without shrinking gains little more
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self.draw = draw
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          unique_by: Optional[Callable] = None) -> _Strategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        out = []
+        for _ in range(max(1, n) * 20):
+            if len(out) >= n:
+                break
+            cand = elements.draw(r)
+            if unique_by is not None and any(
+                    unique_by(cand) == unique_by(o) for o in out):
+                continue
+            out.append(cand)
+        return out if len(out) >= min_size else out + [elements.draw(r)]
+    return _Strategy(draw)
+
+
+def builds(target: Callable, **kwargs: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda r: target(**{k: s.draw(r) for k, s in kwargs.items()}))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_shim_max_examples", 20), _SHIM_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper():
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                fn(**{k: s.draw(rng) for k, s in strategies.items()})
+        # pytest follows __wrapped__ to the original signature and would
+        # treat the strategy parameters as fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class strategies:          # noqa: N801 — mirrors `from hypothesis import strategies as st`
+    floats = staticmethod(floats)
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    builds = staticmethod(builds)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # minimal envs: seeded-sampling fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import BottleneckSpec, SplitPlan, init_bottleneck, \
     rank_for_ratio

@@ -1,7 +1,11 @@
 """Algorithm-1 controller: unit tests against the paper's published
 operating points + hypothesis property tests on the selection invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # minimal envs: seeded-sampling fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (Intent, IntentRequirements, MissionGoal,
                         NoFeasibleInsightTier, PowerConfig, paper_lut,

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # minimal envs: seeded-sampling fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro import optim
 from repro.checkpoint import load_pytree, save_pytree

@@ -27,6 +27,7 @@ def system():
     return params, bns
 
 
+@pytest.mark.slow
 def test_build_lut_from_trained_system(system):
     params, bns = system
     lut = prof.build_lut(PCFG, params, params, bns, eval_batches=2)
@@ -39,6 +40,7 @@ def test_build_lut_from_trained_system(system):
     assert lut.context.payload_mb < 3.0
 
 
+@pytest.mark.slow
 def test_dual_stream_executor_roundtrip(system):
     params, bns = system
     lut = prof.build_lut(PCFG, params, params, bns, eval_batches=1)
@@ -67,6 +69,7 @@ def test_dual_stream_executor_roundtrip(system):
     assert pkt.payload_bytes >= expected
 
 
+@pytest.mark.slow
 def test_mission_with_real_inference(system):
     """Closed-loop mission with real model inference in the fidelity oracle
     (executor mode) — short horizon."""

@@ -61,6 +61,7 @@ def test_bottleneck_insertion_changes_little_at_high_rank(params, batch):
         jnp.mean(jnp.abs(m0)) + 1e-3)
 
 
+@pytest.mark.slow
 def test_short_training_improves_iou():
     """A short real training run must lift Average IoU well above the
     untrained baseline — the e2e learning path works."""
