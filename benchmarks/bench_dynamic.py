@@ -10,7 +10,7 @@ import os
 import numpy as np
 
 from benchmarks.common import ART, Timer, emit, ensure_lut
-from repro.core.controller import MissionGoal
+from repro.engine import AdaptivePolicy, StaticTierPolicy
 from repro.network import paper_trace
 from repro.runtime import MissionSpec, run_mission
 
@@ -20,11 +20,13 @@ def run(log=print):
     trace = paper_trace(seed=0)
     rows = []
     logs = {}
+    # adaptive-vs-static is a ControlPolicy swap on the engine session
     with Timer() as t:
-        logs["AVERY"] = run_mission(lut, trace, MissionSpec(mode="avery"))
+        logs["AVERY"] = run_mission(lut, trace,
+                                    MissionSpec(policy=AdaptivePolicy()))
         for tier in ("High Accuracy", "Balanced", "High Throughput"):
             logs[tier] = run_mission(
-                lut, trace, MissionSpec(mode="static", static_tier=tier))
+                lut, trace, MissionSpec(policy=StaticTierPolicy(tier)))
     ha_iou = logs["High Accuracy"].mean_iou
     for name, lg in logs.items():
         switches = sum(1 for a, b in zip(lg.frames, lg.frames[1:])

@@ -8,7 +8,7 @@ trading fidelity for fleet-wide liveness."""
 from __future__ import annotations
 
 from benchmarks.common import Timer, emit, ensure_lut
-from repro.core.controller import MissionGoal
+from repro.engine import (AdaptivePolicy, BestEffortPolicy, StaticTierPolicy)
 from repro.network import paper_trace
 from repro.runtime.fleet import run_fleet
 from repro.runtime.mission import MissionSpec
@@ -19,13 +19,15 @@ def run(log=print):
     trace = paper_trace(seed=0)
     rows = []
     results = []
+    # every fleet variant is the same engine with a different ControlPolicy
     with Timer() as t:
         for n in (1, 2, 4, 6):
-            fleet_av = run_fleet(lut, trace, n, MissionSpec(mode="avery"))
+            fleet_av = run_fleet(lut, trace, n,
+                                 MissionSpec(policy=AdaptivePolicy()))
             fleet_fb = run_fleet(lut, trace, n,
-                                 MissionSpec(mode="avery", fallback=True))
+                                 MissionSpec(policy=BestEffortPolicy()))
             fleet_ha = run_fleet(lut, trace, n, MissionSpec(
-                mode="static", static_tier="High Accuracy"))
+                policy=StaticTierPolicy("High Accuracy")))
             results.append((n, fleet_av, fleet_fb, fleet_ha))
     for n, fleet_av, fleet_fb, fleet_ha in results:
         rows.append(emit(

@@ -1,16 +1,20 @@
-"""Benchmark: batched KV-cache serving engine vs the seed per-request path.
+"""Benchmark: the engine's batched serving paths vs the seed per-request
+path.
 
-Serves N Insight requests that each need a T-token answer, two ways:
+Serves N Insight requests that each need a T-token answer, three ways:
 
-  baseline — the seed serving loop: one jitted call per request at batch 1,
-             and every answer token re-runs the full [ctx; query; generated]
-             forward (no KV cache);
-  engine   — the continuous-batching scheduler: tier-bucketed microbatches
-             through ``cloud_generate_batch`` (one batched prefill + decode
-             steps against the KV cache) at batch {1,4,8,16}.
+  baseline — the seed serving loop: one jitted call per request at batch
+             1, and every answer token re-runs the full [ctx; query;
+             generated] forward (no KV cache);
+  engine   — ``AveryEngine`` with closed tier-bucketed microbatches
+             through ``cloud_generate_batch`` (one batched prefill +
+             decode steps against the KV cache) at batch {1,4,8,16};
+  inflight — ``AveryEngine`` with token-level in-flight batching: each
+             request prefills into a slot of the running decode batch
+             and rides the remaining steps (no batch-close barrier).
 
-The engine rows run the XLA KV-decode path; ``engine_flash_b*`` rows rerun
-batch 8/16 with the flash-decode Pallas kernel, which executes in
+The engine rows run the XLA KV-decode path; ``engine_flash_b*`` rows
+rerun batch 8/16 with the flash-decode Pallas kernel, which executes in
 *interpret mode* on this CPU container (grid points run sequentially, so
 it is slower here; on real TPU the kernel is the roofline-floor path).
 Also reports pure decode throughput (tokens/s) per batch size from timed
@@ -20,38 +24,20 @@ depends only on the geometry, not on the weight values.
 """
 from __future__ import annotations
 
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import CKPT, emit
+from benchmarks.common import emit, init_serving_system, make_engine, \
+    make_executor, time_best
 from repro.configs.lisa_mini import CONFIG as PCFG
-from repro.core import DualStreamExecutor, bottleneck as bn, paper_lut, vlm
+from repro.core import vlm
 from repro.core.intent import Intent
 from repro.data import floodseg
-from repro.runtime.scheduler import MicrobatchScheduler, ServeRequest
 
 N_REQUESTS = 32
 ANSWER_TOKENS = 4
 BATCHES = (1, 4, 8, 16)
-
-
-def _system():
-    lut = paper_lut()
-    path = os.path.join(CKPT, "lisa_mini_original", "arrays.npz")
-    if os.path.exists(path):
-        from repro.checkpoint import load_pytree
-        params = load_pytree(os.path.dirname(path))
-    else:
-        params = vlm.init_lisa(PCFG, jax.random.PRNGKey(0))
-    d = PCFG.sam.d_model
-    bns = {t.name: bn.init_bottleneck(
-        jax.random.PRNGKey(i), bn.BottleneckSpec(d, bn.rank_for_ratio(
-            d, t.ratio, 4), 4)) for i, t in enumerate(lut.tiers)}
-    return params, bns, lut
 
 
 def _requests(executor, n):
@@ -61,19 +47,8 @@ def _requests(executor, n):
     for i in range(n):
         b = floodseg.make_batch(rng, 1, "segment", augment=False)
         pkt = executor.edge_insight(jnp.asarray(b["images"]), tier, i, 0.0)
-        reqs.append(ServeRequest(seq_id=i, intent=Intent.INSIGHT, packet=pkt,
-                                 query=b["query"]))
+        reqs.append((pkt, b["query"]))
     return reqs
-
-
-def _time(fn, reps=2):
-    fn()                                    # warm-up (compiles)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def _baseline_serve(executor, reqs, max_new, jit_reason):
@@ -82,10 +57,10 @@ def _baseline_serve(executor, reqs, max_new, jit_reason):
     must persist across calls so the warm-up rep absorbs its compiles —
     the engine side reuses the executor's compile cache the same way."""
     params = executor.params
-    for r in reqs:
-        executor.cloud_insight(r.packet, r.query)   # mask + first token
-        query = jnp.asarray(r.query)
-        ctx = jnp.asarray(r.packet.content["clip"])
+    for pkt, q in reqs:
+        executor.cloud_insight(pkt, q)              # mask + first token
+        query = jnp.asarray(q)
+        ctx = jnp.asarray(pkt.content["clip"])
         for _ in range(max_new - 1):
             logits, _ = jit_reason(params, ctx, query)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -93,10 +68,11 @@ def _baseline_serve(executor, reqs, max_new, jit_reason):
         jax.block_until_ready(query)
 
 
-def _engine_serve(executor, reqs, max_batch):
-    sched = MicrobatchScheduler(executor=executor, max_batch=max_batch,
-                                generate=True)
-    return sched.serve_all(reqs)
+def _engine_serve(executor, reqs, max_batch, batching):
+    engine = make_engine(executor, max_batch=max_batch, batching=batching)
+    for pkt, q in reqs:
+        engine.submit_packet(pkt, q, Intent.INSIGHT)
+    return engine.drain()
 
 
 def _decode_loop(executor, batch, steps):
@@ -124,22 +100,20 @@ def _decode_loop(executor, batch, steps):
 
 def run(log=print):
     rows = []
-    params, bns, lut = _system()
+    params, bns, lut = init_serving_system(PCFG)
     # XLA KV-decode engine (the CPU-appropriate config; flash-decode
     # interpret mode is measured separately below)
-    executor = DualStreamExecutor(pcfg=PCFG, params=params, bottlenecks=bns,
-                                  lut=lut, max_new_tokens=ANSWER_TOKENS,
-                                  flash_decode=False)
-    flash_exec = DualStreamExecutor(pcfg=PCFG, params=params,
-                                    bottlenecks=bns, lut=lut,
-                                    max_new_tokens=ANSWER_TOKENS,
-                                    flash_decode=True)
+    executor = make_executor(PCFG, params, bns, lut,
+                             max_new_tokens=ANSWER_TOKENS, flash_decode=False)
+    flash_exec = make_executor(PCFG, params, bns, lut,
+                               max_new_tokens=ANSWER_TOKENS,
+                               flash_decode=True)
     reqs = _requests(executor, N_REQUESTS)
 
     pcfg = executor.pcfg
     jit_reason = jax.jit(lambda p, c, q: vlm.llm_reason(p, pcfg, c, q))
-    base_s = _time(lambda: _baseline_serve(executor, reqs, ANSWER_TOKENS,
-                                           jit_reason))
+    base_s = time_best(lambda: _baseline_serve(executor, reqs, ANSWER_TOKENS,
+                                               jit_reason))
     base_rps = N_REQUESTS / base_s
     rows.append(emit("serving/baseline_full_forward", base_s * 1e6,
                      f"req_s={base_rps:.1f};"
@@ -147,7 +121,8 @@ def run(log=print):
                      f"T={ANSWER_TOKENS};N={N_REQUESTS}"))
 
     for b in BATCHES:
-        eng_s = _time(lambda: _engine_serve(executor, reqs, b))
+        eng_s = time_best(lambda: _engine_serve(executor, reqs, b,
+                                                "generate"))
         rps = N_REQUESTS / eng_s
         rows.append(emit(
             f"serving/engine_b{b}", eng_s * 1e6,
@@ -155,7 +130,17 @@ def run(log=print):
             f"tok_s={N_REQUESTS * ANSWER_TOKENS / eng_s:.1f}"))
 
     for b in (8, 16):
-        eng_s = _time(lambda: _engine_serve(flash_exec, reqs, b))
+        eng_s = time_best(lambda: _engine_serve(executor, reqs, b,
+                                                "inflight"))
+        rps = N_REQUESTS / eng_s
+        rows.append(emit(
+            f"serving/inflight_b{b}", eng_s * 1e6,
+            f"req_s={rps:.1f};speedup_vs_full_forward={rps / base_rps:.2f}x;"
+            "note=token_level_continuous_batching"))
+
+    for b in (8, 16):
+        eng_s = time_best(lambda: _engine_serve(flash_exec, reqs, b,
+                                                "generate"))
         rps = N_REQUESTS / eng_s
         rows.append(emit(
             f"serving/engine_flash_b{b}", eng_s * 1e6,
@@ -164,12 +149,12 @@ def run(log=print):
 
     steps = 32
     for b in BATCHES:
-        dec_s = _time(_decode_loop(executor, b, steps))
+        dec_s = time_best(_decode_loop(executor, b, steps))
         rows.append(emit(
             f"serving/decode_b{b}", dec_s * 1e6,
             f"decode_tok_s={b * steps / dec_s:.1f};steps={steps}"))
     for b in (8, 16):
-        dec_s = _time(_decode_loop(flash_exec, b, steps))
+        dec_s = time_best(_decode_loop(flash_exec, b, steps))
         rows.append(emit(
             f"serving/decode_flash_b{b}", dec_s * 1e6,
             f"decode_tok_s={b * steps / dec_s:.1f};steps={steps};"

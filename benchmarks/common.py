@@ -1,8 +1,11 @@
-"""Shared benchmark infrastructure: trained-system cache + CSV helpers.
+"""Shared benchmark infrastructure: trained-system cache, engine
+construction, warmup/timing, and CSV helpers.
 
 The offline phase (lisa-mini original + flood-finetune + three bottleneck
 tiers) is trained once and cached under benchmarks/artifacts/checkpoints;
-subsequent benchmark runs load it from disk.
+subsequent benchmark runs load it from disk. Serving benchmarks build
+their ``AveryEngine`` through ``make_engine`` (loopback transport, shared
+weights/LUT) instead of hand-wiring executors.
 """
 from __future__ import annotations
 
@@ -68,6 +71,54 @@ def ensure_lut(log=print):
     os.makedirs(CKPT, exist_ok=True)
     lut.save(path)
     return lut
+
+
+def init_serving_system(pcfg=None):
+    """Weights + per-tier bottlenecks + paper LUT for serving benchmarks:
+    cached trained checkpoints when present, random init otherwise
+    (serving throughput depends on the geometry, not the weight values)."""
+    from repro.core import profile as prof
+
+    if pcfg is None:
+        from repro.configs.lisa_mini import CONFIG as pcfg
+    params = None
+    path = os.path.join(CKPT, "lisa_mini_original", "arrays.npz")
+    if os.path.exists(path):
+        from repro.checkpoint import load_pytree
+        params = load_pytree(os.path.dirname(path))
+    return prof.random_init_system(pcfg, params=params)
+
+
+def make_executor(pcfg=None, params=None, bns=None, lut=None, **kw):
+    """A ``DualStreamExecutor`` over the shared serving system."""
+    from repro.core import DualStreamExecutor
+
+    if pcfg is None:
+        from repro.configs.lisa_mini import CONFIG as pcfg
+    if params is None:
+        params, bns, lut = init_serving_system(pcfg)
+    return DualStreamExecutor(pcfg=pcfg, params=params, bottlenecks=bns,
+                              lut=lut, **kw)
+
+
+def make_engine(executor, **engine_kw):
+    """The benchmark front door: an ``AveryEngine`` on an in-process
+    loopback link (no simulated channel in the measurement)."""
+    from repro.engine import AveryEngine, LoopbackTransport
+
+    engine_kw.setdefault("transport", LoopbackTransport())
+    return AveryEngine(lut=executor.lut, executor=executor, **engine_kw)
+
+
+def time_best(fn, reps: int = 2) -> float:
+    """Warm up once (absorbing XLA compiles), then best-of-``reps``."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 class Timer:

@@ -17,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import ensure_lut, ensure_trained_system  # noqa: E402
 from repro.configs.lisa_mini import CONFIG as pcfg
 from repro.core import DualStreamExecutor, MissionGoal
+from repro.engine import AdaptivePolicy, StaticTierPolicy
 from repro.network import paper_trace
 from repro.runtime import MissionSpec, run_mission
 
@@ -44,18 +45,19 @@ def main():
     print(f"{'config':22s} {'PPS':>6s} {'AvgIoU':>7s} {'gap(pp)':>8s} "
           f"{'energy(J)':>10s} {'switches':>8s}")
 
+    # the §5.3 adaptive-vs-static comparison is a one-line policy swap
     logs = {}
     logs["AVERY (accuracy)"] = run_mission(
-        lut, trace, MissionSpec(duration_s=duration, mode="avery"),
+        lut, trace, MissionSpec(duration_s=duration, policy=AdaptivePolicy()),
         executor=executor, pcfg=pcfg)
     logs["AVERY (throughput)"] = run_mission(
-        lut, trace, MissionSpec(duration_s=duration, mode="avery",
+        lut, trace, MissionSpec(duration_s=duration, policy=AdaptivePolicy(),
                                 goal=MissionGoal.PRIORITIZE_THROUGHPUT),
         executor=executor, pcfg=pcfg)
     for tier in ("High Accuracy", "Balanced", "High Throughput"):
         logs[f"static {tier}"] = run_mission(
-            lut, trace, MissionSpec(duration_s=duration, mode="static",
-                                    static_tier=tier),
+            lut, trace, MissionSpec(duration_s=duration,
+                                    policy=StaticTierPolicy(tier)),
             executor=executor, pcfg=pcfg)
 
     ha = logs["static High Accuracy"].mean_iou

@@ -1,9 +1,11 @@
 """Quickstart: the AVERY public API in ~60 lines.
 
 1. Train a tiny LISA proxy + one bottleneck tier (offline phase).
-2. Classify operator intent, let Algorithm 1 pick the operating point.
-3. Run one Context query and one Insight query through the dual-stream
-   split executor over a simulated channel.
+2. Build the ``AveryEngine`` front door: executor + LUT + a simulated
+   channel transport + the Algorithm-1 adaptive policy.
+3. Run one Context query and one Insight query through an operator
+   session — the engine classifies intent, picks the operating point,
+   runs the edge encode, transmits, and serves the cloud batch.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,14 +13,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.lisa_mini import CONFIG as pcfg
-from repro.core import (DualStreamExecutor, Intent, MissionGoal, PowerConfig,
-                        classify_intent, select_configuration)
+from repro.core import DualStreamExecutor
 from repro.core import profile as prof
 from repro.core import training
-from repro.core.intent import DEFAULT_REQUIREMENTS
 from repro.core.vlm import iou_metrics
 from repro.data import floodseg
-from repro.network import Channel, paper_trace
+from repro.engine import AdaptivePolicy, AveryEngine, ChannelTransport
+from repro.network import paper_trace
 
 # ---- 1. offline phase (tiny budget so this finishes in ~2 minutes) ----
 print("== offline phase: training lisa-mini + bottleneck ==")
@@ -29,39 +30,38 @@ lut = prof.build_lut(pcfg, params, params, {0.25: bn}, eval_batches=2)
 print("LUT:", [(t.name, round(t.acc_base, 3), f"{t.payload_mb:.2f}MB")
                for t in lut.tiers])
 
+# ---- 2. one engine, one operator session ----
 executor = DualStreamExecutor(pcfg=pcfg, params=params,
                               bottlenecks={"High Accuracy": bn}, lut=lut)
-channel = Channel(paper_trace(seed=0))
-
-# ---- 2. operator asks a triage question -> Context stream ----
-prompt = "Are there any persons in this sector?"
-intent = classify_intent(prompt)
-print(f"\noperator: {prompt!r} -> intent={intent.value}")
+engine = AveryEngine(lut=lut, executor=executor,
+                     transport=ChannelTransport.from_trace(paper_trace(seed=0)),
+                     policy=AdaptivePolicy())
+session = engine.session("operator-0")
 rng = np.random.RandomState(0)
+
+# ---- operator asks a triage question -> Context stream ----
+prompt = "Are there any persons in this sector?"
 batch = floodseg.make_batch(rng, 1, "any", augment=False, cls="person")
-pkt, _ = executor.edge_context(jnp.asarray(batch["images"]), 0, 0.0)
-rec = channel.transmit(pkt, 0.0)
-logits = executor.cloud_context(pkt, jnp.asarray(batch["query"]))
-ans = "yes" if logits[0].argmax() == floodseg.ANS_YES else "no"
+fut = session.submit(prompt=prompt, images=jnp.asarray(batch["images"]),
+                     query=batch["query"], time_s=0.0)
+res = fut.result()
+ans = "yes" if res.answer_logits[0].argmax() == floodseg.ANS_YES else "no"
+print(f"\noperator: {prompt!r} -> intent={res.intent.value}")
 print(f"context answer: {ans!r} (gt: "
       f"{'yes' if batch['answer'][0] == floodseg.ANS_YES else 'no'}) "
-      f"[{pkt.payload_bytes}B, {rec.latency_s * 1000:.1f}ms on the link]")
+      f"[{res.latency_s * 1000:.1f}ms on the link]")
 
 # ---- 3. operator escalates -> Insight stream via Algorithm 1 ----
 prompt = "Highlight the stranded persons who may need rescue."
-intent = classify_intent(prompt)
-bw = channel.measure_bandwidth(5.0)
-sel = select_configuration(bw, PowerConfig(),
-                           MissionGoal.PRIORITIZE_ACCURACY, intent,
-                           DEFAULT_REQUIREMENTS[Intent.INSIGHT], lut)
-print(f"\noperator: {prompt!r} -> intent={intent.value}; "
-      f"controller picked tier={sel.tier.name!r} at {bw:.1f} Mbps "
-      f"({sel.throughput_pps:.2f} PPS)")
 batch = floodseg.make_batch(rng, 1, "segment", augment=False, cls="person")
-pkt = executor.edge_insight(jnp.asarray(batch["images"]), sel.tier, 1, 5.0)
-rec = channel.transmit(pkt, 5.0)
-mask_logits, _ = executor.cloud_insight(pkt, jnp.asarray(batch["query"]))
-m = iou_metrics(jnp.asarray(mask_logits), jnp.asarray(batch["mask"]))
+fut = session.submit(prompt=prompt, images=jnp.asarray(batch["images"]),
+                     query=batch["query"], time_s=5.0)
+res = fut.result()
+sel = res.events[0].data          # the engine's tier_selected event
+print(f"\noperator: {prompt!r} -> intent={res.intent.value}; "
+      f"controller picked tier={res.tier_name!r} at "
+      f"{sel['bandwidth_mbps']:.1f} Mbps")
+m = iou_metrics(jnp.asarray(res.mask_logits), jnp.asarray(batch["mask"]))
 print(f"insight mask IoU: {float(m['avg_iou']):.3f} "
-      f"[{pkt.payload_bytes}B, {rec.latency_s * 1000:.1f}ms on the link]")
+      f"[{res.latency_s * 1000:.1f}ms on the link]")
 print("\nquickstart OK")

@@ -1,27 +1,38 @@
-"""Example: batched-request split serving with intent gating.
+"""Example: batched-request split serving through the ``AveryEngine``.
 
-Drives the serving runtime with a Poisson stream of mixed operator
-requests (context triage + insight escalations), exercising the full
+Drives the engine with a Poisson stream of mixed operator requests
+(context triage + insight escalations), exercising the full
 edge/channel/cloud path with real model inference — the "serve a small
-model with batched requests" end-to-end driver.
+model with batched requests" end-to-end driver. The engine owns the
+wiring (intent gate -> ControlPolicy -> edge encode -> Transport ->
+batched cloud serving); this example owns only the request stream.
 
 Run:  PYTHONPATH=src python examples/serve_split.py [--duration 90]
+      PYTHONPATH=src python examples/serve_split.py --batching inflight
+      PYTHONPATH=src python examples/serve_split.py --smoke   # no training
 
 For the pod-disaggregated (2x16x16 mesh) lowering of the same split —
 the TPU mapping of the edge/cloud boundary — run:
       PYTHONPATH=src python -m repro.launch.serve --dryrun
 """
 import argparse
-import subprocess
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.serve import serve_local  # noqa: E402
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--duration", type=float, default=90.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="random-init weights instead of the offline phase")
+    ap.add_argument("--batching", choices=("microbatch", "inflight"),
+                    default="microbatch")
     args = ap.parse_args()
-    # launch/serve.py is the canonical implementation; this example is the
+    # serve_local is the canonical engine-driven loop; this example is the
     # documented entry point for it.
-    sys.exit(subprocess.call(
-        [sys.executable, "-m", "repro.launch.serve",
-         "--duration", str(args.duration), "--seed", str(args.seed)]))
+    serve_local(args.duration, args.seed, args.max_batch, smoke=args.smoke,
+                batching=args.batching)

@@ -2,6 +2,13 @@
 # Fast tier-1 selection: everything except the @pytest.mark.slow
 # end-to-end tests (offline-phase training + long missions), so CI gets a
 # signal in minutes. The full suite remains the default `pytest` run.
+# Finishes with an engine smoke: a short serve through the AveryEngine
+# front door (random-init weights) so the fast path exercises prompt
+# gating -> policy -> channel -> batched cloud serving end to end.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -m "not slow" "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+python -m pytest -q -m "not slow" "$@"
+echo "[ci_fast] engine smoke (microbatch + inflight)"
+python -m repro.launch.serve --duration 2 --smoke --max-batch 4
+python -m repro.launch.serve --duration 2 --smoke --max-batch 4 --batching inflight

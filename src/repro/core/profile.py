@@ -92,3 +92,25 @@ def train_full_system(pcfg: LISAPipelineConfig,
                                            batch_size=batch_size, seed=seed,
                                            log=log)
     return params, params_ft, bns
+
+
+def random_init_system(pcfg: LISAPipelineConfig, seed: int = 0,
+                       lut: Optional[SystemLUT] = None, params=None):
+    """Random-init weights + per-tier bottlenecks over a published LUT —
+    the no-offline-phase system used by serving smoke runs, benchmarks,
+    and engine tests (serving plumbing and throughput depend only on the
+    geometry, not on the weight values). Pass ``params`` (e.g. a cached
+    trained checkpoint) to skip the weight init and only build the
+    bottlenecks. Returns (params, bottlenecks-by-tier-name, lut)."""
+    from repro.core import vlm
+    from repro.core.lut import paper_lut
+    if lut is None:
+        lut = paper_lut()
+    if params is None:
+        params = vlm.init_lisa(pcfg, jax.random.PRNGKey(seed))
+    d = pcfg.sam.d_model
+    bns = {t.name: bn.init_bottleneck(
+        jax.random.PRNGKey(i),
+        bn.BottleneckSpec(d, bn.rank_for_ratio(d, t.ratio, 4), 4))
+        for i, t in enumerate(lut.tiers)}
+    return params, bns, lut

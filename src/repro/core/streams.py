@@ -43,6 +43,16 @@ class Stream(enum.Enum):
     INSIGHT = "insight"   # low-frequency, high-fidelity grounding
 
 
+def _cache_insert(dst: Dict, src: Dict, slot) -> Dict:
+    """Scatter one prefilled request's cache rows (batch 1) into a batched
+    decode cache at ``slot``. KV leaves are (L, B, W, ...) — batch axis 1;
+    positions are (B, W) — batch axis 0."""
+    groups = jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, 0]),
+                          dst["groups"], src["groups"])
+    positions = dst["positions"].at[slot].set(src["positions"][0])
+    return {"groups": groups, "positions": positions}
+
+
 def _pad_rows(arr: np.ndarray, bucket: int) -> np.ndarray:
     """Pad axis 0 up to ``bucket`` by repeating the last row (rows past the
     real count are sliced away after the call)."""
@@ -86,15 +96,36 @@ class DualStreamExecutor:
         # Each entry owns exactly one compiled executable (bucket shapes
         # are fixed), so len(self._compiled) == number of XLA compiles.
         self._compiled: Dict[Tuple, Callable] = {}
+        # in-flight decode stages (token-level continuous batching): one
+        # decode step over all live slots with per-row positions, plus the
+        # slot-scatter cache merge and the standalone mask decode
+        self._decode_rows = jax.jit(
+            lambda p, cache, tok, pos: vlm.llm_decode_step(
+                p, self._gen_pcfg, cache, tok, pos))
+        self._mask_decode = jax.jit(
+            lambda p, feats, seg: vlm.mask_decode(p, pcfg, feats, seg))
+        self._cache_insert = jax.jit(_cache_insert)
 
     # ---- compile cache ----
 
-    def _stage_fn(self, stage: str) -> Callable:
+    def _stage_fn(self, stage: str, width: Optional[int] = None) -> Callable:
         pcfg, T = self.pcfg, self.max_new_tokens
         gcfg = dataclasses.replace(
             pcfg, llm=pcfg.llm.replace(use_flash_decode=self.flash_decode))
 
-        if stage == "cloud_insight":
+        if stage == "cloud_prefill_insight":
+            def fn(p, bp, codes, scales, ctx, query):
+                a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
+                feats = vlm.sam_tail(p, pcfg, a)
+                logits0, _, cache = vlm.llm_prefill(p, pcfg, ctx, query,
+                                                    width=width)
+                return feats, logits0, cache
+        elif stage == "cloud_prefill_context":
+            def fn(p, ctx, query):
+                logits0, _, cache = vlm.llm_prefill(p, pcfg, ctx, query,
+                                                    width=width)
+                return logits0, cache
+        elif stage == "cloud_insight":
             def fn(p, bp, codes, scales, ctx, query):
                 a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
                 feats = vlm.sam_tail(p, pcfg, a)
@@ -118,15 +149,15 @@ class DualStreamExecutor:
         return fn
 
     def _jitted(self, stage: str, tier_name: Optional[str], bucket: int,
-                qlen: int) -> Callable:
+                qlen: int, width: Optional[int] = None) -> Callable:
         # max_new_tokens / flash_decode are baked into the staged fns, so
         # they are part of the key: mutating them after some buckets have
         # compiled must not serve stale-T answers from the old entries
         key = (stage, tier_name, bucket, qlen, self.max_new_tokens,
-               self.flash_decode)
+               self.flash_decode, width)
         fn = self._compiled.get(key)
         if fn is None:
-            fn = jax.jit(self._stage_fn(stage))
+            fn = jax.jit(self._stage_fn(stage, width=width))
             self._compiled[key] = fn
         return fn
 
@@ -251,6 +282,70 @@ class DualStreamExecutor:
                                   *map(jnp.asarray, content),
                                   jnp.asarray(query))
         return self._split([mask, logits, tokens], counts)
+
+    # ---- cloud side (in-flight / token-level continuous batching) ----
+    #
+    # The one-shot ``cloud_generate_batch`` serves a closed microbatch end
+    # to end. The in-flight stages below split that into prefill + single
+    # decode steps with *per-row* positions, so a request that arrives
+    # while a batch is mid-decode can be prefilled into a free slot and
+    # ride the remaining steps of the running batch (the engine's
+    # ``InflightDecoder`` drives them).
+
+    def cloud_prefill(self, packet: pk.Packet, query, width: int
+                      ) -> Tuple[np.ndarray, Dict, Optional[np.ndarray]]:
+        """Prefill one request's [ctx; query] against a ``width``-slot KV
+        ring. Returns (first-token logits, per-row cache, sam feats for
+        the later mask decode — None for Context packets)."""
+        query = np.asarray(query).reshape(-1, np.asarray(query).shape[-1])
+        rows, qlen = query.shape
+        if packet.kind == "insight":
+            tier = packet.tier_name
+            fn = self._jitted("cloud_prefill_insight", tier, rows, qlen,
+                              width=width)
+            feats, logits0, cache = fn(
+                self.params, self.bottlenecks[tier],
+                jnp.asarray(packet.content["codes"]),
+                jnp.asarray(packet.content["scales"]),
+                jnp.asarray(packet.content["clip"]), jnp.asarray(query))
+            return logits0, cache, feats
+        fn = self._jitted("cloud_prefill_context", None, rows, qlen,
+                          width=width)
+        logits0, cache = fn(self.params,
+                            jnp.asarray(packet.content["ctx"]),
+                            jnp.asarray(query))
+        return logits0, cache, None
+
+    def cloud_decode_rows(self, cache: Dict, tokens, pos
+                          ) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        """One decode step over all slots. tokens (slots, 1) i32; pos
+        (slots,) i32 per-row absolute positions (free slots may carry any
+        in-range position; their rows are discarded)."""
+        return self._decode_rows(self.params, cache,
+                                 jnp.asarray(tokens, jnp.int32),
+                                 jnp.asarray(pos, jnp.int32))
+
+    def cloud_mask(self, feats, seg) -> np.ndarray:
+        """<SEG>-conditioned mask decode from stored sam feats (the final
+        in-flight stage for Insight requests)."""
+        return self._mask_decode(self.params, jnp.asarray(feats),
+                                 jnp.asarray(seg))
+
+    def cache_insert(self, dst: Dict, src: Dict, slot: int) -> Dict:
+        """Merge a batch-1 prefilled cache into the batched decode cache
+        at ``slot`` (whole-row overwrite, so freed slots need no reset)."""
+        return self._cache_insert(dst, src, jnp.int32(slot))
+
+    @staticmethod
+    def empty_decode_cache(like: Dict, slots: int) -> Dict:
+        """A ``slots``-row decode cache shaped after a prefilled batch-1
+        cache: zero KV, all ring positions empty (-1)."""
+        groups = jax.tree.map(
+            lambda a: jnp.zeros((a.shape[0], slots) + a.shape[2:], a.dtype),
+            like["groups"])
+        positions = jnp.full((slots, like["positions"].shape[1]), -1,
+                             jnp.int32)
+        return {"groups": groups, "positions": positions}
 
     @staticmethod
     def _same_tier(packets: Sequence[pk.Packet]) -> str:

@@ -231,21 +231,30 @@ def llm_decode_step(params: dict, pcfg: LISAPipelineConfig, cache: Dict,
                     tokens: jax.Array, pos: jax.Array
                     ) -> Tuple[jax.Array, jax.Array, Dict]:
     """One autoregressive decode step against the KV cache. tokens (B,1)
-    i32; pos scalar i32 (absolute position of the new token). Returns
-    (answer_logits (B,V), seg (B,d_sam), new_cache). The attention hot
-    loop routes through the flash-decode Pallas kernel when
-    ``pcfg.llm.use_flash_decode`` is set."""
+    i32; pos i32 — either a scalar (whole batch at the same absolute
+    position) or a (B,) vector of per-row positions (the in-flight
+    batching path, where requests join a running decode mid-stream and
+    each slot sits at its own depth). Returns (answer_logits (B,V),
+    seg (B,d_sam), new_cache). The attention hot loop routes through the
+    flash-decode Pallas kernel when ``pcfg.llm.use_flash_decode`` is
+    set."""
     llm = pcfg.llm
     p = params["llm"]
     B = tokens.shape[0]
     x = jnp.take(p["embed"], tokens, axis=0).astype(llm.adtype)
     W = cache["positions"].shape[1]
-    slot = jnp.asarray(pos, jnp.int32) % W
-    pos_arr = jax.lax.dynamic_update_slice(
-        cache["positions"],
-        jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1)), (0, slot))
-    mask = cache_mask(pos_arr, pos, llm.sliding_window)
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = pos % W
+    if pos.ndim == 0:
+        pos_arr = jax.lax.dynamic_update_slice(
+            cache["positions"],
+            jnp.broadcast_to(pos, (B, 1)), (0, slot))
+        mask = cache_mask(pos_arr, pos, llm.sliding_window)
+        positions = jnp.broadcast_to(pos, (B, 1))
+    else:                               # per-row ring slots + masks
+        pos_arr = cache["positions"].at[jnp.arange(B), slot].set(pos)
+        mask = cache_mask(pos_arr, pos[:, None], llm.sliding_window)
+        positions = pos[:, None]
     spec = stack.layer_groups(llm)[0]
     x, kv = stack.group_decode(p["groups"][0], llm, spec, x, positions,
                                cache["groups"][0], slot, mask)

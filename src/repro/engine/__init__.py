@@ -1,0 +1,27 @@
+"""AVERY engine: the intent-driven request/response front door.
+
+  api        — Request / Response / StreamEvent / RequestFuture
+  transport  — Transport protocol; ChannelTransport, LoopbackTransport
+  policy     — ControlPolicy protocol; Adaptive / StaticTier / BestEffort
+  inflight   — token-level continuous batching (join a running decode)
+  engine     — AveryEngine + OperatorSession
+
+All entry points (serving launcher, mission simulator, fleet runtime,
+benchmarks) construct and drive the system through this package.
+"""
+from repro.engine.api import Request, RequestFuture, Response, StreamEvent
+from repro.engine.engine import AveryEngine, OperatorSession
+from repro.engine.inflight import InflightDecoder
+from repro.engine.policy import (AdaptivePolicy, BestEffortPolicy,
+                                 ControlPolicy, StaticTierPolicy,
+                                 TierDecision, policy_from_mode)
+from repro.engine.transport import (ChannelTransport, LoopbackTransport,
+                                    Transport)
+
+__all__ = [
+    "Request", "Response", "StreamEvent", "RequestFuture",
+    "AveryEngine", "OperatorSession", "InflightDecoder",
+    "ControlPolicy", "TierDecision", "AdaptivePolicy", "StaticTierPolicy",
+    "BestEffortPolicy", "policy_from_mode",
+    "Transport", "ChannelTransport", "LoopbackTransport",
+]

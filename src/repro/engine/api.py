@@ -1,0 +1,100 @@
+"""Typed request/response surface of the AVERY engine.
+
+Every way into the system — the serving launcher, the mission simulator,
+the fleet runtime, benchmarks — speaks these types. A ``Request`` is one
+operator utterance (prompt + optional frame + tokenised query) at a
+point in mission time; the engine classifies its intent, selects a tier
+through the active ``ControlPolicy``, moves the packet over the active
+``Transport``, and serves it on the cloud executor. The ``Response``
+carries the semantic product (answer logits / mask / generated tokens)
+plus the timing, energy, and batching telemetry the runtimes and
+benchmarks report. ``StreamEvent``s record the request's lifecycle for
+observability and tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.intent import Intent
+
+
+@dataclass
+class Request:
+    """One operator utterance submitted to the engine."""
+    prompt: str = ""
+    intent: Optional[Intent] = None    # None -> classified from the prompt
+    images: Optional[Any] = None       # edge frame(s) (real serving path)
+    query: Optional[np.ndarray] = None  # (B, L) tokenised model query
+    time_s: float = 0.0                # mission-clock submission time
+    # filled in by the engine
+    request_id: int = -1
+    operator_id: str = ""
+
+
+@dataclass
+class StreamEvent:
+    """Lifecycle marker: queued, tier_selected, transmitted, prefilled,
+    joined_batch, served, infeasible."""
+    kind: str
+    t: float = 0.0
+    data: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class Response:
+    request_id: int
+    operator_id: str
+    intent: Intent
+    tier_name: Optional[str] = None    # None for Context-stream requests
+    feasible: bool = True              # Algorithm-1 feasibility verdict
+    # semantic products
+    answer_logits: Optional[np.ndarray] = None
+    mask_logits: Optional[np.ndarray] = None
+    tokens: Optional[np.ndarray] = None
+    iou: Optional[float] = None        # profiled-mode fidelity measurement
+    # timing / energy / batching telemetry
+    t_submit: float = 0.0
+    t_delivered: float = 0.0           # packet delivery on the uplink
+    edge_compute_s: float = 0.0
+    edge_energy_j: float = 0.0
+    # device batch this request rode in: the microbatch size, or (in-
+    # flight path) the fractional mean of co-active slots over its steps
+    batch_size: float = 1.0
+    joined_step: Optional[int] = None  # in-flight: decode step it joined at
+    events: List[StreamEvent] = field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_delivered - self.t_submit
+
+
+class RequestFuture:
+    """Handle for an in-flight request. ``result()`` drives the owning
+    engine until the request is served (joining any running decode batch
+    on the way), so callers can fire-and-collect without hand-managing
+    the scheduler."""
+
+    def __init__(self, request: Request, engine: "Any"):
+        self.request = request
+        self._engine = engine
+        self._response: Optional[Response] = None
+        self.events: List[StreamEvent] = []
+
+    def emit(self, kind: str, t: float = 0.0, **data: Any) -> None:
+        self.events.append(StreamEvent(kind=kind, t=t, data=data))
+
+    def done(self) -> bool:
+        return self._response is not None
+
+    def set_result(self, response: Response) -> None:
+        response.events = self.events
+        self._response = response
+
+    def result(self) -> Response:
+        if self._response is None:
+            self._engine.drain()
+        assert self._response is not None, "engine.drain() left request open"
+        return self._response

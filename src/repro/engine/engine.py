@@ -1,0 +1,409 @@
+"""`AveryEngine` — the one front door to the AVERY system.
+
+Before the engine, every entry point (`launch/serve.py`,
+`runtime/mission.py`, `runtime/fleet.py`, each benchmark) hand-wired its
+own executor + controller + channel + scheduler loop. The engine owns
+that wiring once:
+
+    engine  = AveryEngine(lut=lut, executor=execu,
+                          transport=ChannelTransport.from_trace(trace),
+                          policy=AdaptivePolicy())
+    session = engine.session("operator-0")
+    future  = session.submit(prompt="segment the stranded person",
+                             images=frame, query=query, time_s=t)
+    ...
+    response = future.result()          # drives the engine to completion
+
+Per submission the engine runs the paper's full per-frame pipeline:
+Sense (``Transport.bandwidth``), Gate (intent classification), Evaluate/
+Select (``ControlPolicy``), edge compute (executor stages or the
+analytic Jetson model), packet transmission (``Transport.send``), and
+cloud serving — either closed tier-bucketed microbatches
+(``MicrobatchScheduler``) or the token-level in-flight batch
+(``InflightDecoder``), where a request submitted mid-decode joins the
+running batch between steps.
+
+``OperatorSession`` carries per-operator context: mission goal, intent
+requirements, prompt history, an optional per-UAV transport/policy
+override (the fleet runtime gives every UAV its own bandwidth share
+this way), and the fidelity oracle for profiled missions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import packets as pk
+from repro.core.controller import MissionGoal
+from repro.core.intent import (DEFAULT_REQUIREMENTS, Intent,
+                               IntentRequirements, classify_intent)
+from repro.core.lut import SystemLUT
+from repro.engine.api import Request, RequestFuture, Response
+from repro.engine.inflight import InflightDecoder
+from repro.engine.policy import AdaptivePolicy, ControlPolicy, TierDecision
+from repro.engine.transport import LoopbackTransport, Transport
+from repro.network.energy import EdgeDevice, edge_insight_flops
+
+BATCHING_MODES = ("microbatch", "generate", "inflight")
+
+
+@dataclass
+class OperatorSession:
+    """Per-operator (or per-UAV) context riding on a shared engine."""
+    engine: "AveryEngine"
+    operator_id: str
+    goal: MissionGoal = MissionGoal.PRIORITIZE_ACCURACY
+    finetuned: bool = False
+    requirements: Dict[Intent, IntentRequirements] = field(
+        default_factory=lambda: dict(DEFAULT_REQUIREMENTS))
+    # per-session overrides of the engine-level plug points (fleet: one
+    # uplink share and one controller per UAV)
+    transport: Optional[Transport] = None
+    policy: Optional[ControlPolicy] = None
+    oracle: Optional[Any] = None       # FidelityOracle for profiled frames
+    history: List[tuple] = field(default_factory=list)
+
+    def classify(self, prompt: str) -> Intent:
+        return classify_intent(prompt)
+
+    def submit(self, prompt: str = "", images: Any = None,
+               query: Optional[np.ndarray] = None, time_s: float = 0.0,
+               intent: Optional[Intent] = None) -> RequestFuture:
+        """Full serving path: edge inference -> transport -> cloud batch."""
+        return self.engine.submit(
+            Request(prompt=prompt, intent=intent, images=images, query=query,
+                    time_s=time_s), self)
+
+    def submit_frame(self, t: float,
+                     intent: Intent = Intent.INSIGHT) -> Response:
+        """Profiled mission frame: analytic edge model + LUT/oracle
+        fidelity instead of device inference (the §5.3 simulator path)."""
+        return self.engine.submit_frame(self, t, intent=intent)
+
+
+class AveryEngine:
+    """Owns the executor, LUT, scheduler/in-flight decoder, transports,
+    policies, and telemetry; all entry points drive it, none wire it."""
+
+    def __init__(self, lut: SystemLUT, executor: Any = None, *,
+                 transport: Optional[Transport] = None,
+                 policy: Optional[ControlPolicy] = None,
+                 max_batch: int = 8, batching: str = "microbatch",
+                 deploy: Any = None, edge_device: Optional[EdgeDevice] = None):
+        if batching not in BATCHING_MODES:
+            raise ValueError(f"batching must be one of {BATCHING_MODES}")
+        self.lut = lut
+        self.executor = executor
+        self.transport: Transport = transport or LoopbackTransport()
+        self.policy: ControlPolicy = policy or AdaptivePolicy()
+        self.batching = batching
+        self.max_batch = max_batch
+        self.edge_device = edge_device or EdgeDevice()
+        self._deploy = deploy
+        self._scheduler = None
+        if executor is not None and batching in ("microbatch", "generate"):
+            # runtime imports the engine package; defer the reverse edge
+            from repro.runtime.scheduler import MicrobatchScheduler
+            self._scheduler = MicrobatchScheduler(
+                executor=executor, max_batch=max_batch,
+                generate=(batching == "generate"))
+        self._inflight: Dict[int, InflightDecoder] = {}   # qlen -> decoder
+        self._retired_inflight = (0, 0)   # (steps, slot-steps) of evicted
+        self._futures: Dict[int, RequestFuture] = {}
+        self._order: List[int] = []
+        self._seq = 0
+        self.sessions: List[OperatorSession] = []
+        # telemetry
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_infeasible = 0
+
+    # ---- sessions ----
+
+    def session(self, operator_id: Optional[str] = None, **kwargs: Any
+                ) -> OperatorSession:
+        if operator_id is None:
+            operator_id = f"operator-{len(self.sessions)}"
+        sess = OperatorSession(engine=self, operator_id=operator_id, **kwargs)
+        self.sessions.append(sess)
+        return sess
+
+    @property
+    def deploy(self):
+        if self._deploy is None:
+            from repro.configs.lisa7b import CONFIG as deploy
+            self._deploy = deploy
+        return self._deploy
+
+    def bind_deploy(self, deploy: Any) -> None:
+        """Pin the edge deployment geometry on a shared engine; rejects a
+        conflicting rebind instead of silently using the wrong one."""
+        if deploy is None:
+            return
+        if self._deploy is not None and self._deploy is not deploy:
+            raise ValueError(
+                "engine already bound to a different deploy geometry")
+        self._deploy = deploy
+
+    # ---- the shared Sense/Gate/Select front ----
+
+    def _decide(self, session: OperatorSession, intent: Intent, t: float
+                ) -> tuple:
+        transport = session.transport or self.transport
+        policy = session.policy or self.policy
+        bw = transport.bandwidth(t)
+        decision = policy.select(bw, intent, session.requirements[intent],
+                                 self.lut, goal=session.goal,
+                                 finetuned=session.finetuned)
+        return transport, decision, bw
+
+    # ---- full serving path ----
+
+    def _register(self, request: Request, session: OperatorSession
+                  ) -> RequestFuture:
+        """Shared bookkeeping for every serving entry point."""
+        request.request_id, self._seq = self._seq, self._seq + 1
+        request.operator_id = session.operator_id
+        fut = RequestFuture(request, self)
+        self._futures[request.request_id] = fut
+        self._order.append(request.request_id)
+        self.n_submitted += 1
+        return fut
+
+    def submit(self, request: Request, session: OperatorSession
+               ) -> RequestFuture:
+        if self.executor is None:      # before any bookkeeping: a raise
+            raise RuntimeError(        # must not leave a ghost request
+                "this engine has no executor; real submissions need one "
+                "(profiled missions go through session.submit_frame)")
+        intent = request.intent
+        if intent is None:
+            intent = request.intent = session.classify(request.prompt)
+        session.history.append((request.time_s, request.prompt, intent))
+        fut = self._register(request, session)
+        t = request.time_s
+        transport, decision, bw = self._decide(session, intent, t)
+        fut.emit("tier_selected", t, bandwidth_mbps=bw,
+                 tier=decision.tier.name if decision.tier else None,
+                 feasible=decision.feasible)
+        if decision.stream == "insight" and decision.tier is None:
+            self.n_infeasible += 1
+            fut.emit("infeasible", t)
+            fut.set_result(Response(
+                request_id=request.request_id,
+                operator_id=session.operator_id, intent=intent,
+                feasible=False, t_submit=t, t_delivered=t))
+            return fut
+        if not decision.feasible:
+            self.n_infeasible += 1       # best-effort: served but starved
+        if intent is Intent.CONTEXT:
+            packet, _ = self.executor.edge_context(
+                request.images, request.request_id, t)
+        else:
+            packet = self.executor.edge_insight(
+                request.images, decision.tier, request.request_id, t)
+        rec = transport.send(packet, t)
+        fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
+        self._enqueue_cloud(fut, packet, request.query, decision, rec)
+        return fut
+
+    def submit_packet(self, packet: pk.Packet, query, intent: Intent,
+                      time_s: float = 0.0,
+                      session: Optional[OperatorSession] = None
+                      ) -> RequestFuture:
+        """Low-level entry: serve an already-encoded packet (benchmarks
+        and tests that prepare edge payloads out of band)."""
+        if self.executor is None:
+            raise RuntimeError(
+                "this engine has no executor; real submissions need one "
+                "(profiled missions go through session.submit_frame)")
+        session = session or (self.sessions[0] if self.sessions
+                              else self.session("_direct"))
+        fut = self._register(Request(intent=intent, query=np.asarray(query),
+                                     time_s=time_s), session)
+        request = fut.request
+        transport = session.transport or self.transport
+        rec = transport.send(packet, time_s)
+        decision = TierDecision(
+            stream=packet.kind,
+            tier=self.lut.by_name(packet.tier_name) if packet.tier_name
+            else None)
+        self._enqueue_cloud(fut, packet, request.query, decision, rec)
+        return fut
+
+    # ---- cloud dispatch: closed microbatches or the in-flight batch ----
+
+    def _enqueue_cloud(self, fut: RequestFuture, packet: pk.Packet, query,
+                       decision: TierDecision, rec: Any) -> None:
+        fut.meta = {"decision": decision, "rec": rec}
+        rid = fut.request.request_id
+        if self.batching == "inflight":
+            qlen = int(np.asarray(query).shape[-1])
+            dec = self._inflight.get(qlen)
+            if dec is None:
+                dec = self._inflight[qlen] = InflightDecoder(
+                    self.executor, slots=self.max_batch)
+            dec.submit(rid, fut.request.intent, packet, query,
+                       on_done=self._resolve_inflight)
+            # actual admission may happen steps later if slots are full;
+            # the decoder stamps the real join point on the response
+            fut.emit("queued", rec.end_s)
+            dec.pump(1)              # keep the batch running between submits
+            return
+        from repro.runtime.scheduler import ServeRequest
+        self._scheduler.submit(ServeRequest(
+            seq_id=rid, intent=fut.request.intent, packet=packet,
+            query=np.asarray(query), arrival_s=fut.request.time_s))
+        for res in self._scheduler.step_ready():
+            self._resolve_scheduled(res)
+
+    def _base_response(self, fut: RequestFuture, **kw: Any) -> Response:
+        rec = fut.meta["rec"]
+        decision: TierDecision = fut.meta["decision"]
+        return Response(
+            request_id=fut.request.request_id,
+            operator_id=fut.request.operator_id,
+            intent=fut.request.intent,
+            tier_name=decision.tier.name if decision.tier else None,
+            feasible=decision.feasible, t_submit=fut.request.time_s,
+            t_delivered=rec.end_s, **kw)
+
+    def _resolve_scheduled(self, res: Any) -> None:
+        fut = self._futures[res.seq_id]
+        fut.emit("served", fut.meta["rec"].end_s, batch_size=res.batch_size)
+        fut.set_result(self._base_response(
+            fut, answer_logits=res.answer_logits,
+            mask_logits=res.mask_logits, tokens=res.tokens,
+            batch_size=res.batch_size))
+        self.n_completed += 1
+
+    def _resolve_inflight(self, out: Dict[str, Any]) -> None:
+        fut = self._futures[out["seq_id"]]
+        fut.emit("served", fut.meta["rec"].end_s,
+                 joined_step=out["joined_step"])
+        resp = self._base_response(
+            fut, answer_logits=out["answer_logits"],
+            mask_logits=out["mask_logits"], tokens=out["tokens"],
+            batch_size=out["batch_size"])
+        resp.joined_step = out["joined_step"]
+        fut.set_result(resp)
+        self.n_completed += 1
+
+    def pump(self) -> None:
+        """Advance cloud serving without waiting: serve any full
+        microbatches, or one in-flight decode step per live decoder."""
+        if self._scheduler is not None:
+            for res in self._scheduler.step_ready():
+                self._resolve_scheduled(res)
+        for dec in self._inflight.values():
+            dec.pump(1)
+
+    def drain(self) -> List[Response]:
+        """Serve everything outstanding. Returns the responses delivered
+        since the last drain, in submission order — delivered requests
+        are evicted from the engine's tables (their ``RequestFuture``
+        keeps the response), so a submit/drain/submit stream neither
+        re-returns history nor accumulates served payloads."""
+        if self._scheduler is not None:
+            for res in self._scheduler.drain():
+                self._resolve_scheduled(res)
+        for qlen, dec in list(self._inflight.items()):
+            dec.drain()
+            # retire the idle decoder: fold its counters into the engine
+            # and drop it so per-qlen decoders don't accumulate forever
+            steps, slots = self._retired_inflight
+            self._retired_inflight = (steps + dec.n_steps,
+                                      slots + dec.n_slot_steps)
+            del self._inflight[qlen]
+        out, remaining = [], []
+        for rid in self._order:
+            fut = self._futures[rid]
+            if fut.done():
+                out.append(fut._response)
+                del self._futures[rid]
+            else:
+                remaining.append(rid)
+        self._order = remaining
+        return out
+
+    # ---- profiled mission path (analytic edge + LUT/oracle fidelity) ----
+
+    def submit_frame(self, session: OperatorSession, t: float,
+                     intent: Intent = Intent.INSIGHT) -> Response:
+        rid, self._seq = self._seq, self._seq + 1
+        self.n_submitted += 1
+        transport, decision, bw = self._decide(session, intent, t)
+        if decision.stream == "context":
+            return self._context_frame(session, transport, rid, t)
+        if decision.tier is None:
+            self.n_infeasible += 1
+            return Response(request_id=rid, operator_id=session.operator_id,
+                            intent=intent, feasible=False, t_submit=t,
+                            t_delivered=t)
+        tier = decision.tier
+        if not decision.feasible:
+            self.n_infeasible += 1
+        flops = edge_insight_flops(self.deploy, tier.ratio)
+        compute_s = self.edge_device.latency_s(flops)
+        energy = (self.edge_device.compute_energy_j(flops)
+                  + self.edge_device.tx_energy_j(tier.payload_mb * 1e6))
+        packet = pk.Packet(kind="insight", tier_name=tier.name, seq_id=rid,
+                           created_at=t,
+                           payload_bytes=int(tier.payload_mb * 1e6))
+        rec = transport.send(packet, t + compute_s)
+        iou = (session.oracle.measure(tier)
+               if session.oracle is not None else None)
+        self.n_completed += 1
+        return Response(request_id=rid, operator_id=session.operator_id,
+                        intent=intent, tier_name=tier.name,
+                        feasible=decision.feasible, iou=iou, t_submit=t,
+                        t_delivered=rec.end_s, edge_compute_s=compute_s,
+                        edge_energy_j=energy)
+
+    def _context_frame(self, session: OperatorSession, transport: Transport,
+                       rid: int, t: float) -> Response:
+        """Profiled Context-stream frame: the CLIP-only edge pathway and
+        the fixed lightweight payload (always feasible, no tier)."""
+        from repro.network.energy import encoder_flops, patch_embed_flops
+        deploy = self.deploy
+        flops = (patch_embed_flops(deploy.clip.d_model,
+                                   deploy.context_patch_size,
+                                   deploy.clip_tokens)
+                 + encoder_flops(deploy.clip, deploy.clip_tokens))
+        compute_s = self.edge_device.latency_s(flops)
+        payload_mb = self.lut.context.payload_mb
+        energy = (self.edge_device.compute_energy_j(flops)
+                  + self.edge_device.tx_energy_j(payload_mb * 1e6))
+        packet = pk.Packet(kind="context", tier_name=None, seq_id=rid,
+                           created_at=t,
+                           payload_bytes=int(payload_mb * 1e6))
+        rec = transport.send(packet, t + compute_s)
+        self.n_completed += 1
+        return Response(request_id=rid, operator_id=session.operator_id,
+                        intent=Intent.CONTEXT, tier_name=None, feasible=True,
+                        t_submit=t, t_delivered=rec.end_s,
+                        edge_compute_s=compute_s, edge_energy_j=energy)
+
+    # ---- telemetry ----
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        out: Dict[str, float] = {
+            "submitted": self.n_submitted,
+            "completed": self.n_completed,
+            "infeasible": self.n_infeasible,
+        }
+        if self._scheduler is not None:
+            out["n_microbatches"] = self._scheduler.n_microbatches
+            out["mean_batch_size"] = self._scheduler.mean_batch_size
+        if self.batching == "inflight":
+            steps, slots = self._retired_inflight
+            steps += sum(d.n_steps for d in self._inflight.values())
+            slots += sum(d.n_slot_steps for d in self._inflight.values())
+            out["inflight_steps"] = steps
+            out["mean_live_slots"] = slots / steps if steps else 0.0
+        if self.executor is not None:
+            out["compiled_stages"] = self.executor.num_compiled_stages
+        return out

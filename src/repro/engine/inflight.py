@@ -1,0 +1,199 @@
+"""Token-level continuous batching: the in-flight decode batch.
+
+The ``MicrobatchScheduler`` closes a microbatch before serving it — a
+request that arrives one step after a generate batch launched waits for
+the whole batch. The ``InflightDecoder`` removes that barrier: it owns a
+fixed-slot batched KV cache and advances it one decode step at a time
+with *per-row* positions, so between any two steps a newly arrived
+request can be prefilled into a free slot and ride the remaining steps
+of the running batch (ROADMAP "in-flight batching" item, the vLLM-style
+continuous batching discipline).
+
+Per slot lifecycle (mirroring ``vlm.llm_generate``'s seg convention):
+prefill over [ctx; query] emits token 0; each lockstep decode step feeds
+the slot's last token at its own position; after ``T`` steps the slot's
+final step has read the <SEG> hidden state at the last generated token,
+the mask decodes from the stored SAM features, and the slot frees for
+the next pending request. Slots may mix tiers and intents — the decode
+loop runs on the LLM cache only; tier-specific work (bottleneck decode,
+SAM tail) happened at prefill. Context requests ride the same T decode
+steps as Insight ones: the serving contract is a T-token answer for both
+streams, matching ``cloud_generate_batch`` exactly (the equivalence
+tests pin token-level parity).
+
+One decoder serves one query length, each with its own ``slots``-wide
+cache — ``max_batch`` caps concurrency per qlen, not globally; idle
+decoders release their cache and are retired by ``AveryEngine.drain``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import packets as pk
+from repro.core.intent import Intent
+
+
+@dataclass
+class _PendingRequest:
+    seq_id: int
+    intent: Intent
+    packet: pk.Packet
+    query: np.ndarray
+    on_done: Callable[[Dict[str, Any]], None]
+
+
+@dataclass
+class _SlotState:
+    req: _PendingRequest
+    tokens: List[int]                 # greedy answer tokens so far
+    logits0: np.ndarray               # (1, V) first-token logits
+    feats: Optional[Any]              # (1, T_sam, d_sam) or None (context)
+    pos: int                          # absolute position of the next token
+    joined_step: int                  # global step index at admission
+    steps_done: int = 0
+    batch_acc: int = 0                # sum of co-active slots over steps
+
+
+class InflightDecoder:
+    """Drives the executor's in-flight stages over a fixed slot layout.
+
+    One decoder serves one query length (the prefill shape); the engine
+    keys decoders by qlen the same way the microbatch scheduler keys
+    batches. ``submit`` admits into a free slot immediately (prefill +
+    cache scatter); ``step`` advances every live slot one token;
+    ``drain`` runs admission + steps until no work remains.
+    """
+
+    def __init__(self, executor, slots: int = 8):
+        self.executor = executor
+        self.slots = int(slots)
+        self.T = int(executor.max_new_tokens)
+        self.pending: Deque[_PendingRequest] = deque()
+        self.active: Dict[int, _SlotState] = {}
+        self.cache = None
+        self.qlen: Optional[int] = None
+        self.step_idx = 0                 # global decode-step counter
+        self.n_steps = 0
+        self.n_slot_steps = 0             # sum of live slots across steps
+        self.n_served = 0
+
+    # ---- queueing ----
+
+    def submit(self, seq_id: int, intent: Intent, packet: pk.Packet, query,
+               on_done: Callable[[Dict[str, Any]], None]) -> None:
+        query = np.asarray(query).reshape(-1, np.asarray(query).shape[-1])
+        if query.shape[0] != 1:
+            raise ValueError(
+                "in-flight slots hold one sequence each; split "
+                f"{query.shape[0]}-row packets at the edge")
+        if self.qlen is None:
+            self.qlen = int(query.shape[-1])
+        elif int(query.shape[-1]) != self.qlen:
+            raise ValueError(
+                f"decoder serves qlen={self.qlen}, got {query.shape[-1]}")
+        self.pending.append(_PendingRequest(seq_id, intent, packet, query,
+                                            on_done))
+        self.admit()
+
+    @property
+    def width(self) -> int:
+        return self.executor.pcfg.clip_tokens + self.qlen + self.T
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)
+
+    # ---- admission: prefill into free slots between steps ----
+
+    def admit(self) -> int:
+        admitted = 0
+        while self.pending and len(self.active) < self.slots:
+            item = self.pending.popleft()
+            logits0, cache1, feats = self.executor.cloud_prefill(
+                item.packet, item.query, width=self.width)
+            if self.cache is None:
+                self.cache = self.executor.empty_decode_cache(cache1,
+                                                              self.slots)
+            slot = min(set(range(self.slots)) - set(self.active))
+            self.cache = self.executor.cache_insert(self.cache, cache1, slot)
+            logits0 = np.asarray(logits0)
+            self.active[slot] = _SlotState(
+                req=item, tokens=[int(np.argmax(logits0[0]))],
+                logits0=logits0, feats=feats,
+                pos=self.executor.pcfg.clip_tokens + self.qlen,
+                joined_step=self.step_idx)
+            admitted += 1
+        return admitted
+
+    # ---- the lockstep decode step ----
+
+    def step(self) -> int:
+        """Advance every live slot one token (no-op when idle); returns
+        the number of requests that finished on this step."""
+        if not self.active:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        # free slots decode garbage into their own (about-to-be-
+        # overwritten) rows; park them on the last ring slot
+        pos = np.full((self.slots,), self.width - 1, np.int32)
+        for s, st in self.active.items():
+            toks[s, 0] = st.tokens[-1]
+            pos[s] = st.pos
+        logits, seg, self.cache = self.executor.cloud_decode_rows(
+            self.cache, toks, pos)
+        logits, seg = np.asarray(logits), np.asarray(seg)
+        live = len(self.active)
+        self.n_steps += 1
+        self.n_slot_steps += live
+        finished = 0
+        for s, st in list(self.active.items()):
+            st.steps_done += 1
+            st.batch_acc += live
+            if st.steps_done < self.T:
+                st.tokens.append(int(np.argmax(logits[s])))
+                st.pos += 1
+                continue
+            # final step: this row's seg is the <SEG> state at the last
+            # generated token (llm_generate's convention for every T)
+            mask = None
+            if st.feats is not None:
+                mask = np.asarray(self.executor.cloud_mask(
+                    st.feats, seg[s:s + 1]))
+            st.req.on_done({
+                "seq_id": st.req.seq_id,
+                "intent": st.req.intent,
+                "tier_name": st.req.packet.tier_name,
+                "answer_logits": st.logits0,
+                "mask_logits": mask,
+                "tokens": np.asarray(st.tokens, np.int32)[None, :],
+                "batch_size": st.batch_acc / max(1, st.steps_done),
+                "joined_step": st.joined_step,
+            })
+            del self.active[s]
+            self.n_served += 1
+            finished += 1
+        self.step_idx += 1
+        if finished:
+            self.admit()              # freed slots let queued requests in
+        if not self.active and not self.pending:
+            self.cache = None         # release the slot KV between bursts
+        return finished
+
+    def pump(self, max_steps: int = 1) -> None:
+        for _ in range(max_steps):
+            if not self.active:
+                break
+            self.step()
+
+    def drain(self) -> None:
+        self.admit()
+        while self.active:
+            self.step()
+
+    @property
+    def mean_live_slots(self) -> float:
+        return self.n_slot_steps / max(1, self.n_steps)

@@ -1,0 +1,118 @@
+"""Control-policy plug point: how the engine picks an operating tier.
+
+The paper's §5.3 adaptive-vs-static comparison is a policy swap, not a
+``mode=`` string: every policy maps (sensed bandwidth, intent,
+requirements, LUT, mission goal) to a ``TierDecision``. Three ship:
+
+  * ``AdaptivePolicy`` — Algorithm 1 verbatim (Sense/Gate/Evaluate/
+    Select via ``core.controller.select_configuration``); an empty
+    feasible set yields ``tier=None, feasible=False`` (the mission
+    idles that frame).
+  * ``StaticTierPolicy`` — the fixed-tier baselines (High Accuracy /
+    Balanced / High Throughput); never checks feasibility, matching the
+    paper's static baselines that keep transmitting into a degraded
+    link.
+  * ``BestEffortPolicy`` — adaptive with graceful degradation (the
+    fleet finding): when no tier satisfies F_I it transmits the
+    lightest tier anyway, reporting ``feasible=False`` so starvation is
+    still accounted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.core.controller import (MissionGoal, NoFeasibleInsightTier,
+                                   PowerConfig, select_configuration)
+from repro.core.intent import Intent, IntentRequirements
+from repro.core.lut import SystemLUT, Tier
+
+
+@dataclass(frozen=True)
+class TierDecision:
+    """A policy's verdict for one request."""
+    stream: str                       # "context" | "insight"
+    tier: Optional[Tier]              # None: Context stream or infeasible
+    feasible: bool = True             # F_I/Q_I satisfied by the choice
+    throughput_pps: float = 0.0       # induced update rate f*
+
+
+@runtime_checkable
+class ControlPolicy(Protocol):
+    def select(self, bandwidth_mbps: float, intent: Intent,
+               requirements: IntentRequirements, lut: SystemLUT, *,
+               goal: MissionGoal = MissionGoal.PRIORITIZE_ACCURACY,
+               finetuned: bool = False) -> TierDecision:
+        ...
+
+
+def _context_decision(bandwidth_mbps: float, lut: SystemLUT) -> TierDecision:
+    return TierDecision(stream="context", tier=None, feasible=True,
+                        throughput_pps=lut.context.max_pps(bandwidth_mbps))
+
+
+@dataclass(frozen=True)
+class AdaptivePolicy:
+    """Algorithm 1: adaptive tier selection under the mission goal."""
+    power: PowerConfig = field(default_factory=PowerConfig)
+
+    def select(self, bandwidth_mbps, intent, requirements, lut, *,
+               goal=MissionGoal.PRIORITIZE_ACCURACY,
+               finetuned=False) -> TierDecision:
+        if intent is not Intent.INSIGHT:
+            return _context_decision(bandwidth_mbps, lut)
+        try:
+            sel = select_configuration(bandwidth_mbps, self.power, goal,
+                                       intent, requirements, lut,
+                                       finetuned=finetuned)
+        except NoFeasibleInsightTier:
+            return TierDecision(stream="insight", tier=None, feasible=False)
+        return TierDecision(stream="insight", tier=sel.tier, feasible=True,
+                            throughput_pps=sel.throughput_pps)
+
+
+@dataclass(frozen=True)
+class StaticTierPolicy:
+    """Fixed-tier baseline: always transmit ``tier_name`` (§5.3.1)."""
+    tier_name: str
+
+    def select(self, bandwidth_mbps, intent, requirements, lut, *,
+               goal=MissionGoal.PRIORITIZE_ACCURACY,
+               finetuned=False) -> TierDecision:
+        if intent is not Intent.INSIGHT:
+            return _context_decision(bandwidth_mbps, lut)
+        tier = lut.by_name(self.tier_name)
+        return TierDecision(stream="insight", tier=tier, feasible=True,
+                            throughput_pps=tier.max_pps(bandwidth_mbps))
+
+
+@dataclass(frozen=True)
+class BestEffortPolicy:
+    """Adaptive with graceful degradation: infeasible frames transmit the
+    lightest tier instead of idling, flagged ``feasible=False``."""
+    inner: AdaptivePolicy = field(default_factory=AdaptivePolicy)
+
+    def select(self, bandwidth_mbps, intent, requirements, lut, *,
+               goal=MissionGoal.PRIORITIZE_ACCURACY,
+               finetuned=False) -> TierDecision:
+        decision = self.inner.select(bandwidth_mbps, intent, requirements,
+                                     lut, goal=goal, finetuned=finetuned)
+        if decision.stream == "insight" and decision.tier is None:
+            tier = min(lut.tiers, key=lambda t: t.payload_mb)
+            return TierDecision(stream="insight", tier=tier, feasible=False,
+                                throughput_pps=tier.max_pps(bandwidth_mbps))
+        return decision
+
+
+def policy_from_mode(mode: str, static_tier: Optional[str] = None,
+                     fallback: bool = False) -> ControlPolicy:
+    """Deprecation shim: map the pre-engine ``MissionSpec`` knobs
+    (``mode="avery"|"static"``, ``static_tier=``, ``fallback=``) onto the
+    policy objects. New code should pass a policy directly."""
+    if mode == "static":
+        if static_tier is None:
+            raise ValueError("mode='static' requires static_tier")
+        return StaticTierPolicy(static_tier)
+    if mode != "avery":
+        raise ValueError(f"unknown mission mode {mode!r}")
+    return BestEffortPolicy() if fallback else AdaptivePolicy()

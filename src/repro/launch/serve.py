@@ -31,63 +31,66 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def serve_local(duration_s: float, seed: int, max_batch: int = 8) -> None:
+def serve_local(duration_s: float, seed: int, max_batch: int = 8,
+                smoke: bool = False, batching: str = "microbatch") -> None:
+    """Closed-loop local serving through the ``AveryEngine`` front door.
+
+    ``smoke=True`` skips the offline training phase (random-init weights,
+    paper LUT) so CI can exercise the full engine path — intent gate,
+    policy, transport, batched cloud serving — in seconds. ``batching``
+    picks the cloud discipline: closed tier-bucketed microbatches or the
+    token-level in-flight batch (``"inflight"``)."""
     from repro.configs.lisa_mini import CONFIG as pcfg
-    from repro.core import (DualStreamExecutor, MissionGoal, classify_intent,
-                            Intent, paper_lut)
-    from repro.core import profile as prof
-    from repro.core.controller import PowerConfig, select_configuration
-    from repro.core.intent import DEFAULT_REQUIREMENTS
+    from repro.core import DualStreamExecutor, Intent
     from repro.core.vlm import iou_metrics
     from repro.data import floodseg, requests
-    from repro.network import Channel, paper_trace
-    from repro.runtime.scheduler import MicrobatchScheduler, ServeRequest
+    from repro.engine import AdaptivePolicy, AveryEngine, ChannelTransport
+    from repro.network import paper_trace
 
-    print("[serve] training lisa-mini system (offline phase, small budget)")
-    params, params_ft, bns = prof.train_full_system(
-        pcfg, steps=120, bn_steps=80, ft_steps=60, log=lambda s: None)
-    lut = prof.build_lut(pcfg, params, params_ft, bns, eval_batches=2)
-    execu = DualStreamExecutor(
-        pcfg=pcfg, params=params,
-        bottlenecks={lut.tiers[i].name: bns[r]
-                     for i, r in enumerate(sorted(bns, reverse=True))},
-        lut=lut)
-    sched = MicrobatchScheduler(executor=execu, max_batch=max_batch)
+    from repro.core import profile as prof
+    if smoke:
+        print("[serve] smoke mode: random-init weights, paper LUT")
+        params, bns_by_name, lut = prof.random_init_system(pcfg, seed=seed)
+    else:
+        print("[serve] training lisa-mini system (offline phase, small "
+              "budget)")
+        params, params_ft, bns = prof.train_full_system(
+            pcfg, steps=120, bn_steps=80, ft_steps=60, log=lambda s: None)
+        lut = prof.build_lut(pcfg, params, params_ft, bns, eval_batches=2)
+        bns_by_name = {lut.tiers[i].name: bns[r]
+                       for i, r in enumerate(sorted(bns, reverse=True))}
+    execu = DualStreamExecutor(pcfg=pcfg, params=params,
+                               bottlenecks=bns_by_name, lut=lut)
     trace = paper_trace(seed=seed, duration_s=int(duration_s))
-    channel = Channel(trace)
+    engine = AveryEngine(
+        lut=lut, executor=execu,
+        transport=ChannelTransport.from_trace(trace),
+        policy=AdaptivePolicy(), max_batch=max_batch, batching=batching)
+    session = engine.session("operator-0")
     rng = np.random.RandomState(seed)
 
-    # edge loop: encode each frame, put the packet on the channel, and hand
-    # it to the cloud scheduler; full microbatches are served as soon as
-    # they form (continuous batching), stragglers at the end of the stream
+    # edge loop: each operator request goes through the engine — intent
+    # gate, tier policy, edge encode, channel, cloud scheduler; full
+    # microbatches are served as soon as they form (continuous batching),
+    # stragglers at the end of the stream
     truth = {}
-    results = []
-    seq = 0
+    futures = []
     for req in requests.mission_requests(seed, duration_s):
-        intent = classify_intent(req.prompt)
         batch = floodseg.make_batch(rng, 1, req.kind, augment=False,
                                     cls=req.cls)
-        images = jnp.asarray(batch["images"])
-        if intent is Intent.CONTEXT:
-            pkt, _ = execu.edge_context(images, seq, req.time_s)
-        else:
-            sel = select_configuration(
-                channel.measure_bandwidth(req.time_s), PowerConfig(),
-                MissionGoal.PRIORITIZE_ACCURACY, Intent.INSIGHT,
-                DEFAULT_REQUIREMENTS[Intent.INSIGHT], lut)
-            pkt = execu.edge_insight(images, sel.tier, seq, req.time_s)
-        channel.transmit(pkt, req.time_s)
-        sched.submit(ServeRequest(seq_id=seq, intent=intent, packet=pkt,
-                                  query=batch["query"],
-                                  arrival_s=req.time_s))
-        truth[seq] = batch
-        results.extend(sched.step_ready())
-        seq += 1
-    results.extend(sched.drain())
+        fut = session.submit(prompt=req.prompt,
+                             images=jnp.asarray(batch["images"]),
+                             query=batch["query"], time_s=req.time_s)
+        truth[fut.request.request_id] = batch
+        futures.append(fut)
+    engine.drain()
 
     ious, ctx_correct = [], []
-    for res in results:
-        batch = truth[res.seq_id]
+    for fut in futures:
+        res = fut.result()
+        if not res.feasible:           # no tier sustained F_I: never served
+            continue
+        batch = truth[res.request_id]
         if res.intent is Intent.CONTEXT:
             ctx_correct.append(
                 float(np.argmax(res.answer_logits[0]) == batch["answer"][0]))
@@ -95,15 +98,20 @@ def serve_local(duration_s: float, seed: int, max_batch: int = 8) -> None:
             m = iou_metrics(jnp.asarray(res.mask_logits),
                             jnp.asarray(batch["mask"]))
             ious.append(float(m["avg_iou"]))
+    stats = engine.stats
+    detail = (f"{stats['inflight_steps']:.0f} in-flight decode steps (mean "
+              f"{stats['mean_live_slots']:.1f} live slots"
+              if batching == "inflight" else
+              f"{stats['n_microbatches']:.0f} microbatches (mean batch "
+              f"{stats['mean_batch_size']:.1f}")
     print(f"[serve] served {len(ctx_correct)} context + {len(ious)} insight "
-          f"requests over {duration_s:.0f}s in {sched.n_microbatches} "
-          f"microbatches (mean batch {sched.mean_batch_size:.1f}, "
-          f"{execu.num_compiled_stages} compiled cloud stages)")
+          f"requests over {duration_s:.0f}s in {detail}, "
+          f"{stats['compiled_stages']:.0f} compiled cloud stages)")
     if ctx_correct:
         print(f"[serve] context answer accuracy: {np.mean(ctx_correct):.3f}")
     if ious:
         print(f"[serve] insight Average IoU:     {np.mean(ious):.3f}")
-    lat = [r.latency_s for r in channel.log]
+    lat = [r.latency_s for r in engine.transport.records]
     print(f"[serve] mean packet latency: {np.mean(lat):.3f}s "
           f"(p95 {np.percentile(lat, 95):.3f}s)")
 
@@ -181,12 +189,20 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-batch", type=int, default=8,
-                    help="cloud scheduler microbatch cap")
+                    help="cloud scheduler microbatch / in-flight slot cap")
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip offline training: random-init weights + "
+                         "paper LUT (fast engine smoke for CI)")
+    ap.add_argument("--batching", choices=("microbatch", "inflight"),
+                    default="microbatch",
+                    help="cloud serving discipline: closed microbatches or "
+                         "token-level in-flight batching")
     args = ap.parse_args()
     if args.dryrun:
         serve_dryrun()
     else:
-        serve_local(args.duration, args.seed, args.max_batch)
+        serve_local(args.duration, args.seed, args.max_batch,
+                    smoke=args.smoke, batching=args.batching)
 
 
 if __name__ == "__main__":

@@ -150,7 +150,8 @@ def gqa_full(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
 
 def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
                cache: dict, slot: jax.Array, mask: jax.Array) -> Tuple[jax.Array, dict]:
-    """Single-token decode. x (B,1,d); cache k/v (B,W,K,hd); slot scalar;
+    """Single-token decode. x (B,1,d); cache k/v (B,W,K,hd); slot scalar
+    (shared ring slot) or (B,) vector (per-row slots, in-flight batching);
     mask (B,W) additive over cache slots (already includes the new token's
     slot as valid)."""
     B, S, d = x.shape
@@ -168,8 +169,15 @@ def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         q = wsc(q, "BATCH", None, None, "model")
         k = wsc(k, "BATCH", None, None, "model")
         v = wsc(v, "BATCH", None, None, "model")
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    if jnp.ndim(slot) == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                      axis=1)
+    else:                               # per-row scatter into the ring
+        rows = jnp.arange(B)
+        k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+        v_cache = cache["v"].at[rows, slot].set(v[:, 0])
     if cfg.use_flash_decode and S == 1 and not cfg.shard_cache_hd:
         from repro.kernels.decode_attention import ops as decode_ops
         out = decode_ops.decode_attention(q[:, 0], k_cache, v_cache,
@@ -306,6 +314,10 @@ def attn_full(p, cfg: ModelConfig, x, positions, mask):
 
 def attn_decode(p, cfg: ModelConfig, x, positions, cache, slot, mask):
     if cfg.attn_type == "mla":
+        if jnp.ndim(slot) != 0:
+            raise NotImplementedError(
+                "per-row decode slots (in-flight batching) are only "
+                "implemented for the GQA cache layout")
         return mla_decode(p, cfg, x, positions, cache, slot, mask)
     return gqa_decode(p, cfg, x, positions, cache, slot, mask)
 

@@ -164,7 +164,9 @@ def cache_mask(cache_positions: jax.Array, pos: jax.Array,
     """Additive mask over cache slots for single-token decode.
 
     cache_positions: (B, W) absolute position stored in each slot (-1 = empty).
-    pos: scalar int32 — the position of the token being decoded.
+    pos: int32 position of the token being decoded — scalar, or (B, 1)
+    for per-row positions (in-flight batching); both broadcast against
+    the (B, W) slot positions.
     """
     ok = (cache_positions >= 0) & (cache_positions <= pos)
     if window is not None:

@@ -77,3 +77,33 @@ def bottleneck_flops(d: int, rank: int, seq: int) -> float:
 
 def patch_embed_flops(d: int, patch: int, seq: int, in_ch: int = 3) -> float:
     return float(2 * seq * patch * patch * in_ch * d)
+
+
+# ---------------------------------------------------------------------------
+# per-frame edge cost at a deployment geometry (used by the engine's
+# profiled mission path; previously lived in runtime.mission)
+# ---------------------------------------------------------------------------
+
+
+def edge_insight_flops(deploy, ratio: float) -> float:
+    """Edge-side FLOPs per Insight frame at the deployment geometry:
+    patch embed + SAM blocks [0, k) + bottleneck encode + CLIP encoder.
+    ``deploy`` is a ``LISAPipelineConfig``."""
+    from repro.core import bottleneck as bn
+    d = deploy.sam.d_model
+    orig_bytes = 2 if deploy.sam.param_dtype == "bfloat16" else 4
+    rank = bn.rank_for_ratio(d, ratio, orig_bytes)
+    return (patch_embed_flops(d, deploy.patch_size, deploy.sam_tokens)
+            + encoder_flops(deploy.sam, deploy.sam_tokens,
+                            deploy.split_layer)
+            + bottleneck_flops(d, rank, deploy.sam_tokens)
+            + patch_embed_flops(deploy.clip.d_model,
+                                deploy.context_patch_size, deploy.clip_tokens)
+            + encoder_flops(deploy.clip, deploy.clip_tokens))
+
+
+def full_edge_flops(deploy) -> float:
+    """Full onboard execution of the Insight segmentation backbone."""
+    d = deploy.sam.d_model
+    return (patch_embed_flops(d, deploy.patch_size, deploy.sam_tokens)
+            + encoder_flops(deploy.sam, deploy.sam_tokens))

@@ -1,9 +1,9 @@
-from repro.runtime.mission import (FrameResult, MissionLog, MissionSpec,
-                                   edge_insight_flops, full_edge_flops,
-                                   run_mission)
+from repro.runtime.mission import (FidelityOracle, FrameResult, MissionLog,
+                                   MissionSpec, edge_insight_flops,
+                                   full_edge_flops, run_mission)
 from repro.runtime.scheduler import (MicrobatchScheduler, ServeRequest,
                                      ServeResult)
 
-__all__ = ["MissionSpec", "MissionLog", "FrameResult", "run_mission",
-           "edge_insight_flops", "full_edge_flops",
+__all__ = ["MissionSpec", "MissionLog", "FrameResult", "FidelityOracle",
+           "run_mission", "edge_insight_flops", "full_edge_flops",
            "MicrobatchScheduler", "ServeRequest", "ServeResult"]

@@ -4,20 +4,24 @@ intent-driven semantic adaptation remains beneficial at larger system
 scale").
 
 Model: N UAVs share one uplink cell. The scheduler grants each UAV an
-equal bandwidth share (B_t / N); each UAV runs its own Algorithm-1
-controller against its share. This is the conservative fair-share model —
-no cross-UAV coordination — so it lower-bounds what a coordinating
-controller could do, and directly answers the paper's question: adaptive
-tiering degrades gracefully with fleet size while static tiers fall off
-a feasibility cliff."""
+equal bandwidth share (B_t / N); each UAV is an ``OperatorSession`` on
+one shared ``AveryEngine`` — its own ``ChannelTransport`` over the
+share, its own controller policy — while the cloud executor, fidelity
+oracle, and telemetry are engine-level and shared. This is the
+conservative fair-share model — no cross-UAV coordination — so it
+lower-bounds what a coordinating controller could do, and directly
+answers the paper's question: adaptive tiering degrades gracefully with
+fleet size while static tiers fall off a feasibility cliff."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List
+import dataclasses
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 
 from repro.core.lut import SystemLUT
+from repro.engine import AveryEngine
 from repro.network.traces import BandwidthTrace
 from repro.runtime.mission import (FidelityOracle, MissionLog, MissionSpec,
                                    run_mission)
@@ -44,25 +48,23 @@ class FleetResult:
 
 
 def run_fleet(lut: SystemLUT, trace: BandwidthTrace, n_uavs: int,
-              spec: MissionSpec, executor=None) -> FleetResult:
+              spec: MissionSpec, executor=None, deploy=None) -> FleetResult:
     """Equal-share scheduler: each UAV sees trace/N.
 
-    With ``executor`` per-frame fidelity comes from real lisa-mini
-    inference on the shared cloud executor: all N missions report into one
-    ``FidelityOracle`` whose evaluation pool and per-(tier, scene)
-    measurements are built once and memoised, so fleet cost does not
-    scale with N on the cloud side. (Evals are per-packet calls; they are
-    shared, not stacked into one device batch.)"""
+    All N UAV sessions ride one ``AveryEngine``. With ``executor``
+    per-frame fidelity comes from real lisa-mini inference on the shared
+    cloud executor: every session reports into one ``FidelityOracle``
+    whose evaluation pool and per-(tier, scene) measurements are built
+    once and memoised, so fleet cost does not scale with N on the cloud
+    side."""
     share = BandwidthTrace(trace.samples / n_uavs,
                            name=f"{trace.name}/share{n_uavs}")
+    engine = AveryEngine(lut=lut, executor=executor, deploy=deploy)
     oracle = (FidelityOracle(lut, spec, executor=executor)
               if executor is not None else None)
     logs = []
     for i in range(n_uavs):
-        s = MissionSpec(duration_s=spec.duration_s, goal=spec.goal,
-                        mode=spec.mode, static_tier=spec.static_tier,
-                        finetuned=spec.finetuned, min_pps=spec.min_pps,
-                        seed=spec.seed + 101 * i, fallback=spec.fallback)
+        s = dataclasses.replace(spec, seed=spec.seed + 101 * i)
         logs.append(run_mission(lut, share, s, executor=executor,
-                                oracle=oracle))
+                                oracle=oracle, engine=engine))
     return FleetResult(n_uavs=n_uavs, logs=logs)

@@ -1,17 +1,17 @@
 """Closed-loop mission simulator — the paper's dynamic evaluation (§5.3).
 
 Simulates a UAV streaming the Insight pathway over a fluctuating uplink
-for ``duration_s`` (paper: 20 minutes, 8–20 Mbps). Each frame:
+for ``duration_s`` (paper: 20 minutes, 8–20 Mbps). The per-frame
+pipeline — Sense, tier selection, analytic edge compute (Jetson model at
+the DEPLOYMENT geometry), packet transmission, fidelity measurement —
+runs inside ``AveryEngine`` (``session.submit_frame``); this module owns
+only mission time, the frame log, and the fidelity oracle.
 
-  1. Sense: read current bandwidth from the channel;
-  2. the controller (Algorithm 1) selects the tier — adaptive AVERY mode —
-     or a fixed tier (the static High-Accuracy / Balanced /
-     High-Throughput baselines of §5.3.1);
-  3. edge compute (analytic Jetson model at the DEPLOYMENT geometry) +
-     packet transmission (serialised on the simulated channel);
-  4. cloud inference; per-packet fidelity is measured by real lisa-mini
-     inference when an executor is provided, else drawn from the LUT
-     (fast mode for property tests).
+Tier control is a ``ControlPolicy`` on the session: ``AdaptivePolicy``
+is AVERY mode, ``StaticTierPolicy`` the §5.3.1 baselines,
+``BestEffortPolicy`` the graceful-degradation fleet variant. The old
+``mode="avery"|"static"`` / ``fallback=`` knobs still work via
+``policy_from_mode`` (deprecation shim).
 
 Frame capture pipelines with transmission (frame k+1 is computed while
 packet k is in flight), so steady-state throughput is min(compute rate,
@@ -19,21 +19,21 @@ link rate) — matching the paper's PPS accounting.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.lisa7b import LISAPipelineConfig
-from repro.core import bottleneck as bn
-from repro.core.controller import (MissionGoal, NoFeasibleInsightTier,
-                                   PowerConfig, select_configuration)
+from repro.core.controller import MissionGoal
 from repro.core.intent import DEFAULT_REQUIREMENTS, Intent
 from repro.core.lut import SystemLUT, Tier
 from repro.data import floodseg
-from repro.network.channel import Channel
-from repro.network.energy import EdgeDevice, bottleneck_flops, encoder_flops, \
-    patch_embed_flops
+from repro.engine import (AveryEngine, ChannelTransport, ControlPolicy,
+                          policy_from_mode)
+# re-exported for compatibility (formulas live with the device models now)
+from repro.network.energy import edge_insight_flops, full_edge_flops  # noqa: F401
 from repro.network.traces import BandwidthTrace
 
 
@@ -41,16 +41,22 @@ from repro.network.traces import BandwidthTrace
 class MissionSpec:
     duration_s: float = 1200.0
     goal: MissionGoal = MissionGoal.PRIORITIZE_ACCURACY
-    mode: str = "avery"               # "avery" | "static"
-    static_tier: Optional[str] = None  # tier name for mode="static"
+    # tier control: pass a ControlPolicy; the mode/static_tier/fallback
+    # trio below is the pre-engine interface, mapped via policy_from_mode
+    policy: Optional[ControlPolicy] = None
+    mode: str = "avery"               # deprecated: "avery" | "static"
+    static_tier: Optional[str] = None  # deprecated: tier for mode="static"
     finetuned: bool = False
     min_pps: float = 0.5              # F_I for Insight intents
     seed: int = 0
-    # beyond-paper (fleet finding, EXPERIMENTS §Beyond-paper): when no tier
-    # satisfies F_I, transmit the lightest tier best-effort instead of
-    # idling — Algorithm 1 reports NoFeasible; this is the graceful
-    # degradation policy layered on top
+    # deprecated (use policy=BestEffortPolicy()): when no tier satisfies
+    # F_I, transmit the lightest tier best-effort instead of idling
     fallback: bool = False
+
+    def resolve_policy(self) -> ControlPolicy:
+        if self.policy is not None:
+            return self.policy
+        return policy_from_mode(self.mode, self.static_tier, self.fallback)
 
 
 @dataclass
@@ -101,28 +107,6 @@ class MissionLog:
         for f in self.frames:
             buckets[min(n - 1, int(f.t_capture / window_s))].append(f.tier)
         return [max(set(b), key=b.count) if b else "-" for b in buckets]
-
-
-def edge_insight_flops(deploy: LISAPipelineConfig, ratio: float) -> float:
-    """Edge-side FLOPs per Insight frame at the deployment geometry:
-    patch embed + SAM blocks [0, k) + bottleneck encode + CLIP encoder."""
-    d = deploy.sam.d_model
-    orig_bytes = 2 if deploy.sam.param_dtype == "bfloat16" else 4
-    rank = bn.rank_for_ratio(d, ratio, orig_bytes)
-    return (patch_embed_flops(d, deploy.patch_size, deploy.sam_tokens)
-            + encoder_flops(deploy.sam, deploy.sam_tokens,
-                            deploy.split_layer)
-            + bottleneck_flops(d, rank, deploy.sam_tokens)
-            + patch_embed_flops(deploy.clip.d_model,
-                                deploy.context_patch_size, deploy.clip_tokens)
-            + encoder_flops(deploy.clip, deploy.clip_tokens))
-
-
-def full_edge_flops(deploy: LISAPipelineConfig) -> float:
-    """Full onboard execution of the Insight segmentation backbone."""
-    d = deploy.sam.d_model
-    return (patch_embed_flops(d, deploy.patch_size, deploy.sam_tokens)
-            + encoder_flops(deploy.sam, deploy.sam_tokens))
 
 
 class FidelityOracle:
@@ -189,56 +173,47 @@ class FidelityOracle:
 def run_mission(lut: SystemLUT, trace: BandwidthTrace, spec: MissionSpec,
                 executor=None, pcfg: Optional[LISAPipelineConfig] = None,
                 deploy: Optional[LISAPipelineConfig] = None,
-                oracle: Optional[FidelityOracle] = None) -> MissionLog:
+                oracle: Optional[FidelityOracle] = None,
+                engine: Optional[AveryEngine] = None) -> MissionLog:
     """``oracle``: pass a shared FidelityOracle to amortise its evaluation
-    pool across missions (the fleet path runs N UAVs against one cloud)."""
-    if deploy is None:
-        from repro.configs.lisa7b import CONFIG as deploy
-    from repro.core import packets as pk
-
-    channel = Channel(trace)
-    device = EdgeDevice()
+    pool across missions; ``engine``: pass a shared AveryEngine so N UAV
+    sessions report into one executor + telemetry (the fleet path)."""
+    if engine is None:
+        engine = AveryEngine(lut=lut, executor=executor, deploy=deploy)
+    else:
+        engine.bind_deploy(deploy)     # shared engine must not silently
+        if executor is not None and engine.executor is not executor:
+            raise ValueError("shared engine carries a different executor")
     if oracle is None:
         oracle = FidelityOracle(lut, spec, executor=executor, pcfg=pcfg)
-    log = MissionLog(spec=spec)
     reqs = DEFAULT_REQUIREMENTS[Intent.INSIGHT]
     if spec.min_pps != reqs.min_update_pps:
-        import dataclasses
         reqs = dataclasses.replace(reqs, min_update_pps=spec.min_pps)
+    sess = engine.session(
+        f"uav-{spec.seed}",
+        transport=ChannelTransport.from_trace(trace),
+        policy=spec.resolve_policy(), goal=spec.goal,
+        finetuned=spec.finetuned,
+        requirements={**DEFAULT_REQUIREMENTS, Intent.INSIGHT: reqs},
+        oracle=oracle)
 
+    log = MissionLog(spec=spec)
     t = 0.0
     seq = 0
     while t < spec.duration_s:
-        bw = channel.measure_bandwidth(t)
-        if spec.mode == "avery":
-            try:
-                sel = select_configuration(bw, PowerConfig(), spec.goal,
-                                           Intent.INSIGHT, reqs, lut,
-                                           finetuned=spec.finetuned)
-                tier = sel.tier
-            except NoFeasibleInsightTier:
-                log.infeasible_s += 1.0
-                if spec.fallback:
-                    tier = min(lut.tiers, key=lambda x: x.payload_mb)
-                else:
-                    t += 1.0
-                    continue
-        else:
-            tier = lut.by_name(spec.static_tier)
-
-        flops = edge_insight_flops(deploy, tier.ratio)
-        compute_s = device.latency_s(flops)
-        energy = device.compute_energy_j(flops) \
-            + device.tx_energy_j(tier.payload_mb * 1e6)
-        packet = pk.Packet(kind="insight", tier_name=tier.name, seq_id=seq,
-                           created_at=t, payload_bytes=int(tier.payload_mb * 1e6))
-        rec = channel.transmit(packet, t + compute_s)
-        iou = oracle.measure(tier)
+        resp = sess.submit_frame(t)
+        if not resp.feasible:
+            log.infeasible_s += 1.0
+            if resp.tier_name is None:     # strict policy: idle this frame
+                t += 1.0
+                continue
         log.frames.append(FrameResult(
-            t_capture=t, t_delivered=rec.end_s, tier=tier.name,
-            payload_mb=tier.payload_mb, iou=iou, edge_energy_j=energy))
+            t_capture=t, t_delivered=resp.t_delivered, tier=resp.tier_name,
+            payload_mb=lut.by_name(resp.tier_name).payload_mb,
+            iou=resp.iou, edge_energy_j=resp.edge_energy_j))
         # pipelined capture: next frame overlaps with this transmission
-        t = max(t + compute_s, rec.end_s - compute_s, t + 1e-3)
+        t = max(t + resp.edge_compute_s, resp.t_delivered - resp.edge_compute_s,
+                t + 1e-3)
         seq += 1
         if seq > 100_000:
             break

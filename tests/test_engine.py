@@ -1,0 +1,363 @@
+"""AveryEngine front door: intent gating per session, policy/transport
+plug-point swaps, in-flight batching (a request submitted mid-decode
+joins the running batch), and the deprecation shims for the pre-engine
+entry points."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import packets as pk, paper_lut
+from repro.core.intent import DEFAULT_REQUIREMENTS, Intent
+from repro.engine import (AdaptivePolicy, AveryEngine, BestEffortPolicy,
+                          ChannelTransport, LoopbackTransport,
+                          StaticTierPolicy, policy_from_mode)
+from repro.network import constant_trace
+
+LUT = paper_lut()
+# feasibility landmarks (paper §3.3): High Accuracy needs 11.68 Mbps at
+# 0.5 PPS; the lightest tier needs 3.32 Mbps
+HA_MBPS = 11.68
+
+
+class StubExecutor:
+    """Host-only executor: deterministic arithmetic instead of the model,
+    so engine-logic tests need no XLA compiles."""
+    buckets = (1, 2, 4)
+    max_new_tokens = 2
+    num_compiled_stages = 0
+
+    def __init__(self, lut=LUT):
+        self.lut = lut
+
+    @staticmethod
+    def _feat(images):
+        return np.asarray(images, np.float64).reshape(1, -1)[:, :4]
+
+    def edge_context(self, images, seq_id, now):
+        ctx = self._feat(images)
+        return pk.make_context_packet(seq_id, now, ctx), ctx
+
+    def edge_insight(self, images, tier, seq_id, now, ctx=None):
+        f = self._feat(images)
+        return pk.make_insight_packet(
+            seq_id, now, tier.name, codes=f.astype(np.int8),
+            scales=np.ones((1, 1), np.float16), clip_feats=f)
+
+    def cloud_context_batch(self, packets, queries):
+        return [np.asarray(p.content["ctx"]).sum(axis=-1, keepdims=True)
+                + np.asarray(q).sum() for p, q in zip(packets, queries)]
+
+    def cloud_insight_batch(self, packets, queries):
+        out = []
+        for p, q in zip(packets, queries):
+            logits = (np.asarray(p.content["clip"]).sum(axis=-1,
+                                                        keepdims=True)
+                      + np.asarray(q).sum())
+            out.append((np.tile(logits[:, None], (1, 2, 2)), logits))
+        return out
+
+
+def _insight_images(rng):
+    return rng.rand(1, 4, 4, 3)
+
+
+# ---- intent gating + per-session context ----
+
+
+def test_intent_gating_per_session():
+    engine = AveryEngine(lut=LUT, executor=StubExecutor())
+    sess = engine.session("op0")
+    rng = np.random.RandomState(0)
+    q = np.zeros((1, 4), np.int32)
+    f_ctx = sess.submit(prompt="is there anyone in the sector?",
+                        images=_insight_images(rng), query=q)
+    f_ins = sess.submit(prompt="segment the stranded person",
+                        images=_insight_images(rng), query=q)
+    engine.drain()
+    assert f_ctx.result().intent is Intent.CONTEXT
+    assert f_ctx.result().tier_name is None
+    assert f_ins.result().intent is Intent.INSIGHT
+    assert f_ins.result().tier_name in {t.name for t in LUT.tiers}
+    assert [h[2] for h in sess.history] == [Intent.CONTEXT, Intent.INSIGHT]
+
+
+# ---- ControlPolicy swap ----
+
+
+def _submit_one(policy, bandwidth_mbps):
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                         transport=LoopbackTransport(bandwidth_mbps),
+                         policy=policy)
+    fut = engine.session("op").submit(
+        prompt="segment the person",
+        images=_insight_images(np.random.RandomState(0)),
+        query=np.zeros((1, 4), np.int32))
+    engine.drain()
+    return fut.result()
+
+
+def test_policy_swap_changes_tier_selection():
+    """§5.3 adaptive-vs-static is a one-line policy swap."""
+    adaptive = _submit_one(AdaptivePolicy(), bandwidth_mbps=9.0)
+    static = _submit_one(StaticTierPolicy("High Accuracy"),
+                         bandwidth_mbps=9.0)
+    assert adaptive.tier_name == "Balanced"    # HA infeasible below 11.68
+    assert static.tier_name == "High Accuracy"
+
+
+def test_best_effort_policy_degrades_instead_of_idling():
+    strict = _submit_one(AdaptivePolicy(), bandwidth_mbps=1.0)
+    assert not strict.feasible and strict.tier_name is None
+    assert strict.answer_logits is None
+    served = _submit_one(BestEffortPolicy(), bandwidth_mbps=1.0)
+    assert not served.feasible
+    assert served.tier_name == "High Throughput"   # lightest tier
+    assert served.answer_logits is not None
+
+
+@settings(max_examples=20, deadline=None)
+@given(bw_lo=st.floats(min_value=3.4, max_value=25.0),
+       bw_hi=st.floats(min_value=3.4, max_value=25.0))
+def test_adaptive_policy_accuracy_monotone_in_bandwidth(bw_lo, bw_hi):
+    """More bandwidth never selects a less accurate tier (accuracy goal)."""
+    if bw_lo > bw_hi:
+        bw_lo, bw_hi = bw_hi, bw_lo
+    pol = AdaptivePolicy()
+    reqs = DEFAULT_REQUIREMENTS[Intent.INSIGHT]
+    lo = pol.select(bw_lo, Intent.INSIGHT, reqs, LUT)
+    hi = pol.select(bw_hi, Intent.INSIGHT, reqs, LUT)
+    assert lo.tier is not None and hi.tier is not None
+    assert hi.tier.acc_base >= lo.tier.acc_base
+
+
+# ---- Transport swap ----
+
+
+def test_transport_swap_preserves_results():
+    rng = np.random.RandomState(3)
+    frames = [_insight_images(rng) for _ in range(4)]
+    results = {}
+    for name, transport in (
+            ("loopback", LoopbackTransport(12.0)),
+            ("channel", ChannelTransport.from_trace(constant_trace(12.0,
+                                                                   600)))):
+        engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                             transport=transport)
+        sess = engine.session("op")
+        futs = [sess.submit(prompt="segment the person", images=f,
+                            query=np.zeros((1, 4), np.int32),
+                            time_s=float(i))
+                for i, f in enumerate(frames)]
+        engine.drain()
+        results[name] = [f.result() for f in futs]
+    for lo, ch in zip(results["loopback"], results["channel"]):
+        np.testing.assert_allclose(lo.answer_logits, ch.answer_logits)
+        np.testing.assert_allclose(lo.mask_logits, ch.mask_logits)
+        assert lo.tier_name == ch.tier_name
+    # the simulated channel actually serialises packets; loopback doesn't
+    assert all(r.latency_s == 0.0 for r in results["loopback"])
+    assert all(r.latency_s > 0.0 for r in results["channel"])
+
+
+def test_drain_returns_each_response_once():
+    """A submit/drain/submit stream neither re-returns history nor
+    accumulates served futures in the engine tables."""
+    engine = AveryEngine(lut=LUT, executor=StubExecutor())
+    sess = engine.session("op")
+    rng = np.random.RandomState(5)
+    q = np.zeros((1, 4), np.int32)
+    f1 = sess.submit(prompt="segment the person",
+                     images=_insight_images(rng), query=q)
+    first = engine.drain()
+    assert [r.request_id for r in first] == [f1.request.request_id]
+    f2 = sess.submit(prompt="segment the vehicle",
+                     images=_insight_images(rng), query=q)
+    second = engine.drain()
+    assert [r.request_id for r in second] == [f2.request.request_id]
+    assert f1.result() is first[0]      # the future keeps its response
+    assert engine.drain() == []
+    assert not engine._futures          # served requests were evicted
+
+
+def test_profiled_context_frame_has_no_tier():
+    """submit_frame handles the Context stream: CLIP-only edge cost, the
+    fixed lightweight payload, no tier, always feasible."""
+    engine = AveryEngine(lut=LUT)          # profiled: no executor needed
+    sess = engine.session("op")
+    ins = sess.submit_frame(0.0)
+    ctx = sess.submit_frame(1.0, intent=Intent.CONTEXT)
+    assert ctx.feasible and ctx.tier_name is None
+    assert ctx.intent is Intent.CONTEXT
+    assert 0.0 < ctx.edge_energy_j < ins.edge_energy_j
+    assert ctx.t_delivered >= 1.0
+
+
+def test_session_classify_hook_routes_intent():
+    """submit() goes through session.classify, so per-session gating is
+    an override point."""
+    class PinnedSession(type(AveryEngine(lut=LUT).session("tmp"))):
+        def classify(self, prompt):
+            return Intent.INSIGHT
+
+    engine = AveryEngine(lut=LUT, executor=StubExecutor())
+    sess = PinnedSession(engine=engine, operator_id="pinned")
+    fut = sess.submit(prompt="is there anyone?",   # would gate CONTEXT
+                      images=_insight_images(np.random.RandomState(0)),
+                      query=np.zeros((1, 4), np.int32))
+    engine.drain()
+    assert fut.result().intent is Intent.INSIGHT
+
+
+def test_inflight_stats_safe_with_no_requests():
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                         batching="inflight")
+    assert engine.stats["inflight_steps"] == 0
+    assert engine.stats["mean_live_slots"] == 0.0
+
+
+# ---- deprecation shims ----
+
+
+def test_mode_string_shim_maps_to_policies():
+    assert isinstance(policy_from_mode("avery"), AdaptivePolicy)
+    assert isinstance(policy_from_mode("avery", fallback=True),
+                      BestEffortPolicy)
+    static = policy_from_mode("static", "Balanced")
+    assert isinstance(static, StaticTierPolicy)
+    assert static.tier_name == "Balanced"
+    with pytest.raises(ValueError):
+        policy_from_mode("static")
+    with pytest.raises(ValueError):
+        policy_from_mode("greedy")
+
+
+def test_mission_mode_strings_match_policy_objects():
+    """The pre-engine MissionSpec knobs drive the same engine pipeline."""
+    from repro.runtime import MissionSpec, run_mission
+    trace = constant_trace(12.0, 120)
+    by_mode = run_mission(LUT, trace, MissionSpec(duration_s=120.0,
+                                                  mode="avery"))
+    by_policy = run_mission(LUT, trace, MissionSpec(
+        duration_s=120.0, policy=AdaptivePolicy()))
+    assert [f.tier for f in by_mode.frames] == \
+        [f.tier for f in by_policy.frames]
+    assert by_mode.mean_iou == by_policy.mean_iou
+    spec = MissionSpec(mode="static", static_tier="Balanced")
+    assert isinstance(spec.resolve_policy(), StaticTierPolicy)
+
+
+def test_runtime_reexports_still_importable():
+    """Pre-engine import sites keep working."""
+    from repro.runtime import (MicrobatchScheduler, ServeRequest,  # noqa: F401
+                               edge_insight_flops, full_edge_flops)
+    from repro.runtime.mission import FidelityOracle  # noqa: F401
+    from repro.launch.serve import serve_local
+    import inspect
+    assert "smoke" in inspect.signature(serve_local).parameters
+
+
+# ---- real-model integration: serve path + in-flight batching ----
+
+
+@pytest.fixture(scope="module")
+def executor():
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import DualStreamExecutor, profile as prof
+    params, bns, _ = prof.random_init_system(PCFG, lut=LUT)
+    return DualStreamExecutor(pcfg=PCFG, params=params, bottlenecks=bns,
+                              lut=LUT, max_new_tokens=3, flash_decode=False)
+
+
+def _edge_requests(executor, n, seed=0):
+    import jax.numpy as jnp
+
+    from repro.data import floodseg
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        kind = "any" if i % 3 == 2 else "segment"
+        b = floodseg.make_batch(rng, 1, kind, augment=False)
+        img = jnp.asarray(b["images"])
+        if kind == "any":
+            pkt, _ = executor.edge_context(img, i, 0.0)
+            out.append((pkt, b["query"], Intent.CONTEXT))
+        else:
+            pkt = executor.edge_insight(img, LUT.tiers[i % 2], i, 0.0)
+            out.append((pkt, b["query"], Intent.INSIGHT))
+    return out
+
+
+def test_engine_serve_path_matches_executor(executor):
+    """Microbatched engine responses equal direct executor calls."""
+    reqs = _edge_requests(executor, 5, seed=11)
+    engine = AveryEngine(lut=LUT, executor=executor, max_batch=4)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        res = fut.result()
+        if it is Intent.INSIGHT:
+            mask, logits = executor.cloud_insight(pkt, q)
+            np.testing.assert_allclose(res.mask_logits, mask, atol=3e-4)
+        else:
+            logits = executor.cloud_context(pkt, q)
+        np.testing.assert_allclose(res.answer_logits, logits, atol=3e-4)
+    assert engine.stats["n_microbatches"] < len(reqs)
+
+
+def test_submitted_request_joins_inflight_batch(executor):
+    """In-flight batching: a request submitted while a decode batch is
+    running is prefilled into a free slot and served by that batch —
+    and its results match the one-shot generate path exactly."""
+    reqs = _edge_requests(executor, 2, seed=21)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=4)
+    (p1, q1, i1), (p2, q2, i2) = reqs
+    f1 = engine.submit_packet(p1, q1, i1, time_s=0.0)
+    engine.pump()                      # the decode batch is now running
+    f2 = engine.submit_packet(p2, q2, i2, time_s=0.1)
+    engine.drain()
+    r1, r2 = f1.result(), f2.result()
+    assert r2.joined_step is not None and r2.joined_step > 0
+    assert r1.batch_size > 1.0 or r2.batch_size > 1.0  # steps were shared
+    for res, (pkt, q, it) in zip((r1, r2), reqs):
+        out = executor.cloud_generate_batch([pkt], [q])[0]
+        if it is Intent.INSIGHT:
+            mask, logits0, toks = out
+            np.testing.assert_allclose(res.mask_logits, mask, atol=3e-4)
+        else:
+            logits0, toks = out
+        np.testing.assert_allclose(res.answer_logits, logits0, atol=3e-4)
+        assert np.array_equal(res.tokens, toks)
+
+
+@pytest.mark.slow
+def test_inflight_matches_one_shot_across_tiers_and_intents(executor):
+    """Staggered joins across mixed tiers AND intents in one running
+    batch still reproduce per-request one-shot generate results."""
+    reqs = _edge_requests(executor, 6, seed=31)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=3)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    joined = []
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        res = fut.result()
+        joined.append(res.joined_step)
+        out = executor.cloud_generate_batch([pkt], [q])[0]
+        if it is Intent.INSIGHT:
+            mask, logits0, toks = out
+            np.testing.assert_allclose(res.mask_logits, mask, atol=3e-4)
+        else:
+            logits0, toks = out
+        np.testing.assert_allclose(res.answer_logits, logits0, atol=3e-4)
+        assert np.array_equal(res.tokens, toks)
+    assert max(joined) > 0             # later requests joined mid-stream
+    assert engine.stats["mean_live_slots"] > 1.0

@@ -14,15 +14,23 @@ from repro.models import make_train_step
 from repro.sharding import specs as sh
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax API drift: older versions take
+    (sizes, names), 0.4.37+ takes ((name, size), ...) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
 def fake_mesh():
     """Abstract 16x16 mesh for spec validation (no devices needed)."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def fake_mesh_multipod():
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_tree(specs, tree, mesh):
