@@ -38,6 +38,9 @@ from repro.data import floodseg
 N_REQUESTS = 32
 ANSWER_TOKENS = 4
 BATCHES = (1, 4, 8, 16)
+# repeat-prefix per-UAV workload (paged shared-prefix KV cache mode)
+N_UAVS = 4
+FRAMES_PER_UAV = 6
 
 
 def _requests(executor, n):
@@ -98,6 +101,76 @@ def _decode_loop(executor, batch, steps):
     return run
 
 
+def _uav_stream(executor, n_uavs, frames, kind):
+    """N UAVs x M frames; each UAV re-sends its frame under a standing
+    query, so the cloud-side [ctx; query] prefix repeats per UAV."""
+    rng = np.random.RandomState(7)
+    tier = executor.lut.tiers[0]
+    reqs = []
+    for u in range(n_uavs):
+        b = floodseg.make_batch(rng, 1,
+                                "segment" if kind == "insight" else "any",
+                                augment=False)
+        img = jnp.asarray(b["images"])
+        for f in range(frames):
+            sid = u * frames + f
+            if kind == "insight":
+                pkt = executor.edge_insight(img, tier, sid, 0.0)
+            else:
+                pkt, _ = executor.edge_context(img, sid, 0.0)
+            reqs.append((f"uav-{u}", pkt, b["query"]))
+    return reqs
+
+
+def paged_prefix_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
+                      emit_row=None):
+    """Paged shared-prefix mode: admission throughput on repeat-prefix
+    per-UAV traffic, with and without the prefix store. Admission is the
+    per-request serving cost that prefix reuse removes (prefill FLOPs +
+    prefix KV pages); the decode steps are identical either way, so the
+    measured loop is N ``InflightDecoder.submit`` calls (prefix
+    lookup/prefill + page-table setup), not the shared decode."""
+    from repro.core.paging import PagePool, pages_for
+    from repro.engine.inflight import InflightDecoder
+    from repro.network.energy import encoder_flops
+
+    emit_row = emit_row or emit
+    rows = []
+    for kind in ("context", "insight"):
+        reqs = _uav_stream(executor, n_uavs, frames, kind)
+        intent = Intent.CONTEXT if kind == "context" else Intent.INSIGHT
+        times, pools = {}, {}
+
+        def admit_all(share):
+            pool = PagePool(page_size=executor.page_size,
+                            share_prefixes=share)
+            dec = InflightDecoder(executor, slots=len(reqs), pool=pool)
+            for i, (op, pkt, q) in enumerate(reqs):
+                dec.submit(i, intent, pkt, q, lambda out: None,
+                           operator_id=op)
+            pools[share] = pool
+
+        for share in (False, True):
+            times[share] = time_best(lambda: admit_all(share))
+        pool = pools[True]
+        qlen = np.asarray(reqs[0][2]).shape[-1]
+        prefix_len = executor.pcfg.clip_tokens + qlen
+        n_prefix = pages_for(prefix_len, pool.page_size)
+        # per run: one prefix prefill per UAV instead of one per frame
+        hits = n_uavs * (frames - 1)
+        saved_flops = hits * encoder_flops(executor.pcfg.llm, prefix_len)
+        saved_bytes = hits * n_prefix * pool.page_bytes
+        rows.append(emit_row(
+            f"serving/paged_admit_{kind}", times[True] * 1e6,
+            f"admit_req_s={len(reqs) / times[True]:.1f};"
+            f"speedup_vs_no_prefix_reuse={times[False] / times[True]:.2f}x;"
+            f"prefix_hit_rate={pool.prefix_hit_rate:.2f};"
+            f"prefill_flops_saved={saved_flops:.3g};"
+            f"kv_bytes_saved={saved_bytes};"
+            f"uavs={n_uavs};frames_per_uav={frames}"))
+    return rows
+
+
 def run(log=print):
     rows = []
     params, bns, lut = init_serving_system(PCFG)
@@ -147,6 +220,9 @@ def run(log=print):
             f"req_s={rps:.1f};speedup_vs_full_forward={rps / base_rps:.2f}x;"
             "note=pallas_interpret_on_cpu"))
 
+    # paged shared-prefix KV cache: repeat-prefix per-UAV admission
+    rows += paged_prefix_rows(executor)
+
     steps = 32
     for b in BATCHES:
         dec_s = time_best(_decode_loop(executor, b, steps))
@@ -162,5 +238,20 @@ def run(log=print):
     return rows
 
 
+def run_paged_smoke():
+    """CI smoke: only the paged shared-prefix mode, at a reduced size
+    (2 UAVs x 4 frames, XLA decode path) — exercises prefix store,
+    allocator, and page-table admission end to end in seconds."""
+    params, bns, lut = init_serving_system(PCFG)
+    executor = make_executor(PCFG, params, bns, lut,
+                             max_new_tokens=ANSWER_TOKENS,
+                             flash_decode=False)
+    return paged_prefix_rows(executor, n_uavs=2, frames=4)
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--paged-smoke" in sys.argv:
+        run_paged_smoke()
+    else:
+        run()

@@ -12,3 +12,6 @@ python -m pytest -q -m "not slow" "$@"
 echo "[ci_fast] engine smoke (microbatch + inflight)"
 python -m repro.launch.serve --duration 2 --smoke --max-batch 4
 python -m repro.launch.serve --duration 2 --smoke --max-batch 4 --batching inflight
+echo "[ci_fast] paged shared-prefix serving smoke"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --paged-smoke

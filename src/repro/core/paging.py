@@ -1,0 +1,223 @@
+"""Paged KV-cache bookkeeping for the cloud serving engine.
+
+The in-flight decode batch no longer owns a contiguous ``(slots, width)``
+KV cache. KV lives in a shared **page pool** — fixed-size pages of
+``page_size`` token slots per LLM layer — and every request addresses
+its virtual sequence through a per-row **page table**. Two properties
+fall out of that indirection (the vLLM paged-attention discipline):
+
+  * slot KV memory scales with *tokens actually cached*, not with
+    ``slots × max_width`` — freed pages return to the allocator and are
+    reused without zeroing (stale KV is masked by the position
+    bookkeeping, never attended);
+  * the ``[ctx; query]`` prefix of successive frames from one UAV is
+    content-addressed in a **prefix store**: the first request pays the
+    prefill and pins read-only prefix pages, every repeat maps the same
+    pages into its own page table and skips the prefill entirely
+    (ROADMAP "paged / shared-prefix KV cache").
+
+This module is the *host-side* bookkeeping: a refcounting free-page
+allocator, the per-operator prefix store, and the telemetry counters the
+engine reports. The device arrays themselves (``PagePool.kv``) are
+written/read by the executor's jitted page ops (``core.streams``) and
+the paged decode kernel (``kernels.decode_attention``).
+
+Page id 0 is the reserved **trash page**: idle decode rows park their
+page tables on it, so their (discarded) writes can never corrupt a live
+request's pages. It is never handed out by the allocator.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Number of pages covering ``tokens`` slots."""
+    return -(-int(tokens) // int(page_size))
+
+
+def prefix_digest(ctx: Any, query: Any) -> str:
+    """Content hash of one request's ``[ctx; query]`` LLM prefix. Two
+    requests share prefix pages iff their digests (and operator) match,
+    so reuse is exact-by-construction: identical bytes in, identical
+    prefill out."""
+    h = hashlib.sha1()
+    for arr in (ctx, query):
+        a = np.ascontiguousarray(np.asarray(arr))
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def prefix_positions(prefix_len: int, n_pages: int, page_size: int
+                     ) -> np.ndarray:
+    """Absolute positions of the prefix region of one row's virtual
+    sequence: ``[0, prefix_len)`` then ``-1`` (empty) through the zero-
+    padded tail of the last prefix page."""
+    out = np.full((n_pages * page_size,), -1, np.int32)
+    out[:prefix_len] = np.arange(prefix_len, dtype=np.int32)
+    return out
+
+
+@dataclass
+class PrefixEntry:
+    """One cached ``[ctx; query]`` prefix: its read-only pages plus the
+    prefill products every sharer reuses verbatim."""
+    key: Tuple[str, str]               # (operator_id, content digest)
+    page_ids: Tuple[int, ...]
+    prefix_len: int
+    logits0: np.ndarray                # (1, V) first-token logits
+
+
+class PagePool:
+    """Free-page allocator + prefix store over one shared device pool.
+
+    ``kv`` is the device pytree ``{"groups": [leaves (L, P, page, ...)]}``
+    — created lazily from the first prefill's page shapes and grown
+    (doubling) when the free list runs dry, so allocation never fails and
+    admission never deadlocks. Pages are refcounted: prefix pages carry
+    one pin from the store plus one per active sharer; private decode
+    pages carry exactly their request's reference.
+    """
+
+    def __init__(self, page_size: int = 16, share_prefixes: bool = True,
+                 initial_pages: Optional[int] = None):
+        self.page_size = int(page_size)
+        self.share_prefixes = bool(share_prefixes)
+        self.initial_pages = initial_pages
+        self.kv: Optional[Dict] = None
+        self._refcount: List[int] = []
+        self._free: List[int] = []
+        self.prefix: Dict[Tuple[str, str], PrefixEntry] = {}
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+
+    # ---- capacity ----
+
+    @property
+    def num_pages(self) -> int:
+        return len(self._refcount)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Live pages, excluding the reserved trash page."""
+        return sum(1 for c in self._refcount[1:] if c > 0)
+
+    @property
+    def page_bytes(self) -> int:
+        """Device bytes of one page across all layers (k + v leaves)."""
+        if self.kv is None:
+            return 0
+        leaves = jax.tree.leaves(self.kv)
+        return sum(l.nbytes for l in leaves) // max(1, self.num_pages)
+
+    def ensure(self, n_free: int, like: Optional[Dict] = None,
+               capacity_hint: int = 0) -> None:
+        """Guarantee ``n_free`` allocatable pages. ``like`` (a prefill's
+        paged KV, leaves ``(L, n, page, ...)``) is required on the first
+        call to shape the pool; later calls grow by doubling."""
+        if self.kv is None:
+            if like is None:
+                raise RuntimeError("page pool is empty and no prefill "
+                                   "shapes were provided to create it")
+            cap = max(n_free + 1, capacity_hint,
+                      self.initial_pages or 0)
+            self.kv = jax.tree.map(
+                lambda a: jnp.zeros((a.shape[0], cap) + a.shape[2:],
+                                    a.dtype), like)
+            self._refcount = [1] + [0] * (cap - 1)   # page 0: trash, pinned
+            self._free = list(range(1, cap))
+            return
+        while len(self._free) < n_free:
+            old = self.num_pages
+            grow = max(old, n_free)
+            self.kv = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((a.shape[0], grow) + a.shape[2:],
+                                  a.dtype)], axis=1), self.kv)
+            self._refcount.extend([0] * grow)
+            self._free.extend(range(old, old + grow))
+
+    # ---- refcounted page allocation ----
+
+    def alloc(self, n: int) -> List[int]:
+        if len(self._free) < n:
+            self.ensure(n)
+        ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self._refcount[i] = 1
+        return ids
+
+    def retain(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            assert self._refcount[i] > 0, f"retain of free page {i}"
+            self._refcount[i] += 1
+
+    def release(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            self._refcount[i] -= 1
+            assert self._refcount[i] >= 0, f"double free of page {i}"
+            if self._refcount[i] == 0:
+                self._free.append(i)
+
+    # ---- prefix store ----
+
+    def lookup_prefix(self, key: Tuple[str, str]) -> Optional[PrefixEntry]:
+        entry = self.prefix.get(key) if self.share_prefixes else None
+        if entry is None:
+            self.prefix_misses += 1
+        else:
+            self.prefix_hits += 1
+        return entry
+
+    def put_prefix(self, key: Tuple[str, str], page_ids: Sequence[int],
+                   prefix_len: int, logits0: np.ndarray) -> PrefixEntry:
+        """Register a freshly prefilled prefix. The caller's ``alloc``
+        reference stays the *request's* (released when it finishes); when
+        sharing is on, the store takes one pin of its own on top
+        (released by ``release_operator``), so the pages outlive the
+        request. When sharing is off nothing is stored and the pages
+        free with the request."""
+        entry = PrefixEntry(key=key, page_ids=tuple(page_ids),
+                            prefix_len=int(prefix_len),
+                            logits0=np.asarray(logits0))
+        if self.share_prefixes:
+            self.prefix[key] = entry
+            self.retain(entry.page_ids)
+        return entry
+
+    def release_operator(self, operator_id: str) -> int:
+        """Drop every stored prefix of one operator (their pin; pages
+        free once no active request shares them). Returns the number of
+        entries released."""
+        keys = [k for k in self.prefix if k[0] == operator_id]
+        for k in keys:
+            self.release(self.prefix.pop(k).page_ids)
+        return len(keys)
+
+    # ---- telemetry ----
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        n = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / n if n else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "kv_page_size": self.page_size,
+            "kv_pages_total": self.num_pages,
+            "kv_pages_in_use": self.pages_in_use,
+            "prefix_entries": len(self.prefix),
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_rate": self.prefix_hit_rate,
+        }

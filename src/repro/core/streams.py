@@ -11,10 +11,16 @@ Cloud serving is batched: ``cloud_context_batch`` / ``cloud_insight_batch``
 stack multiple packets of the same tier into one device call, and
 ``cloud_generate_batch`` serves multi-token answers through the
 prefill + flash-decode KV-cache path (``vlm.llm_prefill`` /
-``vlm.llm_decode_step``). Request counts are padded up to a small set of
-bucket sizes and every jitted stage is held in an explicit compile cache
-keyed on (stage, tier, bucket, query_len), so varying request counts
-never retrigger XLA compilation.
+``vlm.llm_decode_step``). The in-flight stages serve the paged
+shared-prefix cache instead: ``cloud_prefix`` prefills a [ctx; query]
+prefix into fixed-size KV pages, ``pool_write`` scatters them into the
+shared page pool, and ``cloud_decode_rows`` advances every live slot one
+token through per-row page tables (``vlm.llm_decode_step_paged``; the
+allocator/prefix-store bookkeeping lives in ``core.paging``). Request
+counts are padded up to a small set of bucket sizes and every jitted
+stage is held in an explicit compile cache keyed on (stage, tier,
+bucket, query_len), so varying request counts never retrigger XLA
+compilation.
 
 The executor is deliberately channel-agnostic: it returns the numpy
 payloads + packets; the runtime decides what the (simulated or pod-
@@ -43,14 +49,11 @@ class Stream(enum.Enum):
     INSIGHT = "insight"   # low-frequency, high-fidelity grounding
 
 
-def _cache_insert(dst: Dict, src: Dict, slot) -> Dict:
-    """Scatter one prefilled request's cache rows (batch 1) into a batched
-    decode cache at ``slot``. KV leaves are (L, B, W, ...) — batch axis 1;
-    positions are (B, W) — batch axis 0."""
-    groups = jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, 0]),
-                          dst["groups"], src["groups"])
-    positions = dst["positions"].at[slot].set(src["positions"][0])
-    return {"groups": groups, "positions": positions}
+def _pool_write(dst: Dict, src: Dict, page_ids) -> Dict:
+    """Scatter one prefilled prefix's pages (leaves (L, n, page, ...))
+    into the shared page pool (leaves (L, P, page, ...)) at
+    ``page_ids`` (n,)."""
+    return jax.tree.map(lambda d, s: d.at[:, page_ids].set(s), dst, src)
 
 
 def _pad_rows(arr: np.ndarray, bucket: int) -> np.ndarray:
@@ -76,6 +79,8 @@ class DualStreamExecutor:
     max_new_tokens: int = 4
     # route decode attention through the flash-decode Pallas kernel
     flash_decode: bool = True
+    # KV page size (token slots per page) for the paged in-flight cache
+    page_size: int = 16
 
     def __post_init__(self):
         pcfg = self.pcfg
@@ -97,14 +102,16 @@ class DualStreamExecutor:
         # are fixed), so len(self._compiled) == number of XLA compiles.
         self._compiled: Dict[Tuple, Callable] = {}
         # in-flight decode stages (token-level continuous batching): one
-        # decode step over all live slots with per-row positions, plus the
-        # slot-scatter cache merge and the standalone mask decode
-        self._decode_rows = jax.jit(
-            lambda p, cache, tok, pos: vlm.llm_decode_step(
-                p, self._gen_pcfg, cache, tok, pos))
+        # paged decode step over all live slots with per-row positions and
+        # page tables, the prefix-page scatter into the shared pool, and
+        # the standalone mask decode
+        self._decode_paged = jax.jit(
+            lambda p, pool, pt, posarr, tok, pos, ws:
+            vlm.llm_decode_step_paged(p, self._gen_pcfg, pool, pt, posarr,
+                                      tok, pos, ws))
         self._mask_decode = jax.jit(
             lambda p, feats, seg: vlm.mask_decode(p, pcfg, feats, seg))
-        self._cache_insert = jax.jit(_cache_insert)
+        self._pool_write = jax.jit(_pool_write)
 
     # ---- compile cache ----
 
@@ -113,18 +120,19 @@ class DualStreamExecutor:
         gcfg = dataclasses.replace(
             pcfg, llm=pcfg.llm.replace(use_flash_decode=self.flash_decode))
 
-        if stage == "cloud_prefill_insight":
-            def fn(p, bp, codes, scales, ctx, query):
+        if stage == "cloud_sam_feats":
+            def fn(p, bp, codes, scales):
                 a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
-                feats = vlm.sam_tail(p, pcfg, a)
-                logits0, _, cache = vlm.llm_prefill(p, pcfg, ctx, query,
-                                                    width=width)
-                return feats, logits0, cache
-        elif stage == "cloud_prefill_context":
+                return vlm.sam_tail(p, pcfg, a)
+        elif stage == "cloud_prefix":
+            page = self.page_size
+
             def fn(p, ctx, query):
-                logits0, _, cache = vlm.llm_prefill(p, pcfg, ctx, query,
-                                                    width=width)
-                return logits0, cache
+                logits0, _, paged = vlm.llm_prefill_paged(p, pcfg, ctx,
+                                                          query, page)
+                # one request per pool row: drop the unit batch axis so
+                # leaves are (L, n_pages, page, ...), the pool-write unit
+                return logits0, jax.tree.map(lambda a: a[:, 0], paged)
         elif stage == "cloud_insight":
             def fn(p, bp, codes, scales, ctx, query):
                 a = bn.decode(bp, codes, scales, out_dtype=pcfg.sam.adtype)
@@ -150,11 +158,12 @@ class DualStreamExecutor:
 
     def _jitted(self, stage: str, tier_name: Optional[str], bucket: int,
                 qlen: int, width: Optional[int] = None) -> Callable:
-        # max_new_tokens / flash_decode are baked into the staged fns, so
-        # they are part of the key: mutating them after some buckets have
-        # compiled must not serve stale-T answers from the old entries
+        # max_new_tokens / flash_decode / page_size are baked into the
+        # staged fns, so they are part of the key: mutating them after some
+        # buckets have compiled must not serve stale answers from the old
+        # entries
         key = (stage, tier_name, bucket, qlen, self.max_new_tokens,
-               self.flash_decode, width)
+               self.flash_decode, self.page_size, width)
         fn = self._compiled.get(key)
         if fn is None:
             fn = jax.jit(self._stage_fn(stage, width=width))
@@ -283,69 +292,70 @@ class DualStreamExecutor:
                                   jnp.asarray(query))
         return self._split([mask, logits, tokens], counts)
 
-    # ---- cloud side (in-flight / token-level continuous batching) ----
+    # ---- cloud side (in-flight / paged continuous batching) ----
     #
     # The one-shot ``cloud_generate_batch`` serves a closed microbatch end
-    # to end. The in-flight stages below split that into prefill + single
-    # decode steps with *per-row* positions, so a request that arrives
-    # while a batch is mid-decode can be prefilled into a free slot and
-    # ride the remaining steps of the running batch (the engine's
-    # ``InflightDecoder`` drives them).
+    # to end. The in-flight stages below split that into page-table ops:
+    # the [ctx; query] prefix prefills once into fixed-size KV pages
+    # (shared read-only across repeat-prefix requests), per-frame SAM
+    # feats compute separately, and each decode step advances every live
+    # row against the shared page pool with per-row positions, page
+    # tables, and write slots (the engine's ``InflightDecoder`` owns the
+    # allocator + prefix-store bookkeeping in ``core.paging``).
 
-    def cloud_prefill(self, packet: pk.Packet, query, width: int
-                      ) -> Tuple[np.ndarray, Dict, Optional[np.ndarray]]:
-        """Prefill one request's [ctx; query] against a ``width``-slot KV
-        ring. Returns (first-token logits, per-row cache, sam feats for
-        the later mask decode — None for Context packets)."""
+    def cloud_sam_feats(self, packet: pk.Packet) -> np.ndarray:
+        """Per-frame Insight tail: bottleneck decode + SAM suffix ->
+        mask features. Runs on every admission (frames differ even when
+        the LLM prefix repeats)."""
+        tier = packet.tier_name
+        rows = packet.content["codes"].shape[0]
+        fn = self._jitted("cloud_sam_feats", tier, rows, 0)
+        return fn(self.params, self.bottlenecks[tier],
+                  jnp.asarray(packet.content["codes"]),
+                  jnp.asarray(packet.content["scales"]))
+
+    def cloud_prefix(self, ctx, query) -> Tuple[np.ndarray, Dict]:
+        """Prefill one request's [ctx; query] prefix into KV pages.
+        Returns (first-token logits (1, V), paged KV with leaves
+        (L, n_pages, page_size, ...)) — the unit the page-pool scatter
+        (``pool_write``) consumes. One sequence per call: pool rows are
+        per-request."""
         query = np.asarray(query).reshape(-1, np.asarray(query).shape[-1])
         rows, qlen = query.shape
-        if packet.kind == "insight":
-            tier = packet.tier_name
-            fn = self._jitted("cloud_prefill_insight", tier, rows, qlen,
-                              width=width)
-            feats, logits0, cache = fn(
-                self.params, self.bottlenecks[tier],
-                jnp.asarray(packet.content["codes"]),
-                jnp.asarray(packet.content["scales"]),
-                jnp.asarray(packet.content["clip"]), jnp.asarray(query))
-            return logits0, cache, feats
-        fn = self._jitted("cloud_prefill_context", None, rows, qlen,
-                          width=width)
-        logits0, cache = fn(self.params,
-                            jnp.asarray(packet.content["ctx"]),
-                            jnp.asarray(query))
-        return logits0, cache, None
+        if rows != 1:
+            raise ValueError(
+                f"prefix prefill is per-sequence, got {rows} rows")
+        fn = self._jitted("cloud_prefix", None, rows, qlen)
+        return fn(self.params, jnp.asarray(ctx), jnp.asarray(query))
 
-    def cloud_decode_rows(self, cache: Dict, tokens, pos
+    def pool_write(self, pool: Dict, paged_kv: Dict, page_ids) -> Dict:
+        """Scatter a prefilled prefix's pages into the shared page pool
+        at ``page_ids``; returns the new pool value."""
+        return self._pool_write(pool, paged_kv,
+                                jnp.asarray(page_ids, jnp.int32))
+
+    def cloud_decode_rows(self, pool: Dict, page_table, positions, tokens,
+                          pos, write_slot
                           ) -> Tuple[np.ndarray, np.ndarray, Dict]:
-        """One decode step over all slots. tokens (slots, 1) i32; pos
-        (slots,) i32 per-row absolute positions (free slots may carry any
-        in-range position; their rows are discarded)."""
-        return self._decode_rows(self.params, cache,
-                                 jnp.asarray(tokens, jnp.int32),
-                                 jnp.asarray(pos, jnp.int32))
+        """One paged decode step over all slots. pool {"groups": [kv]}
+        with leaves (L, P, page, ...); page_table (slots, n_pages) i32
+        (idle rows parked on the trash page); positions
+        (slots, n_pages*page) i32 absolute slot positions (-1 empty);
+        tokens (slots, 1) i32; pos / write_slot (slots,) i32 — idle rows
+        write into the trash page and their outputs are discarded.
+        Returns (answer_logits, seg, new pool)."""
+        return self._decode_paged(self.params, pool,
+                                  jnp.asarray(page_table, jnp.int32),
+                                  jnp.asarray(positions, jnp.int32),
+                                  jnp.asarray(tokens, jnp.int32),
+                                  jnp.asarray(pos, jnp.int32),
+                                  jnp.asarray(write_slot, jnp.int32))
 
     def cloud_mask(self, feats, seg) -> np.ndarray:
         """<SEG>-conditioned mask decode from stored sam feats (the final
         in-flight stage for Insight requests)."""
         return self._mask_decode(self.params, jnp.asarray(feats),
                                  jnp.asarray(seg))
-
-    def cache_insert(self, dst: Dict, src: Dict, slot: int) -> Dict:
-        """Merge a batch-1 prefilled cache into the batched decode cache
-        at ``slot`` (whole-row overwrite, so freed slots need no reset)."""
-        return self._cache_insert(dst, src, jnp.int32(slot))
-
-    @staticmethod
-    def empty_decode_cache(like: Dict, slots: int) -> Dict:
-        """A ``slots``-row decode cache shaped after a prefilled batch-1
-        cache: zero KV, all ring positions empty (-1)."""
-        groups = jax.tree.map(
-            lambda a: jnp.zeros((a.shape[0], slots) + a.shape[2:], a.dtype),
-            like["groups"])
-        positions = jnp.full((slots, like["positions"].shape[1]), -1,
-                             jnp.int32)
-        return {"groups": groups, "positions": positions}
 
     @staticmethod
     def _same_tier(packets: Sequence[pk.Packet]) -> str:

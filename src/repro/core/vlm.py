@@ -227,6 +227,73 @@ def llm_prefill(params: dict, pcfg: LISAPipelineConfig, ctx_tokens: jax.Array,
     return answer_logits, seg, cache
 
 
+def llm_prefill_paged(params: dict, pcfg: LISAPipelineConfig,
+                      ctx_tokens: jax.Array, query_tokens: jax.Array,
+                      page_size: int) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Prefill over [ctx; query] that emits the KV cache chunked into
+    fixed-size pages — the serving path's shared-prefix unit. Returns
+    (answer_logits (B,V), seg (B,d_sam), paged_kv) with paged_kv leaves
+    (L, B, n_pages, page_size, ...); the zero-padded tail of the last
+    page carries no position and is masked by the caller's bookkeeping
+    (``paging.prefix_positions``). Equivalent to ``llm_prefill`` with
+    ``width = n_pages * page_size`` up to the page reshape."""
+    x, kv = _llm_trunk(params, pcfg, ctx_tokens, query_tokens,
+                       want_cache=True)
+    B, S, _ = x.shape
+    answer_logits, seg = _llm_outputs(params, x[:, -1])
+    n_pages = -(-S // page_size)
+    W = n_pages * page_size
+    if W > S:
+        kv = jax.tree.map(
+            lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, W - S)]
+                              + [(0, 0)] * (a.ndim - 3)), kv)
+    paged = jax.tree.map(
+        lambda a: a.reshape(a.shape[:2] + (n_pages, page_size)
+                            + a.shape[3:]), kv)
+    return answer_logits, seg, {"groups": [paged]}
+
+
+def llm_decode_step_paged(params: dict, pcfg: LISAPipelineConfig, pool: Dict,
+                          page_table: jax.Array, positions: jax.Array,
+                          tokens: jax.Array, pos: jax.Array,
+                          write_slot: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One in-flight decode step against the shared KV page pool.
+
+    pool {"groups": [kv]} with leaves (L, P, page, ...) — pages shared
+    across every live request; page_table (B, n_pages) i32, every entry
+    a valid page id (idle rows park on the reserved trash page);
+    positions (B, n_pages*page) i32 absolute position stored in each
+    virtual slot (-1 empty — the caller owns this bookkeeping, it is
+    append-only and deterministic); tokens (B,1) i32; pos (B,) i32
+    absolute positions of the new tokens; write_slot (B,) i32 virtual
+    slot receiving each row's token. Returns (answer_logits (B,V),
+    seg (B,d_sam), new pool). Token-exact with the contiguous
+    ``llm_decode_step``: the gathered virtual sequence preserves
+    ascending position order and masked slots contribute exactly zero.
+    """
+    llm = pcfg.llm
+    p = params["llm"]
+    B = tokens.shape[0]
+    page = pool["groups"][0]["k"].shape[2]
+    x = jnp.take(p["embed"], tokens, axis=0).astype(llm.adtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    write_slot = jnp.asarray(write_slot, jnp.int32)
+    rows = jnp.arange(B)
+    pos_arr = jnp.asarray(positions, jnp.int32).at[rows, write_slot].set(pos)
+    mask = cache_mask(pos_arr, pos[:, None], llm.sliding_window)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    write_page = page_table[rows, write_slot // page]
+    write_off = write_slot % page
+    spec = stack.layer_groups(llm)[0]
+    x, kv = stack.group_decode_paged(p["groups"][0], llm, spec, x,
+                                     pos[:, None], pool["groups"][0],
+                                     page_table, write_page, write_off, mask)
+    x = stack.apply_norm(x, p["norm"], llm)
+    answer_logits, seg = _llm_outputs(params, x[:, -1])
+    return answer_logits, seg, {"groups": [kv]}
+
+
 def llm_decode_step(params: dict, pcfg: LISAPipelineConfig, cache: Dict,
                     tokens: jax.Array, pos: jax.Array
                     ) -> Tuple[jax.Array, jax.Array, Dict]:

@@ -36,8 +36,8 @@ class Request:
 
 @dataclass
 class StreamEvent:
-    """Lifecycle marker: queued, tier_selected, transmitted, prefilled,
-    joined_batch, served, infeasible."""
+    """Lifecycle marker: queued, tier_selected, transmitted, blackout,
+    prefilled, joined_batch, served, infeasible."""
     kind: str
     t: float = 0.0
     data: Dict[str, Any] = field(default_factory=dict)
@@ -64,6 +64,9 @@ class Response:
     # flight path) the fractional mean of co-active slots over its steps
     batch_size: float = 1.0
     joined_step: Optional[int] = None  # in-flight: decode step it joined at
+    # in-flight: whether the [ctx; query] prefix was served from the
+    # shared prefix store (no prefill paid) — None outside that path
+    prefix_hit: Optional[bool] = None
     events: List[StreamEvent] = field(default_factory=list)
 
     @property

@@ -40,6 +40,7 @@ from repro.core.controller import MissionGoal
 from repro.core.intent import (DEFAULT_REQUIREMENTS, Intent,
                                IntentRequirements, classify_intent)
 from repro.core.lut import SystemLUT
+from repro.core.paging import PagePool
 from repro.engine.api import Request, RequestFuture, Response
 from repro.engine.inflight import InflightDecoder
 from repro.engine.policy import AdaptivePolicy, ControlPolicy, TierDecision
@@ -82,6 +83,12 @@ class OperatorSession:
         fidelity instead of device inference (the §5.3 simulator path)."""
         return self.engine.submit_frame(self, t, intent=intent)
 
+    def close(self) -> int:
+        """End this operator's mission: release their cached prefix
+        pages from the engine's KV pool. Returns the number of prefix
+        entries freed."""
+        return self.engine.release_prefixes(self.operator_id)
+
 
 class AveryEngine:
     """Owns the executor, LUT, scheduler/in-flight decoder, transports,
@@ -91,7 +98,9 @@ class AveryEngine:
                  transport: Optional[Transport] = None,
                  policy: Optional[ControlPolicy] = None,
                  max_batch: int = 8, batching: str = "microbatch",
-                 deploy: Any = None, edge_device: Optional[EdgeDevice] = None):
+                 deploy: Any = None, edge_device: Optional[EdgeDevice] = None,
+                 share_prefixes: bool = True,
+                 kv_pages: Optional[int] = None):
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
         self.lut = lut
@@ -109,6 +118,11 @@ class AveryEngine:
             self._scheduler = MicrobatchScheduler(
                 executor=executor, max_batch=max_batch,
                 generate=(batching == "generate"))
+        # one paged KV pool shared by every in-flight decoder: prefix
+        # pages cached for one qlen survive that decoder's retirement
+        self.kv_pool = PagePool(
+            page_size=getattr(executor, "page_size", 16),
+            share_prefixes=share_prefixes, initial_pages=kv_pages)
         self._inflight: Dict[int, InflightDecoder] = {}   # qlen -> decoder
         self._retired_inflight = (0, 0)   # (steps, slot-steps) of evicted
         self._futures: Dict[int, RequestFuture] = {}
@@ -119,6 +133,7 @@ class AveryEngine:
         self.n_submitted = 0
         self.n_completed = 0
         self.n_infeasible = 0
+        self.n_blackouts = 0
 
     # ---- sessions ----
 
@@ -205,9 +220,22 @@ class AveryEngine:
             packet = self.executor.edge_insight(
                 request.images, decision.tier, request.request_id, t)
         rec = transport.send(packet, t)
+        if not rec.delivered:            # uplink blackout: fail fast so
+            self._fail_blackout(fut, decision, rec)   # the policy can react
+            return fut
         fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
         self._enqueue_cloud(fut, packet, request.query, decision, rec)
         return fut
+
+    def _fail_blackout(self, fut: RequestFuture, decision: TierDecision,
+                       rec: Any) -> None:
+        """The transport gave up on the packet (bandwidth blackout). The
+        request resolves as a failed delivery — no cloud work — so the
+        caller/policy can defer or retry instead of hanging."""
+        self.n_blackouts += 1
+        fut.emit("blackout", rec.end_s)
+        fut.meta = {"decision": decision, "rec": rec}
+        fut.set_result(self._base_response(fut, feasible=False))
 
     def submit_packet(self, packet: pk.Packet, query, intent: Intent,
                       time_s: float = 0.0,
@@ -230,6 +258,9 @@ class AveryEngine:
             stream=packet.kind,
             tier=self.lut.by_name(packet.tier_name) if packet.tier_name
             else None)
+        if not rec.delivered:
+            self._fail_blackout(fut, decision, rec)
+            return fut
         self._enqueue_cloud(fut, packet, request.query, decision, rec)
         return fut
 
@@ -244,9 +275,10 @@ class AveryEngine:
             dec = self._inflight.get(qlen)
             if dec is None:
                 dec = self._inflight[qlen] = InflightDecoder(
-                    self.executor, slots=self.max_batch)
+                    self.executor, slots=self.max_batch, pool=self.kv_pool)
             dec.submit(rid, fut.request.intent, packet, query,
-                       on_done=self._resolve_inflight)
+                       on_done=self._resolve_inflight,
+                       operator_id=fut.request.operator_id)
             # actual admission may happen steps later if slots are full;
             # the decoder stamps the real join point on the response
             fut.emit("queued", rec.end_s)
@@ -267,7 +299,8 @@ class AveryEngine:
             operator_id=fut.request.operator_id,
             intent=fut.request.intent,
             tier_name=decision.tier.name if decision.tier else None,
-            feasible=decision.feasible, t_submit=fut.request.time_s,
+            feasible=kw.pop("feasible", decision.feasible),
+            t_submit=fut.request.time_s,
             t_delivered=rec.end_s, **kw)
 
     def _resolve_scheduled(self, res: Any) -> None:
@@ -282,12 +315,14 @@ class AveryEngine:
     def _resolve_inflight(self, out: Dict[str, Any]) -> None:
         fut = self._futures[out["seq_id"]]
         fut.emit("served", fut.meta["rec"].end_s,
-                 joined_step=out["joined_step"])
+                 joined_step=out["joined_step"],
+                 prefix_hit=out["prefix_hit"])
         resp = self._base_response(
             fut, answer_logits=out["answer_logits"],
             mask_logits=out["mask_logits"], tokens=out["tokens"],
             batch_size=out["batch_size"])
         resp.joined_step = out["joined_step"]
+        resp.prefix_hit = out["prefix_hit"]
         fut.set_result(resp)
         self.n_completed += 1
 
@@ -300,12 +335,18 @@ class AveryEngine:
         for dec in self._inflight.values():
             dec.pump(1)
 
-    def drain(self) -> List[Response]:
+    def drain(self, release_operator: Optional[str] = None
+              ) -> List[Response]:
         """Serve everything outstanding. Returns the responses delivered
         since the last drain, in submission order — delivered requests
         are evicted from the engine's tables (their ``RequestFuture``
         keeps the response), so a submit/drain/submit stream neither
-        re-returns history nor accumulates served payloads."""
+        re-returns history nor accumulates served payloads.
+
+        Cached prefix pages survive the drain (cross-burst reuse is the
+        point of the prefix store); pass ``release_operator`` to also
+        free that operator's prefix pages once their requests are served
+        (``OperatorSession.close`` does this for you)."""
         if self._scheduler is not None:
             for res in self._scheduler.drain():
                 self._resolve_scheduled(res)
@@ -326,7 +367,15 @@ class AveryEngine:
             else:
                 remaining.append(rid)
         self._order = remaining
+        if release_operator is not None:
+            self.release_prefixes(release_operator)
         return out
+
+    def release_prefixes(self, operator_id: str) -> int:
+        """Free one operator's cached prefix pages (their store pin —
+        pages shared with still-active requests free when those
+        finish). Returns the number of prefix entries released."""
+        return self.kv_pool.release_operator(operator_id)
 
     # ---- profiled mission path (analytic edge + LUT/oracle fidelity) ----
 
@@ -353,6 +402,13 @@ class AveryEngine:
                            created_at=t,
                            payload_bytes=int(tier.payload_mb * 1e6))
         rec = transport.send(packet, t + compute_s)
+        if not rec.delivered:
+            self.n_blackouts += 1
+            return Response(request_id=rid, operator_id=session.operator_id,
+                            intent=intent, tier_name=tier.name,
+                            feasible=False, t_submit=t,
+                            t_delivered=rec.end_s, edge_compute_s=compute_s,
+                            edge_energy_j=energy)
         iou = (session.oracle.measure(tier)
                if session.oracle is not None else None)
         self.n_completed += 1
@@ -380,11 +436,15 @@ class AveryEngine:
                            created_at=t,
                            payload_bytes=int(payload_mb * 1e6))
         rec = transport.send(packet, t + compute_s)
-        self.n_completed += 1
+        if not rec.delivered:
+            self.n_blackouts += 1
+        else:
+            self.n_completed += 1
         return Response(request_id=rid, operator_id=session.operator_id,
-                        intent=Intent.CONTEXT, tier_name=None, feasible=True,
-                        t_submit=t, t_delivered=rec.end_s,
-                        edge_compute_s=compute_s, edge_energy_j=energy)
+                        intent=Intent.CONTEXT, tier_name=None,
+                        feasible=rec.delivered, t_submit=t,
+                        t_delivered=rec.end_s, edge_compute_s=compute_s,
+                        edge_energy_j=energy)
 
     # ---- telemetry ----
 
@@ -394,6 +454,7 @@ class AveryEngine:
             "submitted": self.n_submitted,
             "completed": self.n_completed,
             "infeasible": self.n_infeasible,
+            "blackouts": self.n_blackouts,
         }
         if self._scheduler is not None:
             out["n_microbatches"] = self._scheduler.n_microbatches
@@ -404,6 +465,7 @@ class AveryEngine:
             slots += sum(d.n_slot_steps for d in self._inflight.values())
             out["inflight_steps"] = steps
             out["mean_live_slots"] = slots / steps if steps else 0.0
+            out.update(self.kv_pool.stats())
         if self.executor is not None:
             out["compiled_stages"] = self.executor.num_compiled_stages
         return out

@@ -1,40 +1,50 @@
-"""Token-level continuous batching: the in-flight decode batch.
+"""Token-level continuous batching: the in-flight decode batch over a
+paged, shared-prefix KV cache.
 
 The ``MicrobatchScheduler`` closes a microbatch before serving it — a
 request that arrives one step after a generate batch launched waits for
-the whole batch. The ``InflightDecoder`` removes that barrier: it owns a
-fixed-slot batched KV cache and advances it one decode step at a time
-with *per-row* positions, so between any two steps a newly arrived
-request can be prefilled into a free slot and ride the remaining steps
-of the running batch (ROADMAP "in-flight batching" item, the vLLM-style
-continuous batching discipline).
+the whole batch. The ``InflightDecoder`` removes that barrier: between
+any two decode steps a newly arrived request is prefilled into a free
+slot and rides the remaining steps of the running batch (ROADMAP
+"in-flight batching", the vLLM-style continuous batching discipline).
+
+KV is **paged** (``core.paging``): each slot addresses the shared page
+pool through a per-row page table instead of owning a contiguous
+``width`` ring. Admission is keyed on prefix reuse — the ``[ctx; query]``
+prefix is content-hashed per operator, the first frame pays the LLM
+prefill and pins read-only prefix pages, and every repeat-prefix frame
+(successive frames of one UAV under a standing query) maps the same
+pages plus fresh private decode pages and skips the prefill entirely.
+So N UAVs x M frames pay N prefix prefills, and slot KV memory scales
+with distinct prefixes + live decode tokens, not slots x width.
 
 Per slot lifecycle (mirroring ``vlm.llm_generate``'s seg convention):
-prefill over [ctx; query] emits token 0; each lockstep decode step feeds
-the slot's last token at its own position; after ``T`` steps the slot's
-final step has read the <SEG> hidden state at the last generated token,
-the mask decodes from the stored SAM features, and the slot frees for
-the next pending request. Slots may mix tiers and intents — the decode
-loop runs on the LLM cache only; tier-specific work (bottleneck decode,
-SAM tail) happened at prefill. Context requests ride the same T decode
-steps as Insight ones: the serving contract is a T-token answer for both
-streams, matching ``cloud_generate_batch`` exactly (the equivalence
-tests pin token-level parity).
+prefix prefill (or store hit) emits token 0; each lockstep decode step
+feeds the slot's last token at its own position into its own write slot;
+after ``T`` steps the slot's final step has read the <SEG> hidden state
+at the last generated token, the mask decodes from the per-frame SAM
+features (always computed — frames differ even when the prefix repeats),
+and the slot's private pages free for reuse. Slots may mix tiers and
+intents; Context requests ride the same T decode steps as Insight ones,
+matching ``cloud_generate_batch`` exactly (the equivalence tests pin
+token-level parity, including under slot reuse).
 
-One decoder serves one query length, each with its own ``slots``-wide
-cache — ``max_batch`` caps concurrency per qlen, not globally; idle
-decoders release their cache and are retired by ``AveryEngine.drain``.
+One decoder serves one query length (page tables are fixed-shape per
+qlen); decoders on one engine share one ``PagePool``, so prefix pages
+cached by a retired decoder stay warm for its successors.
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import packets as pk
 from repro.core.intent import Intent
+from repro.core.paging import (TRASH_PAGE, PagePool, pages_for,
+                               prefix_digest, prefix_positions)
 
 
 @dataclass
@@ -44,6 +54,7 @@ class _PendingRequest:
     packet: pk.Packet
     query: np.ndarray
     on_done: Callable[[Dict[str, Any]], None]
+    operator_id: str = ""
 
 
 @dataclass
@@ -54,37 +65,75 @@ class _SlotState:
     feats: Optional[Any]              # (1, T_sam, d_sam) or None (context)
     pos: int                          # absolute position of the next token
     joined_step: int                  # global step index at admission
+    prefix_ids: Tuple[int, ...]       # shared prefix pages (one ref held)
+    private_ids: List[int]            # this slot's decode pages
+    prefix_hit: bool
     steps_done: int = 0
     batch_acc: int = 0                # sum of co-active slots over steps
 
 
 class InflightDecoder:
-    """Drives the executor's in-flight stages over a fixed slot layout.
+    """Drives the executor's paged in-flight stages over a fixed slot
+    layout.
 
     One decoder serves one query length (the prefill shape); the engine
     keys decoders by qlen the same way the microbatch scheduler keys
-    batches. ``submit`` admits into a free slot immediately (prefill +
-    cache scatter); ``step`` advances every live slot one token;
-    ``drain`` runs admission + steps until no work remains.
+    batches. ``submit`` admits into a free slot immediately (prefix
+    lookup/prefill + page allocation); ``step`` advances every live slot
+    one token; ``drain`` runs admission + steps until no work remains.
     """
 
-    def __init__(self, executor, slots: int = 8):
+    def __init__(self, executor, slots: int = 8,
+                 pool: Optional[PagePool] = None):
         self.executor = executor
         self.slots = int(slots)
         self.T = int(executor.max_new_tokens)
+        self.pool = pool if pool is not None else PagePool(
+            page_size=executor.page_size)
+        if self.pool.page_size != executor.page_size:
+            raise ValueError(
+                f"pool page_size {self.pool.page_size} != executor "
+                f"page_size {executor.page_size}")
         self.pending: Deque[_PendingRequest] = deque()
         self.active: Dict[int, _SlotState] = {}
-        self.cache = None
         self.qlen: Optional[int] = None
+        # per-slot paging state, shaped once qlen is known
+        self.page_tables: Optional[np.ndarray] = None   # (slots, n_pages)
+        self.positions: Optional[np.ndarray] = None     # (slots, W_virtual)
         self.step_idx = 0                 # global decode-step counter
         self.n_steps = 0
         self.n_slot_steps = 0             # sum of live slots across steps
         self.n_served = 0
 
+    # ---- geometry (fixed once qlen is known) ----
+
+    @property
+    def prefix_len(self) -> int:
+        return self.executor.pcfg.clip_tokens + self.qlen
+
+    @property
+    def n_prefix_pages(self) -> int:
+        return pages_for(self.prefix_len, self.pool.page_size)
+
+    @property
+    def n_private_pages(self) -> int:
+        return pages_for(self.T, self.pool.page_size)
+
+    @property
+    def width(self) -> int:
+        """Virtual sequence width of one row (page-padded)."""
+        return (self.n_prefix_pages + self.n_private_pages) \
+            * self.pool.page_size
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)
+
     # ---- queueing ----
 
     def submit(self, seq_id: int, intent: Intent, packet: pk.Packet, query,
-               on_done: Callable[[Dict[str, Any]], None]) -> None:
+               on_done: Callable[[Dict[str, Any]], None],
+               operator_id: str = "") -> None:
         query = np.asarray(query).reshape(-1, np.asarray(query).shape[-1])
         if query.shape[0] != 1:
             raise ValueError(
@@ -96,36 +145,60 @@ class InflightDecoder:
             raise ValueError(
                 f"decoder serves qlen={self.qlen}, got {query.shape[-1]}")
         self.pending.append(_PendingRequest(seq_id, intent, packet, query,
-                                            on_done))
+                                            on_done, operator_id))
         self.admit()
 
-    @property
-    def width(self) -> int:
-        return self.executor.pcfg.clip_tokens + self.qlen + self.T
+    # ---- admission: prefix reuse + page allocation between steps ----
 
-    @property
-    def has_work(self) -> bool:
-        return bool(self.pending or self.active)
-
-    # ---- admission: prefill into free slots between steps ----
+    @staticmethod
+    def _prefix_ctx(packet: pk.Packet) -> np.ndarray:
+        """The context features feeding the LLM prefix — the CLIP stream
+        riding in either packet kind."""
+        return packet.content["clip" if packet.kind == "insight" else "ctx"]
 
     def admit(self) -> int:
         admitted = 0
+        page = self.pool.page_size
         while self.pending and len(self.active) < self.slots:
             item = self.pending.popleft()
-            logits0, cache1, feats = self.executor.cloud_prefill(
-                item.packet, item.query, width=self.width)
-            if self.cache is None:
-                self.cache = self.executor.empty_decode_cache(cache1,
-                                                              self.slots)
+            ctx = self._prefix_ctx(item.packet)
+            key = (item.operator_id, prefix_digest(ctx, item.query))
+            entry = self.pool.lookup_prefix(key)
+            hit = entry is not None
+            if not hit:
+                logits0, paged = self.executor.cloud_prefix(ctx, item.query)
+                self.pool.ensure(
+                    self.n_prefix_pages, like=paged,
+                    capacity_hint=1 + self.slots * (self.n_prefix_pages
+                                                    + self.n_private_pages))
+                ids = self.pool.alloc(self.n_prefix_pages)
+                self.pool.kv = self.executor.pool_write(self.pool.kv, paged,
+                                                        ids)
+                entry = self.pool.put_prefix(key, ids, self.prefix_len,
+                                             np.asarray(logits0))
+            else:
+                # a hit rides the stored pages: take this request's ref
+                # (a miss already owns its pages' alloc reference)
+                self.pool.retain(entry.page_ids)
+            private = self.pool.alloc(self.n_private_pages)
+            feats = (self.executor.cloud_sam_feats(item.packet)
+                     if item.packet.kind == "insight" else None)
             slot = min(set(range(self.slots)) - set(self.active))
-            self.cache = self.executor.cache_insert(self.cache, cache1, slot)
-            logits0 = np.asarray(logits0)
+            if self.page_tables is None:
+                n_pages = self.n_prefix_pages + self.n_private_pages
+                self.page_tables = np.full((self.slots, n_pages),
+                                           TRASH_PAGE, np.int32)
+                self.positions = np.full((self.slots, self.width), -1,
+                                         np.int32)
+            self.page_tables[slot] = list(entry.page_ids) + private
+            self.positions[slot] = -1
+            self.positions[slot, :self.n_prefix_pages * page] = \
+                prefix_positions(self.prefix_len, self.n_prefix_pages, page)
             self.active[slot] = _SlotState(
-                req=item, tokens=[int(np.argmax(logits0[0]))],
-                logits0=logits0, feats=feats,
-                pos=self.executor.pcfg.clip_tokens + self.qlen,
-                joined_step=self.step_idx)
+                req=item, tokens=[int(np.argmax(entry.logits0[0]))],
+                logits0=entry.logits0, feats=feats, pos=self.prefix_len,
+                joined_step=self.step_idx, prefix_ids=entry.page_ids,
+                private_ids=private, prefix_hit=hit)
             admitted += 1
         return admitted
 
@@ -136,21 +209,26 @@ class InflightDecoder:
         the number of requests that finished on this step."""
         if not self.active:
             return 0
+        base = self.n_prefix_pages * self.pool.page_size
         toks = np.zeros((self.slots, 1), np.int32)
-        # free slots decode garbage into their own (about-to-be-
-        # overwritten) rows; park them on the last ring slot
-        pos = np.full((self.slots,), self.width - 1, np.int32)
+        # free rows decode garbage through the trash page (their page
+        # tables were reset on release); outputs are discarded
+        pos = np.zeros((self.slots,), np.int32)
+        write_slot = np.zeros((self.slots,), np.int32)
         for s, st in self.active.items():
             toks[s, 0] = st.tokens[-1]
             pos[s] = st.pos
-        logits, seg, self.cache = self.executor.cloud_decode_rows(
-            self.cache, toks, pos)
+            write_slot[s] = base + st.steps_done
+        logits, seg, self.pool.kv = self.executor.cloud_decode_rows(
+            self.pool.kv, self.page_tables, self.positions, toks, pos,
+            write_slot)
         logits, seg = np.asarray(logits), np.asarray(seg)
         live = len(self.active)
         self.n_steps += 1
         self.n_slot_steps += live
         finished = 0
         for s, st in list(self.active.items()):
+            self.positions[s, base + st.steps_done] = st.pos
             st.steps_done += 1
             st.batch_acc += live
             if st.steps_done < self.T:
@@ -172,18 +250,30 @@ class InflightDecoder:
                 "tokens": np.asarray(st.tokens, np.int32)[None, :],
                 "batch_size": st.batch_acc / max(1, st.steps_done),
                 "joined_step": st.joined_step,
+                "prefix_hit": st.prefix_hit,
             })
-            del self.active[s]
+            self._release_slot(s, st)
             self.n_served += 1
             finished += 1
         self.step_idx += 1
         if finished:
             self.admit()              # freed slots let queued requests in
-        if not self.active and not self.pending:
-            self.cache = None         # release the slot KV between bursts
         return finished
 
+    def _release_slot(self, slot: int, st: _SlotState) -> None:
+        """Return the slot's pages (prefix ref + private pages) and park
+        its row on the trash page so later steps can't touch live KV."""
+        self.pool.release(st.prefix_ids)
+        self.pool.release(st.private_ids)
+        self.page_tables[slot] = TRASH_PAGE
+        self.positions[slot] = -1
+        del self.active[slot]
+
     def pump(self, max_steps: int = 1) -> None:
+        # admission first: pending requests must start even when no batch
+        # is running (the engine's lazy-drive paths reach here with
+        # ``active`` empty but ``pending`` not)
+        self.admit()
         for _ in range(max_steps):
             if not self.active:
                 break

@@ -31,3 +31,28 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out = _k.decode_call(qh, kh, vh, bias, group=G, block_k=block_k,
                          interpret=_INTERPRET)
     return out.reshape(B, K, G, hd).reshape(B, H, hd)
+
+
+@jax.jit
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array,
+                           bias: jax.Array) -> jax.Array:
+    """Flash decode against a paged KV cache.
+
+    q (B,H,hd); k_pool/v_pool (P, page, K, hd) — the shared page pool;
+    page_table (B, n_pages) i32 page ids (all entries must be valid —
+    point unused rows at the reserved trash page); bias
+    (B, n_pages*page) additive over the gathered virtual sequence.
+    Returns (B,H,hd). One kv block per page, page table resolved via
+    scalar prefetch.
+    """
+    B, H, hd = q.shape
+    K = k_pool.shape[2]
+    G = H // K
+    qh = q.reshape(B, K, G, hd).reshape(B * H, 1, hd)
+    kh = k_pool.transpose(2, 0, 1, 3)                  # (K, P, page, hd)
+    vh = v_pool.transpose(2, 0, 1, 3)
+    out = _k.paged_decode_call(qh, kh, vh,
+                               jnp.asarray(page_table, jnp.int32), bias,
+                               group=G, interpret=_INTERPRET)
+    return out.reshape(B, K, G, hd).reshape(B, H, hd)

@@ -18,3 +18,18 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgw,bwkh->bkgh", probs, v.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, page_table: jax.Array,
+                               bias: jax.Array) -> jax.Array:
+    """Oracle for the paged path: gather each row's pages into the
+    contiguous (B, W, K, hd) layout, then run the dense reference.
+    q (B,H,hd); k_pool/v_pool (P, page, K, hd); page_table (B, n) i32;
+    bias (B, n*page)."""
+    B = q.shape[0]
+    n, page = page_table.shape[1], k_pool.shape[1]
+    K, hd = k_pool.shape[2], k_pool.shape[3]
+    k = k_pool[page_table].reshape(B, n * page, K, hd)
+    v = v_pool[page_table].reshape(B, n * page, K, hd)
+    return decode_attention_ref(q, k, v, bias)

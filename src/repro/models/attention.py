@@ -189,6 +189,47 @@ def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     return out, {"k": k_cache, "v": v_cache}
 
 
+def gqa_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array,
+                     positions: jax.Array, pool: dict, page_table: jax.Array,
+                     write_page: jax.Array, write_off: jax.Array,
+                     mask: jax.Array) -> Tuple[jax.Array, dict]:
+    """Single-token decode against a shared KV *page pool*.
+
+    x (B,1,d); pool k/v (P, page, K, hd) — pages shared by every live
+    row; page_table (B, n_pages) i32, every entry a valid page id (idle
+    rows point at the reserved trash page); write_page/write_off (B,)
+    page slot receiving the new token's k/v (idle rows may collide on
+    the trash page — their outputs are discarded); mask (B, n_pages*page)
+    additive over the row's gathered virtual sequence. Returns
+    (out, new pool). Gathered virtual order preserves ascending
+    positions and masked slots contribute exactly zero, so outputs match
+    the contiguous ring cache bit-for-bit up to reduction order."""
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.shard_cache_hd:
+        raise NotImplementedError(
+            "paged decode does not support the head_dim-sharded cache")
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, K, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, K, hd)
+    q = _rope_q_or_k(cfg, q, positions)
+    k = _rope_q_or_k(cfg, k, positions)
+    k_pool = pool["k"].at[write_page, write_off].set(k[:, 0])
+    v_pool = pool["v"].at[write_page, write_off].set(v[:, 0])
+    if cfg.use_flash_decode and S == 1:
+        from repro.kernels.decode_attention import ops as decode_ops
+        out = decode_ops.paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                                page_table, mask)[:, None]
+    else:
+        n, page = page_table.shape[1], k_pool.shape[1]
+        kg = k_pool[page_table].reshape(B, n * page, K, hd)
+        vg = v_pool[page_table].reshape(B, n * page, K, hd)
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+        out = _sdpa(q, kg, vg, mask[:, None, :], scale)
+    out = linear(out.reshape(B, S, H * hd), p["wo"])
+    return out, {"k": k_pool, "v": v_pool}
+
+
 def gqa_empty_cache(cfg: ModelConfig, batch: int, width: int) -> dict:
     K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     dt = cfg.adtype
@@ -320,6 +361,16 @@ def attn_decode(p, cfg: ModelConfig, x, positions, cache, slot, mask):
                 "implemented for the GQA cache layout")
         return mla_decode(p, cfg, x, positions, cache, slot, mask)
     return gqa_decode(p, cfg, x, positions, cache, slot, mask)
+
+
+def attn_decode_paged(p, cfg: ModelConfig, x, positions, pool, page_table,
+                      write_page, write_off, mask):
+    if cfg.attn_type == "mla":
+        raise NotImplementedError(
+            "the paged KV pool is only implemented for the GQA cache "
+            "layout (MLA's latent cache pages differently)")
+    return gqa_decode_paged(p, cfg, x, positions, pool, page_table,
+                            write_page, write_off, mask)
 
 
 def empty_cache(cfg: ModelConfig, batch: int, width: int) -> dict:

@@ -220,6 +220,26 @@ def _moe_block_decode(p, cfg, x, positions, cache, slot, mask):
     return x + y, c2
 
 
+def _dense_block_decode_paged(p, cfg, x, positions, pool, page_table,
+                              write_page, write_off, mask):
+    h, c2 = attention.attn_decode_paged(
+        p["attn"], cfg, apply_norm(x, p["norm1"], cfg), positions, pool,
+        page_table, write_page, write_off, mask)
+    x = x + h
+    x = x + moe_lib.dense_mlp(p["mlp"], cfg, apply_norm(x, p["norm2"], cfg))
+    return x, c2
+
+
+def _moe_block_decode_paged(p, cfg, x, positions, pool, page_table,
+                            write_page, write_off, mask):
+    h, c2 = attention.attn_decode_paged(
+        p["attn"], cfg, apply_norm(x, p["norm1"], cfg), positions, pool,
+        page_table, write_page, write_off, mask)
+    x = x + h
+    y, _ = moe_lib.moe_mlp(p["moe"], cfg, apply_norm(x, p["norm2"], cfg))
+    return x + y, c2
+
+
 def _mamba_block_decode(p, cfg, x, state):
     step = ssm.mamba1_step if cfg.ssm.version == 1 else ssm.mamba2_step
     h, s2 = step(p["mixer"], cfg, apply_norm(x, p["norm"], cfg), state)
@@ -267,6 +287,36 @@ def group_decode(params: Any, cfg: ModelConfig, spec: GroupSpec, x: jax.Array,
                             unroll=cfg.scan_unroll)
 
     raise ValueError(spec.kind)
+
+
+def group_decode_paged(params: Any, cfg: ModelConfig, spec: GroupSpec,
+                       x: jax.Array, positions: jax.Array, pool: Any,
+                       page_table: jax.Array, write_page: jax.Array,
+                       write_off: jax.Array, mask: jax.Array):
+    """Single-token decode through one group against a shared KV page
+    pool (leaves (L, P, page, ...)). Attention-cache stacks only — SSM
+    recurrent state has no sequence axis to page. Returns
+    (x, new pool)."""
+    if spec.kind == "dense":
+        def body(h, inp):
+            lp, c = inp
+            return _dense_block_decode_paged(lp, cfg, h, positions, c,
+                                             page_table, write_page,
+                                             write_off, mask)
+        return jax.lax.scan(body, x, (params, pool),
+                            unroll=cfg.scan_unroll)
+
+    if spec.kind == "moe":
+        def body(h, inp):
+            lp, c = inp
+            return _moe_block_decode_paged(lp, cfg, h, positions, c,
+                                           page_table, write_page,
+                                           write_off, mask)
+        return jax.lax.scan(body, x, (params, pool),
+                            unroll=cfg.scan_unroll)
+
+    raise NotImplementedError(
+        f"paged decode caches cover attention stacks only, not {spec.kind}")
 
 
 # ---------------------------------------------------------------------------

@@ -361,3 +361,139 @@ def test_inflight_matches_one_shot_across_tiers_and_intents(executor):
         assert np.array_equal(res.tokens, toks)
     assert max(joined) > 0             # later requests joined mid-stream
     assert engine.stats["mean_live_slots"] > 1.0
+
+
+# ---- paged KV cache: slot reuse, prefix sharing, admission pump ----
+
+
+def test_slot_reuse_parity_with_one_shot_generate(executor):
+    """More requests than slots through one decoder (forcing slot and
+    page reuse) still reproduce per-request one-shot generate results —
+    a reused slot must never attend a leftover token (the contiguous
+    cache's stale-ring-slot hazard, structural in the paged layout:
+    freed rows park on the trash page and positions reset)."""
+    reqs = _edge_requests(executor, 5, seed=41)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        res = fut.result()
+        out = executor.cloud_generate_batch([pkt], [q])[0]
+        if it is Intent.INSIGHT:
+            mask, logits0, toks = out
+            np.testing.assert_allclose(res.mask_logits, mask, atol=3e-4)
+        else:
+            logits0, toks = out
+        np.testing.assert_allclose(res.answer_logits, logits0, atol=3e-4)
+        assert np.array_equal(res.tokens, toks)
+    # all private pages returned; only cached prefix pages stay pinned
+    from repro.core.paging import pages_for
+    stats = engine.stats
+    qlen = reqs[0][1].shape[-1]
+    per_prefix = pages_for(executor.pcfg.clip_tokens + qlen,
+                           executor.page_size)
+    assert stats["kv_pages_in_use"] == stats["prefix_entries"] * per_prefix
+
+
+def test_prefix_reuse_and_release(executor):
+    """Repeat-prefix frames from one operator hit the prefix store (one
+    prefill for M frames), hits serve byte-identical results, and
+    draining with ``release_operator`` frees the cached pages."""
+    import jax.numpy as jnp
+
+    from repro.data import floodseg
+    rng = np.random.RandomState(51)
+    b = floodseg.make_batch(rng, 1, "segment", augment=False)
+    img = jnp.asarray(b["images"])
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=4)
+    sessA = engine.session("uav-A")
+    sessB = engine.session("uav-B")
+    futs = []
+    for i in range(3):           # same frame + standing query -> same prefix
+        pkt = executor.edge_insight(img, LUT.tiers[0], i, 0.0)
+        futs.append(engine.submit_packet(pkt, b["query"], Intent.INSIGHT,
+                                         time_s=float(i), session=sessA))
+    # same content under another operator must NOT share (per-operator key)
+    pkt = executor.edge_insight(img, LUT.tiers[0], 3, 0.0)
+    fut_b = engine.submit_packet(pkt, b["query"], Intent.INSIGHT,
+                                 time_s=3.0, session=sessB)
+    engine.drain()
+    hits = [f.result().prefix_hit for f in futs]
+    assert hits == [False, True, True]
+    assert fut_b.result().prefix_hit is False
+    stats = engine.stats
+    assert stats["prefix_hits"] == 2 and stats["prefix_misses"] == 2
+    assert 0.0 < stats["prefix_hit_rate"] < 1.0
+    assert stats["prefix_entries"] == 2
+    assert stats["kv_pages_in_use"] > 0
+    # hit responses equal the miss response byte-for-byte
+    r0 = futs[0].result()
+    for f in futs[1:]:
+        np.testing.assert_array_equal(f.result().answer_logits,
+                                      r0.answer_logits)
+        np.testing.assert_array_equal(f.result().tokens, r0.tokens)
+    # releasing one operator frees exactly their entry; close() the other
+    assert engine.release_prefixes("uav-A") == 1
+    assert engine.stats["prefix_entries"] == 1
+    assert sessB.close() == 1
+    assert engine.stats["kv_pages_in_use"] == 0
+
+
+def test_pump_admits_pending_when_no_batch_is_running(executor):
+    """``pump`` must start pending requests even when ``active`` is empty
+    (the engine's lazy-drive paths reach the decoder in that state);
+    before the fix it returned without admitting and the request hung."""
+    from repro.engine.inflight import InflightDecoder, _PendingRequest
+    reqs = _edge_requests(executor, 1, seed=61)
+    pkt, q, it = reqs[0]
+    dec = InflightDecoder(executor, slots=2)
+    done = []
+    dec.qlen = int(np.asarray(q).shape[-1])
+    dec.pending.append(_PendingRequest(0, it, pkt, np.asarray(q),
+                                       done.append))
+    assert not dec.active
+    for _ in range(executor.max_new_tokens):
+        dec.pump(1)
+    assert len(done) == 1
+    out = executor.cloud_generate_batch([pkt], [q])[0]
+    assert np.array_equal(done[0]["tokens"], out[-1])
+
+
+def test_blackout_resolves_request_as_failed():
+    """A transport blackout (all-zero trace) surfaces as a failed,
+    infeasible-style response the policy can react to — not a hang."""
+    from repro.network import Channel
+    from repro.network.traces import BandwidthTrace
+    trace = BandwidthTrace(np.zeros(10), name="dead")
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                         transport=ChannelTransport(Channel(trace)),
+                         policy=StaticTierPolicy("High Throughput"))
+    fut = engine.session("op").submit(
+        prompt="segment the person",
+        images=_insight_images(np.random.RandomState(0)),
+        query=np.zeros((1, 4), np.int32))
+    out = engine.drain()
+    res = fut.result()
+    assert res is out[0]
+    assert not res.feasible and res.answer_logits is None
+    assert any(e.kind == "blackout" for e in res.events)
+    assert engine.stats["blackouts"] == 1
+
+
+def test_no_share_prefixes_frees_all_pages(executor):
+    """With the prefix store disabled every request owns its prefix
+    pages outright — they must free when the request finishes (no
+    refcount leak), leaving the pool empty after a drain."""
+    reqs = _edge_requests(executor, 3, seed=71)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, share_prefixes=False)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    assert all(f.result().prefix_hit is False for f in futs)
+    stats = engine.stats
+    assert stats["prefix_entries"] == 0
+    assert stats["kv_pages_in_use"] == 0    # everything returned

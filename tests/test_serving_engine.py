@@ -260,3 +260,30 @@ def test_scheduler_generate_mode(executor):
         assert res.tokens.shape == (1, executor.max_new_tokens)
         if req.intent is Intent.INSIGHT:
             assert res.mask_logits is not None
+
+
+# ---- paged shared-prefix serving bench mode (slow) ----
+
+
+@pytest.mark.slow
+def test_bench_serving_paged_mode_reports_prefix_reuse():
+    """The bench's paged mode must report a prefix-cache hit rate and an
+    admission-throughput speedup from prefix reuse on the repeat-prefix
+    per-UAV workload (>= 2x on the Context stream, whose admission cost
+    is the prefix prefill the store removes)."""
+    import subprocess
+    import sys
+
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serving", "--paged-smoke"],
+        capture_output=True, text=True, timeout=560,
+        env={**__import__("os").environ, "PYTHONPATH": "src:."})
+    assert out.returncode == 0, out.stderr[-2000:]
+    rows = [l for l in out.stdout.splitlines()
+            if l.startswith("serving/paged_admit_")]
+    assert len(rows) == 2
+    ctx_row = next(r for r in rows if "context" in r)
+    fields = dict(f.split("=") for f in ctx_row.split(",")[2].split(";"))
+    assert float(fields["speedup_vs_no_prefix_reuse"].rstrip("x")) >= 2.0
+    assert 0.0 < float(fields["prefix_hit_rate"]) <= 1.0
+    assert float(fields["kv_bytes_saved"]) > 0
