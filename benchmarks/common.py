@@ -134,3 +134,44 @@ def emit(name: str, us: float, derived: str) -> str:
     row = f"{name},{us:.0f},{derived}"
     print(row, flush=True)
     return row
+
+
+def write_bench_json(rows, filename: str = "BENCH_serving.json") -> str:
+    """Persist benchmark rows as a machine-readable artifact so the perf
+    trajectory is tracked across PRs instead of living only in logs.
+
+    ``rows`` are the strings ``emit`` returns (``name,us,k=v;k=v;...``);
+    they merge by row name into ``benchmarks/artifacts/<filename>``, so
+    partial runs (``--paged-smoke``, ``--spec``) update their rows
+    without clobbering the rest. Returns the artifact path."""
+    import json
+
+    path = os.path.join(ART, filename)
+    records = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("records"),
+                                                     dict):
+                records = prev["records"]
+        except (json.JSONDecodeError, OSError):
+            pass                       # corrupt artifact: regenerate
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        rec = {"us": float(us)}
+        for kv in derived.split(";"):
+            if "=" not in kv:
+                continue
+            k, v = kv.split("=", 1)
+            try:
+                rec[k] = float(v.rstrip("x"))
+            except ValueError:
+                rec[k] = v
+        records[name] = rec
+    os.makedirs(ART, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"benchmark": os.path.splitext(filename)[0],
+                   "records": records}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

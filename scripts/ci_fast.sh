@@ -15,3 +15,6 @@ python -m repro.launch.serve --duration 2 --smoke --max-batch 4 --batching infli
 echo "[ci_fast] paged shared-prefix serving smoke"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving --paged-smoke
+echo "[ci_fast] speculative decoding smoke"
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --spec-smoke

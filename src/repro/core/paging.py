@@ -17,10 +17,20 @@ fall out of that indirection (the vLLM paged-attention discipline):
     (ROADMAP "paged / shared-prefix KV cache").
 
 This module is the *host-side* bookkeeping: a refcounting free-page
-allocator, the per-operator prefix store, and the telemetry counters the
-engine reports. The device arrays themselves (``PagePool.kv``) are
-written/read by the executor's jitted page ops (``core.streams``) and
-the paged decode kernel (``kernels.decode_attention``).
+allocator, the per-operator prefix store (optionally LRU-capped via
+``max_prefixes`` so long multi-operator missions don't grow the pool
+unboundedly), and the telemetry counters the engine reports. The device
+arrays themselves (``PagePool.kv``) are written/read by the executor's
+jitted page ops (``core.streams``) and the paged decode kernel
+(``kernels.decode_attention``).
+
+Speculative decoding allocates decode pages *ahead* of acceptance: a
+verify chunk writes drafted tokens past the committed length, and a
+rejection truncates back. ``grow_to``/``rollback_to`` manage one row's
+private page run under that discipline — pages wholly past the accepted
+length free immediately, refcounts intact — and ``kv_pages_peak``
+records the transient high-water mark those bursts produce (the number
+to size a fixed pool by).
 
 Page id 0 is the reserved **trash page**: idle decode rows park their
 page tables on it, so their (discarded) writes can never corrupt a live
@@ -90,16 +100,24 @@ class PagePool:
     """
 
     def __init__(self, page_size: int = 16, share_prefixes: bool = True,
-                 initial_pages: Optional[int] = None):
+                 initial_pages: Optional[int] = None,
+                 max_prefixes: Optional[int] = None):
         self.page_size = int(page_size)
         self.share_prefixes = bool(share_prefixes)
         self.initial_pages = initial_pages
+        if max_prefixes is not None and max_prefixes < 1:
+            raise ValueError(f"max_prefixes must be >= 1, got {max_prefixes}")
+        self.max_prefixes = max_prefixes
         self.kv: Optional[Dict] = None
         self._refcount: List[int] = []
         self._free: List[int] = []
+        # insertion order doubles as recency order: a hit reinserts its
+        # key at the back, so the front is always the LRU candidate
         self.prefix: Dict[Tuple[str, str], PrefixEntry] = {}
         self.prefix_hits = 0
         self.prefix_misses = 0
+        self.prefix_evictions = 0
+        self.kv_pages_peak = 0
 
     # ---- capacity ----
 
@@ -155,6 +173,7 @@ class PagePool:
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
             self._refcount[i] = 1
+        self.kv_pages_peak = max(self.kv_pages_peak, self.pages_in_use)
         return ids
 
     def retain(self, ids: Sequence[int]) -> None:
@@ -169,6 +188,36 @@ class PagePool:
             if self._refcount[i] == 0:
                 self._free.append(i)
 
+    # ---- speculative allocation (draft overhang + rollback) ----
+
+    def grow_to(self, ids: List[int], tokens: int) -> List[int]:
+        """Extend one row's private page run (in place) to cover
+        ``tokens`` slots — the speculative path allocates ahead so a
+        verify chunk can write drafted tokens past the committed length.
+        Returns the freshly allocated page ids (empty when the run
+        already covers ``tokens``)."""
+        need = pages_for(tokens, self.page_size)
+        if need <= len(ids):
+            return []
+        fresh = self.alloc(need - len(ids))
+        ids.extend(fresh)
+        return fresh
+
+    def rollback_to(self, ids: List[int], tokens: int) -> List[int]:
+        """Speculative rollback: truncate one row's private page run (in
+        place) to the pages covering ``tokens`` accepted slots. Pages
+        wholly past the accepted length lose this row's reference and
+        free immediately (refcounts intact — a page somehow shared stays
+        live for its other holders). Returns the dropped page ids so the
+        caller can park its page-table entries back on the trash page."""
+        keep = pages_for(tokens, self.page_size)
+        if keep >= len(ids):
+            return []
+        dropped = list(ids[keep:])
+        del ids[keep:]
+        self.release(dropped)
+        return dropped
+
     # ---- prefix store ----
 
     def lookup_prefix(self, key: Tuple[str, str]) -> Optional[PrefixEntry]:
@@ -177,6 +226,8 @@ class PagePool:
             self.prefix_misses += 1
         else:
             self.prefix_hits += 1
+            self.prefix.pop(key)          # refresh recency: move to back
+            self.prefix[key] = entry
         return entry
 
     def put_prefix(self, key: Tuple[str, str], page_ids: Sequence[int],
@@ -193,7 +244,20 @@ class PagePool:
         if self.share_prefixes:
             self.prefix[key] = entry
             self.retain(entry.page_ids)
+            self._evict_lru()
         return entry
+
+    def _evict_lru(self) -> None:
+        """Enforce ``max_prefixes``: drop least-recently-hit entries
+        (the store's pin only — pages still retained by a live request
+        survive until that request finishes, so eviction is always
+        refcount-safe)."""
+        if self.max_prefixes is None:
+            return
+        while len(self.prefix) > self.max_prefixes:
+            lru = next(iter(self.prefix))
+            self.release(self.prefix.pop(lru).page_ids)
+            self.prefix_evictions += 1
 
     def release_operator(self, operator_id: str) -> int:
         """Drop every stored prefix of one operator (their pin; pages
@@ -216,8 +280,10 @@ class PagePool:
             "kv_page_size": self.page_size,
             "kv_pages_total": self.num_pages,
             "kv_pages_in_use": self.pages_in_use,
+            "kv_pages_peak": self.kv_pages_peak,
             "prefix_entries": len(self.prefix),
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
             "prefix_hit_rate": self.prefix_hit_rate,
+            "prefix_evictions": self.prefix_evictions,
         }

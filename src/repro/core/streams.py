@@ -109,6 +109,13 @@ class DualStreamExecutor:
             lambda p, pool, pt, posarr, tok, pos, ws:
             vlm.llm_decode_step_paged(p, self._gen_pcfg, pool, pt, posarr,
                                       tok, pos, ws))
+        # speculative verify: one paged multi-token pass over every live
+        # slot's chunk (last accepted token + drafts); the jit cache keys
+        # on the chunk width C via the tokens shape
+        self._verify_paged = jax.jit(
+            lambda p, pool, pt, posarr, tok, pos, ws, cl:
+            vlm.llm_verify_step_paged(p, self._gen_pcfg, pool, pt, posarr,
+                                      tok, pos, ws, cl))
         self._mask_decode = jax.jit(
             lambda p, feats, seg: vlm.mask_decode(p, pcfg, feats, seg))
         self._pool_write = jax.jit(_pool_write)
@@ -350,6 +357,24 @@ class DualStreamExecutor:
                                   jnp.asarray(tokens, jnp.int32),
                                   jnp.asarray(pos, jnp.int32),
                                   jnp.asarray(write_slot, jnp.int32))
+
+    def cloud_verify_rows(self, pool: Dict, page_table, positions, tokens,
+                          pos, write_slot, chunk_len
+                          ) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        """One speculative verify step over all slots: tokens
+        (slots, C) i32 chunks (last accepted token + drafts, pad past
+        ``chunk_len``); pos / write_slot (slots,) i32 starts; chunk_len
+        (slots,) i32 real chunk entries per row (pad entries write to
+        the trash page and their logits are discarded). Returns
+        (answer_logits (slots, C, V), seg (slots, C, d_sam), new pool)
+        — ``vlm.llm_verify_step_paged`` semantics."""
+        return self._verify_paged(self.params, pool,
+                                  jnp.asarray(page_table, jnp.int32),
+                                  jnp.asarray(positions, jnp.int32),
+                                  jnp.asarray(tokens, jnp.int32),
+                                  jnp.asarray(pos, jnp.int32),
+                                  jnp.asarray(write_slot, jnp.int32),
+                                  jnp.asarray(chunk_len, jnp.int32))
 
     def cloud_mask(self, feats, seg) -> np.ndarray:
         """<SEG>-conditioned mask decode from stored sam feats (the final

@@ -294,6 +294,67 @@ def llm_decode_step_paged(params: dict, pcfg: LISAPipelineConfig, pool: Dict,
     return answer_logits, seg, {"groups": [kv]}
 
 
+def llm_verify_step_paged(params: dict, pcfg: LISAPipelineConfig, pool: Dict,
+                          page_table: jax.Array, positions: jax.Array,
+                          tokens: jax.Array, pos: jax.Array,
+                          write_slot: jax.Array, chunk_len: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One speculative *verify* step: a chunk of C tokens per row — the
+    row's last accepted token followed by drafted continuations — scored
+    through the serving model in a single paged multi-token pass.
+
+    pool/page_table/positions as in ``llm_decode_step_paged``; tokens
+    (B, C) i32 chunk tokens occupying consecutive virtual slots
+    ``write_slot .. write_slot+C-1`` at absolute positions
+    ``pos .. pos+C-1`` (both (B,) i32 starts); chunk_len (B,) i32 marks
+    how many leading chunk entries are real — pad entries scatter their
+    k/v to the reserved trash page, record no position, and their
+    logits are garbage the caller ignores (this is what lets plain
+    C=1-style rows ride the same jitted call as speculating rows).
+
+    Causal within the chunk: the chunk's k/v land in the pool before
+    attention and the position mask admits slots with position <= the
+    query's, so chunk token i attends [cache; chunk tokens <= i] —
+    exactly the context C successive ``llm_decode_step_paged`` calls
+    would give it. Returns (answer_logits (B, C, V), seg (B, C, d_sam),
+    new pool): logits[:, i] is the model's next-token distribution
+    after consuming chunk token i (column 0 of a chunk_len=1 call
+    matches ``llm_decode_step_paged`` on the same token), and seg[:, i]
+    is the <SEG> read at chunk position i (the final accepted position
+    supplies ``llm_generate``'s end-of-answer embedding)."""
+    from repro.core.paging import TRASH_PAGE
+    llm = pcfg.llm
+    p = params["llm"]
+    B, C = tokens.shape
+    page = pool["groups"][0]["k"].shape[2]
+    n_slots = positions.shape[1]
+    x = jnp.take(p["embed"], tokens, axis=0).astype(llm.adtype)
+    rows = jnp.arange(B)[:, None]
+    offs = jnp.arange(C, dtype=jnp.int32)[None, :]
+    valid = offs < jnp.asarray(chunk_len, jnp.int32)[:, None]
+    pos_c = jnp.asarray(pos, jnp.int32)[:, None] + offs          # (B, C)
+    ws = jnp.asarray(write_slot, jnp.int32)[:, None] + offs      # (B, C)
+    # pad entries scatter out of bounds -> dropped (their positions stay
+    # unset, so their trash-page writes can never be attended as valid)
+    ws_sc = jnp.where(valid, ws, n_slots)
+    pos_arr = jnp.asarray(positions, jnp.int32).at[rows, ws_sc].set(
+        pos_c, mode="drop")
+    mask = cache_mask(pos_arr[:, None, :], pos_c[:, :, None],
+                      llm.sliding_window)                        # (B, C, W)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    ws_in = jnp.minimum(ws, n_slots - 1)
+    write_page = jnp.where(valid, page_table[rows, ws_in // page],
+                           TRASH_PAGE)
+    write_off = ws_in % page
+    spec = stack.layer_groups(llm)[0]
+    x, kv = stack.group_verify_paged(p["groups"][0], llm, spec, x, pos_c,
+                                     pool["groups"][0], page_table,
+                                     write_page, write_off, mask)
+    x = stack.apply_norm(x, p["norm"], llm)
+    answer_logits, seg = _llm_outputs(params, x)
+    return answer_logits, seg, {"groups": [kv]}
+
+
 def llm_decode_step(params: dict, pcfg: LISAPipelineConfig, cache: Dict,
                     tokens: jax.Array, pos: jax.Array
                     ) -> Tuple[jax.Array, jax.Array, Dict]:

@@ -1,10 +1,11 @@
 """AVERY engine: the intent-driven request/response front door.
 
-  api        — Request / Response / StreamEvent / RequestFuture
-  transport  — Transport protocol; ChannelTransport, LoopbackTransport
-  policy     — ControlPolicy protocol; Adaptive / StaticTier / BestEffort
-  inflight   — token-level continuous batching (join a running decode)
-  engine     — AveryEngine + OperatorSession
+  api         — Request / Response / StreamEvent / RequestFuture
+  transport   — Transport protocol; ChannelTransport, LoopbackTransport
+  policy      — ControlPolicy protocol; Adaptive / StaticTier / BestEffort
+  inflight    — token-level continuous batching (join a running decode)
+  speculative — Context-stream DraftModel + paged multi-token verify
+  engine      — AveryEngine + OperatorSession
 
 All entry points (serving launcher, mission simulator, fleet runtime,
 benchmarks) construct and drive the system through this package.
@@ -15,6 +16,8 @@ from repro.engine.inflight import InflightDecoder
 from repro.engine.policy import (AdaptivePolicy, BestEffortPolicy,
                                  ControlPolicy, StaticTierPolicy,
                                  TierDecision, policy_from_mode)
+from repro.engine.speculative import (DraftModel, SpecStats,
+                                      SpeculativeConfig)
 from repro.engine.transport import (ChannelTransport, LoopbackTransport,
                                     Transport)
 
@@ -23,5 +26,6 @@ __all__ = [
     "AveryEngine", "OperatorSession", "InflightDecoder",
     "ControlPolicy", "TierDecision", "AdaptivePolicy", "StaticTierPolicy",
     "BestEffortPolicy", "policy_from_mode",
+    "DraftModel", "SpecStats", "SpeculativeConfig",
     "Transport", "ChannelTransport", "LoopbackTransport",
 ]

@@ -67,6 +67,9 @@ class Response:
     # in-flight: whether the [ctx; query] prefix was served from the
     # shared prefix store (no prefill paid) — None outside that path
     prefix_hit: Optional[bool] = None
+    # in-flight: whether this request decoded speculatively (Context-
+    # stream drafts + paged multi-token verify) — None outside that path
+    speculative: Optional[bool] = None
     events: List[StreamEvent] = field(default_factory=list)
 
     @property

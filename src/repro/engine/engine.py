@@ -44,6 +44,7 @@ from repro.core.paging import PagePool
 from repro.engine.api import Request, RequestFuture, Response
 from repro.engine.inflight import InflightDecoder
 from repro.engine.policy import AdaptivePolicy, ControlPolicy, TierDecision
+from repro.engine.speculative import SpecStats, SpeculativeConfig
 from repro.engine.transport import LoopbackTransport, Transport
 from repro.network.energy import EdgeDevice, edge_insight_flops
 
@@ -100,7 +101,15 @@ class AveryEngine:
                  max_batch: int = 8, batching: str = "microbatch",
                  deploy: Any = None, edge_device: Optional[EdgeDevice] = None,
                  share_prefixes: bool = True,
-                 kv_pages: Optional[int] = None):
+                 kv_pages: Optional[int] = None,
+                 max_prefixes: Optional[int] = None,
+                 speculative: Any = None):
+        """``speculative`` (in-flight batching only): ``True`` enables
+        Context-stream draft + paged multi-token verify with defaults,
+        an int sets ``draft_tokens``, a ``SpeculativeConfig`` sets
+        everything; the active ``ControlPolicy``'s ``allow_speculation``
+        gates drafting on the observed acceptance rate.
+        ``max_prefixes`` LRU-caps the shared prefix store."""
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
         self.lut = lut
@@ -122,9 +131,19 @@ class AveryEngine:
         # pages cached for one qlen survive that decoder's retirement
         self.kv_pool = PagePool(
             page_size=getattr(executor, "page_size", 16),
-            share_prefixes=share_prefixes, initial_pages=kv_pages)
+            share_prefixes=share_prefixes, initial_pages=kv_pages,
+            max_prefixes=max_prefixes)
+        self.spec_config = self._resolve_speculative(speculative)
+        if self.spec_config is not None and batching != "inflight":
+            raise ValueError(
+                "speculative decoding rides the in-flight batch; "
+                "construct the engine with batching='inflight'")
+        # draft prefill rows shared across decoders, like kv_pool: a
+        # repeat-prefix frame after a drain skips the draft prefill too
+        self._draft_prefix_rows: Dict = {}
         self._inflight: Dict[int, InflightDecoder] = {}   # qlen -> decoder
         self._retired_inflight = (0, 0)   # (steps, slot-steps) of evicted
+        self._retired_spec = SpecStats()  # spec telemetry of evicted
         self._futures: Dict[int, RequestFuture] = {}
         self._order: List[int] = []
         self._seq = 0
@@ -134,6 +153,41 @@ class AveryEngine:
         self.n_completed = 0
         self.n_infeasible = 0
         self.n_blackouts = 0
+
+    @staticmethod
+    def _resolve_speculative(speculative: Any) -> Optional[SpeculativeConfig]:
+        if speculative is None or speculative is False:
+            return None
+        if speculative is True:
+            return SpeculativeConfig()
+        if isinstance(speculative, int):
+            return SpeculativeConfig(draft_tokens=speculative)
+        if isinstance(speculative, SpeculativeConfig):
+            return speculative
+        raise ValueError(
+            f"speculative must be bool, int, or SpeculativeConfig, got "
+            f"{speculative!r}")
+
+    def _merged_spec_stats(self) -> SpecStats:
+        """Engine-lifetime speculation telemetry: retired decoders'
+        counters plus every live decoder's."""
+        spec = SpecStats()
+        spec.merge(self._retired_spec)
+        for d in self._inflight.values():
+            spec.merge(d.spec_stats)
+        return spec
+
+    def _spec_gate(self, stats: SpecStats) -> bool:
+        """The policy's drafting gate. Decided on the *engine-lifetime*
+        acceptance stats, not the calling decoder's own (``stats``) —
+        decoders retire on every ``drain`` and a per-burst view would
+        re-enable a drafting scheme the floor already rejected, re-
+        paying the warm-up waste each burst. Policies without the hook
+        leave drafting on."""
+        allow = getattr(self.policy, "allow_speculation", None)
+        if allow is None:
+            return True
+        return bool(allow(self._merged_spec_stats(), self.spec_config))
 
     # ---- sessions ----
 
@@ -275,7 +329,9 @@ class AveryEngine:
             dec = self._inflight.get(qlen)
             if dec is None:
                 dec = self._inflight[qlen] = InflightDecoder(
-                    self.executor, slots=self.max_batch, pool=self.kv_pool)
+                    self.executor, slots=self.max_batch, pool=self.kv_pool,
+                    spec=self.spec_config, spec_gate=self._spec_gate,
+                    spec_prefix_rows=self._draft_prefix_rows)
             dec.submit(rid, fut.request.intent, packet, query,
                        on_done=self._resolve_inflight,
                        operator_id=fut.request.operator_id)
@@ -323,6 +379,7 @@ class AveryEngine:
             batch_size=out["batch_size"])
         resp.joined_step = out["joined_step"]
         resp.prefix_hit = out["prefix_hit"]
+        resp.speculative = out.get("speculative")
         fut.set_result(resp)
         self.n_completed += 1
 
@@ -357,6 +414,7 @@ class AveryEngine:
             steps, slots = self._retired_inflight
             self._retired_inflight = (steps + dec.n_steps,
                                       slots + dec.n_slot_steps)
+            self._retired_spec.merge(dec.spec_stats)
             del self._inflight[qlen]
         out, remaining = [], []
         for rid in self._order:
@@ -374,7 +432,11 @@ class AveryEngine:
     def release_prefixes(self, operator_id: str) -> int:
         """Free one operator's cached prefix pages (their store pin —
         pages shared with still-active requests free when those
-        finish). Returns the number of prefix entries released."""
+        finish) and their cached draft prefill rows. Returns the number
+        of prefix entries released."""
+        for skey in [k for k in self._draft_prefix_rows
+                     if k[0][0] == operator_id]:
+            del self._draft_prefix_rows[skey]
         return self.kv_pool.release_operator(operator_id)
 
     # ---- profiled mission path (analytic edge + LUT/oracle fidelity) ----
@@ -466,6 +528,8 @@ class AveryEngine:
             out["inflight_steps"] = steps
             out["mean_live_slots"] = slots / steps if steps else 0.0
             out.update(self.kv_pool.stats())
+            if self.spec_config is not None:
+                out.update(self._merged_spec_stats().as_dict())
         if self.executor is not None:
             out["compiled_stages"] = self.executor.num_compiled_stages
         return out

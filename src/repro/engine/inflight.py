@@ -32,6 +32,19 @@ token-level parity, including under slot reuse).
 One decoder serves one query length (page tables are fixed-shape per
 qlen); decoders on one engine share one ``PagePool``, so prefix pages
 cached by a retired decoder stay warm for its successors.
+
+With a ``SpeculativeConfig`` the decoder runs the draft/verify loop
+(``engine.speculative``): each pump step first lets the Context-stream
+``DraftModel`` propose k tokens per speculating row, then scores every
+row's chunk — its last accepted token plus the drafts, plain rows a
+chunk of one — through the serving model in a single paged multi-token
+pass (``cloud_verify_rows``). Greedy acceptance advances each row by
+1..k+1 tokens per step; decode pages are allocated ahead for the draft
+overhang and rolled back past the accepted length on rejection
+(``PagePool.grow_to``/``rollback_to``), and the acceptance-rate stats
+feed the control policy's drafting gate. Output is token-exact with the
+plain path (and with ``llm_generate``) by construction — a draft is
+accepted only where it equals the serving model's own greedy pick.
 """
 from __future__ import annotations
 
@@ -45,6 +58,8 @@ from repro.core import packets as pk
 from repro.core.intent import Intent
 from repro.core.paging import (TRASH_PAGE, PagePool, pages_for,
                                prefix_digest, prefix_positions)
+from repro.engine.speculative import (DraftModel, SpecStats,
+                                      SpeculativeConfig, greedy_accept)
 
 
 @dataclass
@@ -55,6 +70,7 @@ class _PendingRequest:
     query: np.ndarray
     on_done: Callable[[Dict[str, Any]], None]
     operator_id: str = ""
+    speculative: Optional[bool] = None   # None -> decoder default
 
 
 @dataclass
@@ -68,6 +84,8 @@ class _SlotState:
     prefix_ids: Tuple[int, ...]       # shared prefix pages (one ref held)
     private_ids: List[int]            # this slot's decode pages
     prefix_hit: bool
+    speculative: bool = False         # drafting enabled for this row
+    seg: Optional[np.ndarray] = None  # <SEG> state once the final token fed
     steps_done: int = 0
     batch_acc: int = 0                # sum of co-active slots over steps
 
@@ -84,7 +102,10 @@ class InflightDecoder:
     """
 
     def __init__(self, executor, slots: int = 8,
-                 pool: Optional[PagePool] = None):
+                 pool: Optional[PagePool] = None,
+                 spec: Optional[SpeculativeConfig] = None,
+                 spec_gate: Optional[Callable[[SpecStats], bool]] = None,
+                 spec_prefix_rows: Optional[Dict[Any, Any]] = None):
         self.executor = executor
         self.slots = int(slots)
         self.T = int(executor.max_new_tokens)
@@ -94,6 +115,15 @@ class InflightDecoder:
             raise ValueError(
                 f"pool page_size {self.pool.page_size} != executor "
                 f"page_size {executor.page_size}")
+        # speculative decoding: config + the policy's drafting gate; the
+        # DraftModel is built lazily once the prefix geometry is known
+        self.spec = spec
+        self.spec_gate = spec_gate or (lambda stats: True)
+        self.spec_stats = SpecStats()
+        # engine-shared draft prefill rows (survive decoder retirement,
+        # like the target's prefix pages); None -> private to this decoder
+        self.spec_prefix_rows = spec_prefix_rows
+        self.draft: Optional[DraftModel] = None
         self.pending: Deque[_PendingRequest] = deque()
         self.active: Dict[int, _SlotState] = {}
         self.qlen: Optional[int] = None
@@ -133,7 +163,12 @@ class InflightDecoder:
 
     def submit(self, seq_id: int, intent: Intent, packet: pk.Packet, query,
                on_done: Callable[[Dict[str, Any]], None],
-               operator_id: str = "") -> None:
+               operator_id: str = "",
+               speculative: Optional[bool] = None) -> None:
+        """``speculative``: per-request drafting override — None follows
+        the decoder's config (drafting iff a ``SpeculativeConfig`` was
+        given), False forces a plain row even on a speculating decoder
+        (plain and speculating rows share the verify batch)."""
         query = np.asarray(query).reshape(-1, np.asarray(query).shape[-1])
         if query.shape[0] != 1:
             raise ValueError(
@@ -145,7 +180,8 @@ class InflightDecoder:
             raise ValueError(
                 f"decoder serves qlen={self.qlen}, got {query.shape[-1]}")
         self.pending.append(_PendingRequest(seq_id, intent, packet, query,
-                                            on_done, operator_id))
+                                            on_done, operator_id,
+                                            speculative=speculative))
         self.admit()
 
     # ---- admission: prefix reuse + page allocation between steps ----
@@ -180,7 +216,13 @@ class InflightDecoder:
                 # a hit rides the stored pages: take this request's ref
                 # (a miss already owns its pages' alloc reference)
                 self.pool.retain(entry.page_ids)
-            private = self.pool.alloc(self.n_private_pages)
+            speculative = (self.spec is not None
+                           and item.speculative is not False)
+            # speculating rows allocate decode pages lazily per verify
+            # chunk (grow ahead of acceptance, roll back on rejection);
+            # plain rows keep the whole answer's pages up front
+            private = ([] if speculative
+                       else self.pool.alloc(self.n_private_pages))
             feats = (self.executor.cloud_sam_feats(item.packet)
                      if item.packet.kind == "insight" else None)
             slot = min(set(range(self.slots)) - set(self.active))
@@ -190,25 +232,69 @@ class InflightDecoder:
                                            TRASH_PAGE, np.int32)
                 self.positions = np.full((self.slots, self.width), -1,
                                          np.int32)
-            self.page_tables[slot] = list(entry.page_ids) + private
+            self.page_tables[slot] = (list(entry.page_ids) + private
+                                      + [TRASH_PAGE]
+                                      * (self.n_private_pages
+                                         - len(private)))
             self.positions[slot] = -1
             self.positions[slot, :self.n_prefix_pages * page] = \
                 prefix_positions(self.prefix_len, self.n_prefix_pages, page)
+            if speculative:
+                if self.draft is None:
+                    self.draft = self._make_draft()
+                # same key as the target prefix store: repeat-prefix
+                # frames skip the draft prefill too (honouring the
+                # pool's sharing knob so baselines stay baselines)
+                self.draft.admit(slot, ctx, item.query,
+                                 key=key if self.pool.share_prefixes
+                                 else None)
             self.active[slot] = _SlotState(
                 req=item, tokens=[int(np.argmax(entry.logits0[0]))],
                 logits0=entry.logits0, feats=feats, pos=self.prefix_len,
                 joined_step=self.step_idx, prefix_ids=entry.page_ids,
-                private_ids=private, prefix_hit=hit)
+                private_ids=private, prefix_hit=hit,
+                speculative=speculative)
             admitted += 1
         return admitted
+
+    def _make_draft(self) -> DraftModel:
+        cfg = self.spec
+        return DraftModel(
+            cfg.draft_params or self.executor.params,
+            cfg.draft_pcfg or self.executor.pcfg,
+            slots=self.slots, prefix_len=self.prefix_len,
+            max_new_tokens=self.T, draft_tokens=cfg.draft_tokens,
+            flash_decode=getattr(self.executor, "flash_decode", False),
+            prefix_rows=self.spec_prefix_rows,
+            prefix_cap=self.pool.max_prefixes)
 
     # ---- the lockstep decode step ----
 
     def step(self) -> int:
-        """Advance every live slot one token (no-op when idle); returns
-        the number of requests that finished on this step."""
+        """Advance every live slot (no-op when idle); returns the number
+        of requests that finished on this step. Plain rows advance one
+        token; speculating rows advance by however many drafted tokens
+        the serving model accepts (1..k+1), sharing the same verify
+        batch."""
         if not self.active:
             return 0
+        draft_rows = {}
+        if self.spec is not None and self.draft is not None:
+            candidates = {s: st for s, st in self.active.items()
+                          if st.speculative and len(st.tokens) < self.T}
+            if candidates and self.spec_gate(self.spec_stats):
+                draft_rows = candidates
+            elif candidates:
+                self.spec_stats.disabled_steps += 1
+        if draft_rows:
+            return self._step_verify(draft_rows)
+        return self._step_plain()
+
+    def _step_plain(self) -> int:
+        """One single-token decode step over all live rows (the non-
+        speculative path; also serves speculating rows whose drafting
+        the policy has disabled, and rows that only need their final
+        <SEG> read)."""
         base = self.n_prefix_pages * self.pool.page_size
         toks = np.zeros((self.slots, 1), np.int32)
         # free rows decode garbage through the trash page (their page
@@ -216,9 +302,13 @@ class InflightDecoder:
         pos = np.zeros((self.slots,), np.int32)
         write_slot = np.zeros((self.slots,), np.int32)
         for s, st in self.active.items():
+            # speculating rows manage decode pages lazily — make sure the
+            # slot being written is covered (no-op for plain rows, whose
+            # pages were allocated up front)
+            self._grow_private(s, st, len(st.tokens))
             toks[s, 0] = st.tokens[-1]
             pos[s] = st.pos
-            write_slot[s] = base + st.steps_done
+            write_slot[s] = base + len(st.tokens) - 1
         logits, seg, self.pool.kv = self.executor.cloud_decode_rows(
             self.pool.kv, self.page_tables, self.positions, toks, pos,
             write_slot)
@@ -228,37 +318,135 @@ class InflightDecoder:
         self.n_slot_steps += live
         finished = 0
         for s, st in list(self.active.items()):
-            self.positions[s, base + st.steps_done] = st.pos
+            n = len(st.tokens)
+            self.positions[s, base + n - 1] = st.pos
             st.steps_done += 1
             st.batch_acc += live
-            if st.steps_done < self.T:
+            if n < self.T:
                 st.tokens.append(int(np.argmax(logits[s])))
                 st.pos += 1
                 continue
             # final step: this row's seg is the <SEG> state at the last
             # generated token (llm_generate's convention for every T)
-            mask = None
-            if st.feats is not None:
-                mask = np.asarray(self.executor.cloud_mask(
-                    st.feats, seg[s:s + 1]))
-            st.req.on_done({
-                "seq_id": st.req.seq_id,
-                "intent": st.req.intent,
-                "tier_name": st.req.packet.tier_name,
-                "answer_logits": st.logits0,
-                "mask_logits": mask,
-                "tokens": np.asarray(st.tokens, np.int32)[None, :],
-                "batch_size": st.batch_acc / max(1, st.steps_done),
-                "joined_step": st.joined_step,
-                "prefix_hit": st.prefix_hit,
-            })
-            self._release_slot(s, st)
-            self.n_served += 1
-            finished += 1
+            st.seg = seg[s]
+            finished += self._finish_slot(s, st)
         self.step_idx += 1
         if finished:
             self.admit()              # freed slots let queued requests in
         return finished
+
+    def _step_verify(self, draft_rows: Dict[int, _SlotState]) -> int:
+        """One speculative verify step: drafting rows carry their last
+        accepted token plus k Context-stream drafts, every other live
+        row a chunk of one; a single paged multi-token pass scores them
+        all, greedy acceptance advances each row, and decode pages past
+        each row's accepted length roll back."""
+        k = self.spec.draft_tokens
+        C = k + 1
+        page = self.pool.page_size
+        base = self.n_prefix_pages * page
+        proposals = self.draft.draft(
+            {s: st.tokens for s, st in draft_rows.items()}, k,
+            budgets={s: self.T - len(st.tokens)
+                     for s, st in draft_rows.items()})
+        toks = np.zeros((self.slots, C), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        write_slot = np.zeros((self.slots,), np.int32)
+        clens = np.ones((self.slots,), np.int32)
+        n_drafted: Dict[int, int] = {}
+        for s, st in self.active.items():
+            n = len(st.tokens)
+            toks[s, 0] = st.tokens[-1]
+            pos[s] = st.pos
+            write_slot[s] = base + n - 1
+            if s in proposals:
+                j = min(k, self.T - n)        # never draft past the answer
+                n_drafted[s] = j
+                toks[s, 1:1 + j] = proposals[s][:j]
+                clens[s] = 1 + j
+            # cover the chunk (incl. the draft overhang) with decode pages
+            self._grow_private(s, st, n - 1 + int(clens[s]))
+        logits, seg, self.pool.kv = self.executor.cloud_verify_rows(
+            self.pool.kv, self.page_tables, self.positions, toks, pos,
+            write_slot, clens)
+        logits, seg = np.asarray(logits), np.asarray(seg)
+        live = len(self.active)
+        self.n_steps += 1
+        self.n_slot_steps += live
+        finished = 0
+        for s, st in list(self.active.items()):
+            n = len(st.tokens)
+            j = n_drafted.get(s, 0)
+            # greedy[i]: the serving model's own pick after chunk token i
+            greedy = np.argmax(logits[s, :1 + j], axis=-1)
+            m = greedy_accept(toks[s, 1:1 + j], greedy) if j else 0
+            # chunk tokens 0..m are now committed: the real last token
+            # plus m accepted drafts
+            for i in range(m + 1):
+                self.positions[s, base + n - 1 + i] = st.pos + i
+            new = [int(g) for g in greedy[:m + 1]][:self.T - n]
+            st.tokens.extend(new)
+            st.pos += len(new)
+            st.steps_done += 1
+            st.batch_acc += live
+            if j:
+                # accepted drafts the draft model itself fed (d_1..d_{j-1}
+                # — the j-th came off the last feed's logits) already live
+                # in its cache at their committed positions: skip their
+                # catch-up feed next round
+                self.draft.commit(s, n + min(m, j - 1))
+                self.spec_stats.drafted += j
+                self.spec_stats.accepted += m
+                self.spec_stats.emitted += len(new)
+                self.spec_stats.row_steps += 1
+                # rollback: free decode pages past the accepted length
+                dropped = self.pool.rollback_to(st.private_ids, n + m)
+                if dropped:
+                    self.spec_stats.pages_rolled_back += len(dropped)
+                    lo = self.n_prefix_pages + len(st.private_ids)
+                    self.page_tables[s, lo:lo + len(dropped)] = TRASH_PAGE
+            if n - 1 + m >= self.T - 1:
+                # the answer's final token was fed and accepted in this
+                # chunk: its hidden state is the <SEG> read
+                st.seg = seg[s, self.T - n]
+                finished += self._finish_slot(s, st)
+        self.step_idx += 1
+        if finished:
+            self.admit()
+        return finished
+
+    def _grow_private(self, slot: int, st: _SlotState, tokens: int) -> None:
+        """Extend one row's private decode pages to cover ``tokens``
+        virtual slots (speculative allocation ahead of acceptance) and
+        map the fresh pages into its page table."""
+        lo = self.n_prefix_pages + len(st.private_ids)
+        fresh = self.pool.grow_to(st.private_ids, tokens)
+        if fresh:
+            self.page_tables[slot, lo:lo + len(fresh)] = fresh
+
+    def _finish_slot(self, s: int, st: _SlotState) -> int:
+        """Deliver a finished row: decode its mask from the stored SAM
+        feats and the captured <SEG> state, hand the result back, and
+        release its pages."""
+        mask = None
+        if st.feats is not None:
+            mask = np.asarray(self.executor.cloud_mask(
+                st.feats, st.seg[None]))
+        st.req.on_done({
+            "seq_id": st.req.seq_id,
+            "intent": st.req.intent,
+            "tier_name": st.req.packet.tier_name,
+            "answer_logits": st.logits0,
+            "mask_logits": mask,
+            "tokens": np.asarray(st.tokens, np.int32)[None, :],
+            "batch_size": st.batch_acc / max(1, st.steps_done),
+            "joined_step": st.joined_step,
+            "prefix_hit": st.prefix_hit,
+            "speculative": st.speculative,
+        })
+        self._release_slot(s, st)
+        self.n_served += 1
+        return 1
 
     def _release_slot(self, slot: int, st: _SlotState) -> None:
         """Return the slot's pages (prefix ref + private pages) and park
@@ -267,6 +455,8 @@ class InflightDecoder:
         self.pool.release(st.private_ids)
         self.page_tables[slot] = TRASH_PAGE
         self.positions[slot] = -1
+        if st.speculative and self.draft is not None:
+            self.draft.release(slot)
         del self.active[slot]
 
     def pump(self, max_steps: int = 1) -> None:

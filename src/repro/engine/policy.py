@@ -45,6 +45,12 @@ class ControlPolicy(Protocol):
                finetuned: bool = False) -> TierDecision:
         ...
 
+    # Policies may additionally expose
+    #   allow_speculation(stats: SpecStats, cfg: SpeculativeConfig) -> bool
+    # — the engine consults it before every speculative verify step, so
+    # the drafting lever rides the same Sense/Evaluate/Select loop as
+    # tier selection (a policy without the hook leaves drafting on).
+
 
 def _context_decision(bandwidth_mbps: float, lut: SystemLUT) -> TierDecision:
     return TierDecision(stream="context", tier=None, feasible=True,
@@ -70,6 +76,16 @@ class AdaptivePolicy:
         return TierDecision(stream="insight", tier=sel.tier, feasible=True,
                             throughput_pps=sel.throughput_pps)
 
+    def allow_speculation(self, stats, cfg) -> bool:
+        """Embodied self-awareness applied to the serving substrate:
+        keep drafting while the observed acceptance rate earns its keep,
+        disable it once enough samples show acceptance below the
+        configured floor (a draft pass below the floor costs more small-
+        model steps than the verify pass saves)."""
+        if stats.drafted < cfg.min_draft_samples:
+            return True                   # still warming up the estimate
+        return stats.acceptance_rate >= cfg.acceptance_floor
+
 
 @dataclass(frozen=True)
 class StaticTierPolicy:
@@ -84,6 +100,12 @@ class StaticTierPolicy:
         tier = lut.by_name(self.tier_name)
         return TierDecision(stream="insight", tier=tier, feasible=True,
                             throughput_pps=tier.max_pps(bandwidth_mbps))
+
+    def allow_speculation(self, stats, cfg) -> bool:
+        """Static baseline: never adapts — drafting stays on no matter
+        what the acceptance rate says (mirroring the fixed-tier
+        baselines that keep transmitting into a degraded link)."""
+        return True
 
 
 @dataclass(frozen=True)
@@ -102,6 +124,9 @@ class BestEffortPolicy:
             return TierDecision(stream="insight", tier=tier, feasible=False,
                                 throughput_pps=tier.max_pps(bandwidth_mbps))
         return decision
+
+    def allow_speculation(self, stats, cfg) -> bool:
+        return self.inner.allow_speculation(stats, cfg)
 
 
 def policy_from_mode(mode: str, static_tier: Optional[str] = None,

@@ -56,3 +56,32 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                                jnp.asarray(page_table, jnp.int32), bias,
                                group=G, interpret=_INTERPRET)
     return out.reshape(B, K, G, hd).reshape(B, H, hd)
+
+
+@jax.jit
+def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           bias: jax.Array) -> jax.Array:
+    """Multi-query flash attention against a paged KV cache — the
+    speculative-decode verify step.
+
+    q (B, C, H, hd) — C chunk tokens (last accepted token + drafts) per
+    row; k_pool/v_pool (P, page, K, hd); page_table (B, n_pages) i32
+    (all entries valid); bias (B, C, n_pages*page) additive per query
+    position (slot validity + causal-within-chunk). Returns
+    (B, C, H, hd). One kv block per page, page table resolved via scalar
+    prefetch; column 0 of a C=1 call matches ``paged_decode_attention``.
+    """
+    B, C, H, hd = q.shape
+    K = k_pool.shape[2]
+    G = H // K
+    # kv-major head layout: program h reads kv head (h % H) // G
+    qh = q.transpose(0, 2, 1, 3).reshape(B, K, G, C, hd) \
+          .reshape(B * H, C, hd)
+    kh = k_pool.transpose(2, 0, 1, 3)                  # (K, P, page, hd)
+    vh = v_pool.transpose(2, 0, 1, 3)
+    out = _k.paged_verify_call(qh, kh, vh,
+                               jnp.asarray(page_table, jnp.int32), bias,
+                               group=G, interpret=_INTERPRET)
+    return out.reshape(B, K, G, C, hd).reshape(B, H, C, hd) \
+              .transpose(0, 2, 1, 3)

@@ -33,3 +33,25 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     k = k_pool[page_table].reshape(B, n * page, K, hd)
     v = v_pool[page_table].reshape(B, n * page, K, hd)
     return decode_attention_ref(q, k, v, bias)
+
+
+def paged_verify_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, page_table: jax.Array,
+                               bias: jax.Array) -> jax.Array:
+    """Oracle for the multi-query (speculative verify) paged path:
+    gather each row's pages into the contiguous layout, then dense
+    grouped attention with the per-query additive bias. q (B,C,H,hd);
+    k_pool/v_pool (P, page, K, hd); page_table (B, n) i32; bias
+    (B, C, n*page). Returns (B, C, H, hd)."""
+    B, C, H, hd = q.shape
+    n, page = page_table.shape[1], k_pool.shape[1]
+    K = k_pool.shape[2]
+    G = H // K
+    k = k_pool[page_table].reshape(B, n * page, K, hd)
+    v = v_pool[page_table].reshape(B, n * page, K, hd)
+    qg = q.reshape(B, C, K, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bckgh,bwkh->bkgcw", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(float(hd)) + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcw,bwkh->bckgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, C, H, hd).astype(q.dtype)

@@ -230,6 +230,49 @@ def gqa_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array,
     return out, {"k": k_pool, "v": v_pool}
 
 
+def gqa_verify_paged(p: dict, cfg: ModelConfig, x: jax.Array,
+                     positions: jax.Array, pool: dict, page_table: jax.Array,
+                     write_page: jax.Array, write_off: jax.Array,
+                     mask: jax.Array) -> Tuple[jax.Array, dict]:
+    """Multi-token decode against the shared KV page pool — the
+    speculative verify step.
+
+    x (B, C, d) — each row's chunk of C tokens (last accepted token +
+    drafted continuations, ascending positions); positions (B, C);
+    write_page/write_off (B, C) per-token page slots receiving the new
+    k/v (pad tokens target the reserved trash page — collisions there
+    are harmless because trash slots never carry a valid position);
+    mask (B, C, n_pages*page) additive per query position, carrying
+    both slot validity and causal-within-chunk. The chunk's k/v scatter
+    lands *before* attention, so chunk token i attends chunk tokens
+    <= i through the pool exactly like C successive decode steps would
+    — a C=1 call reproduces ``gqa_decode_paged``."""
+    B, C, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.shard_cache_hd:
+        raise NotImplementedError(
+            "paged verify does not support the head_dim-sharded cache")
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, C, H, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, C, K, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, C, K, hd)
+    q = _rope_q_or_k(cfg, q, positions)
+    k = _rope_q_or_k(cfg, k, positions)
+    k_pool = pool["k"].at[write_page, write_off].set(k)
+    v_pool = pool["v"].at[write_page, write_off].set(v)
+    if cfg.use_flash_decode:
+        from repro.kernels.decode_attention import ops as decode_ops
+        out = decode_ops.paged_verify_attention(q, k_pool, v_pool,
+                                                page_table, mask)
+    else:
+        n, page = page_table.shape[1], k_pool.shape[1]
+        kg = k_pool[page_table].reshape(B, n * page, K, hd)
+        vg = v_pool[page_table].reshape(B, n * page, K, hd)
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+        out = _sdpa(q, kg, vg, mask, scale)
+    out = linear(out.reshape(B, C, H * hd), p["wo"])
+    return out, {"k": k_pool, "v": v_pool}
+
+
 def gqa_empty_cache(cfg: ModelConfig, batch: int, width: int) -> dict:
     K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     dt = cfg.adtype
@@ -370,6 +413,16 @@ def attn_decode_paged(p, cfg: ModelConfig, x, positions, pool, page_table,
             "the paged KV pool is only implemented for the GQA cache "
             "layout (MLA's latent cache pages differently)")
     return gqa_decode_paged(p, cfg, x, positions, pool, page_table,
+                            write_page, write_off, mask)
+
+
+def attn_verify_paged(p, cfg: ModelConfig, x, positions, pool, page_table,
+                      write_page, write_off, mask):
+    if cfg.attn_type == "mla":
+        raise NotImplementedError(
+            "the paged KV pool is only implemented for the GQA cache "
+            "layout (MLA's latent cache pages differently)")
+    return gqa_verify_paged(p, cfg, x, positions, pool, page_table,
                             write_page, write_off, mask)
 
 

@@ -221,8 +221,9 @@ def _moe_block_decode(p, cfg, x, positions, cache, slot, mask):
 
 
 def _dense_block_decode_paged(p, cfg, x, positions, pool, page_table,
-                              write_page, write_off, mask):
-    h, c2 = attention.attn_decode_paged(
+                              write_page, write_off, mask, attn_fn=None):
+    attn_fn = attn_fn or attention.attn_decode_paged
+    h, c2 = attn_fn(
         p["attn"], cfg, apply_norm(x, p["norm1"], cfg), positions, pool,
         page_table, write_page, write_off, mask)
     x = x + h
@@ -231,8 +232,9 @@ def _dense_block_decode_paged(p, cfg, x, positions, pool, page_table,
 
 
 def _moe_block_decode_paged(p, cfg, x, positions, pool, page_table,
-                            write_page, write_off, mask):
-    h, c2 = attention.attn_decode_paged(
+                            write_page, write_off, mask, attn_fn=None):
+    attn_fn = attn_fn or attention.attn_decode_paged
+    h, c2 = attn_fn(
         p["attn"], cfg, apply_norm(x, p["norm1"], cfg), positions, pool,
         page_table, write_page, write_off, mask)
     x = x + h
@@ -317,6 +319,37 @@ def group_decode_paged(params: Any, cfg: ModelConfig, spec: GroupSpec,
 
     raise NotImplementedError(
         f"paged decode caches cover attention stacks only, not {spec.kind}")
+
+
+def group_verify_paged(params: Any, cfg: ModelConfig, spec: GroupSpec,
+                       x: jax.Array, positions: jax.Array, pool: Any,
+                       page_table: jax.Array, write_page: jax.Array,
+                       write_off: jax.Array, mask: jax.Array):
+    """Multi-token (speculative verify) decode through one group against
+    the shared KV page pool: x (B, C, d) chunk tokens, positions /
+    write_page / write_off (B, C), mask (B, C, n_pages*page). Same layer
+    scan as ``group_decode_paged`` with the multi-query attention body.
+    Returns (x, new pool)."""
+    if spec.kind == "dense":
+        def body(h, inp):
+            lp, c = inp
+            return _dense_block_decode_paged(
+                lp, cfg, h, positions, c, page_table, write_page,
+                write_off, mask, attn_fn=attention.attn_verify_paged)
+        return jax.lax.scan(body, x, (params, pool),
+                            unroll=cfg.scan_unroll)
+
+    if spec.kind == "moe":
+        def body(h, inp):
+            lp, c = inp
+            return _moe_block_decode_paged(
+                lp, cfg, h, positions, c, page_table, write_page,
+                write_off, mask, attn_fn=attention.attn_verify_paged)
+        return jax.lax.scan(body, x, (params, pool),
+                            unroll=cfg.scan_unroll)
+
+    raise NotImplementedError(
+        f"paged verify covers attention stacks only, not {spec.kind}")
 
 
 # ---------------------------------------------------------------------------

@@ -134,3 +134,250 @@ def test_paged_decode_matches_llm_generate(flash):
     assert float(np.max(np.abs(seg[0] - np.asarray(seg_ref)[0]))) \
         < 2e-3 * scale
     np.testing.assert_allclose(seg[0], seg[1], atol=1e-6)
+
+
+# ---- speculative decoding: multi-token verify + draft/accept/rollback ----
+
+
+@pytest.mark.parametrize("flash", [False, True], ids=["xla", "flash"])
+def test_verify_step_matches_sequential_decode_steps(flash):
+    """One multi-token verify pass (``llm_verify_step_paged``) over a
+    C-token chunk reproduces C successive single-token paged decode
+    steps position by position — including a row whose chunk is shorter
+    than C (pad entries write to the trash page and change nothing)."""
+    import numpy as np
+
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import vlm
+    from repro.core.paging import pages_for, prefix_positions
+
+    pcfg = dataclasses.replace(
+        PCFG, llm=PCFG.llm.replace(use_flash_decode=flash))
+    params = vlm.init_lisa(pcfg, jax.random.PRNGKey(0))
+    qlen, T, page = 8, 4, 16
+    ctx = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, pcfg.clip_tokens, pcfg.llm.d_model))
+    query = jax.random.randint(jax.random.PRNGKey(2), (1, qlen), 0,
+                               pcfg.llm.vocab_size)
+    S = pcfg.clip_tokens + qlen
+    n_prefix, n_private = pages_for(S, page), pages_for(T, page)
+    logits0, _, paged = vlm.llm_prefill_paged(params, pcfg, ctx, query, page)
+
+    B = 2
+    P = 1 + n_prefix + B * n_private
+    prefix_ids = np.arange(1, 1 + n_prefix)
+    def fresh_pool():
+        return {"groups": [jax.tree.map(
+            lambda a: jnp.zeros((a.shape[0], P) + a.shape[3:], a.dtype)
+            .at[:, prefix_ids].set(a[:, 0]), paged["groups"][0])]}
+    pt = np.zeros((B, n_prefix + n_private), np.int32)
+    positions = np.full((B, (n_prefix + n_private) * page), -1, np.int32)
+    for b in range(B):
+        priv = 1 + n_prefix + b * n_private
+        pt[b] = list(prefix_ids) + list(range(priv, priv + n_private))
+        positions[b, :n_prefix * page] = prefix_positions(S, n_prefix, page)
+    base = n_prefix * page
+
+    # oracle: T sequential single-token paged decode steps
+    pool = fresh_pool()
+    pos_seq = positions.copy()
+    toks = [int(jnp.argmax(logits0[0]))]
+    seq_logits, seq_seg = [], []
+    for t in range(T):
+        tk = np.full((B, 1), toks[-1], np.int32)
+        lg, sg, pool = vlm.llm_decode_step_paged(
+            params, pcfg, pool, pt, pos_seq, tk,
+            np.full((B,), S + t, np.int32), np.full((B,), base + t,
+                                                    np.int32))
+        pos_seq[:, base + t] = S + t
+        seq_logits.append(np.asarray(lg))
+        seq_seg.append(np.asarray(sg))
+        toks.append(int(jnp.argmax(lg[0])))
+
+    # one verify chunk: row 0 carries all T tokens, row 1 only 2 (padded)
+    chunk = np.tile(np.asarray(toks[:T], np.int32), (B, 1))
+    clens = np.asarray([T, 2], np.int32)
+    lgv, segv, _ = vlm.llm_verify_step_paged(
+        params, pcfg, fresh_pool(), pt, positions, chunk,
+        np.full((B,), S, np.int32), np.full((B,), base, np.int32), clens)
+    lgv, segv = np.asarray(lgv), np.asarray(segv)
+    scale = max(float(np.max(np.abs(l))) for l in seq_logits) + 1.0
+    for b in range(B):
+        for i in range(int(clens[b])):
+            assert float(np.max(np.abs(lgv[b, i] - seq_logits[i][b]))) \
+                < 2e-3 * scale, (b, i)
+            sscale = float(np.max(np.abs(seq_seg[i][b]))) + 1.0
+            assert float(np.max(np.abs(segv[b, i] - seq_seg[i][b]))) \
+                < 2e-3 * sscale, (b, i)
+
+
+@pytest.fixture(scope="module")
+def spec_executor():
+    """Small serving executor for the speculative-decode pins (tiny
+    pages so draft overhangs cross page boundaries and rollback really
+    fires)."""
+    import numpy as np
+
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import DualStreamExecutor, paper_lut, profile as prof
+    lut = paper_lut()
+    params, bns, _ = prof.random_init_system(PCFG, lut=lut)
+    return DualStreamExecutor(pcfg=PCFG, params=params, bottlenecks=bns,
+                              lut=lut, max_new_tokens=6,
+                              flash_decode=False, page_size=4)
+
+
+def _spec_requests(executor, n, seed):
+    import numpy as np
+
+    from repro.core.intent import Intent
+    from repro.data import floodseg
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        kind = "any" if i % 3 == 2 else "segment"
+        b = floodseg.make_batch(rng, 1, kind, augment=False)
+        img = jnp.asarray(b["images"])
+        if kind == "any":
+            pkt, _ = executor.edge_context(img, i, 0.0)
+            out.append((pkt, b["query"], Intent.CONTEXT))
+        else:
+            pkt = executor.edge_insight(img, executor.lut.tiers[i % 2], i,
+                                        0.0)
+            out.append((pkt, b["query"], Intent.INSIGHT))
+    return out
+
+
+def _assert_matches_generate(executor, done, reqs):
+    import numpy as np
+
+    from repro.core.intent import Intent
+    for i, (pkt, q, it) in enumerate(reqs):
+        out = executor.cloud_generate_batch([pkt], [q])[0]
+        assert np.array_equal(done[i]["tokens"], out[-1]), i
+        if it is Intent.INSIGHT:
+            np.testing.assert_allclose(done[i]["mask_logits"], out[0],
+                                       atol=3e-4)
+        np.testing.assert_allclose(done[i]["answer_logits"], out[-2]
+                                   if it is Intent.CONTEXT else out[1],
+                                   atol=3e-4)
+
+
+@pytest.mark.parametrize("shared_draft", [True, False],
+                         ids=["context_draft", "divergent_draft"])
+def test_speculative_decode_token_exact_with_llm_generate(spec_executor,
+                                                          shared_draft):
+    """Greedy speculative decode through the in-flight batch is token-
+    exact with the one-shot ``llm_generate`` path — with the warm
+    Context-stream weights drafting (near-total acceptance) and with a
+    divergent random draft (rejections force corrections + page
+    rollback), under slot reuse (more requests than slots)."""
+    import numpy as np
+
+    from repro.engine.inflight import InflightDecoder
+    from repro.engine.speculative import SpeculativeConfig
+
+    if shared_draft:
+        spec = SpeculativeConfig(draft_tokens=3)
+    else:
+        from repro.configs.lisa_mini import CONFIG as PCFG
+        from repro.core import vlm
+        spec = SpeculativeConfig(
+            draft_tokens=4,
+            draft_params=vlm.init_lisa(PCFG, jax.random.PRNGKey(99)))
+    reqs = _spec_requests(spec_executor, 5, seed=13 if shared_draft else 17)
+    dec = InflightDecoder(spec_executor, slots=2, spec=spec)
+    done = {}
+    for i, (pkt, q, it) in enumerate(reqs):
+        dec.submit(i, it, pkt, q,
+                   lambda out: done.setdefault(out["seq_id"], out))
+    dec.drain()
+    assert len(done) == len(reqs)
+    _assert_matches_generate(spec_executor, done, reqs)
+    st = dec.spec_stats
+    assert st.row_steps > 0 and st.drafted > 0
+    if shared_draft:
+        # the Context model *is* the serving model here: full acceptance
+        assert st.acceptance_rate == 1.0
+        assert st.tokens_per_step >= 1.5
+    else:
+        # a divergent draft gets rejected and must roll pages back —
+        # output is exact anyway (acceptance only moves the cost)
+        assert st.acceptance_rate < 1.0
+        assert st.pages_rolled_back > 0
+    # every private/draft page returned; only cached prefixes pinned
+    from repro.core.paging import pages_for
+    qlen = np.asarray(reqs[0][1]).shape[-1]
+    per_prefix = pages_for(spec_executor.pcfg.clip_tokens + qlen,
+                           spec_executor.page_size)
+    assert dec.pool.pages_in_use == len(dec.pool.prefix) * per_prefix
+
+
+def test_mixed_speculative_and_plain_rows_one_batch(spec_executor):
+    """Speculating and plain rows share one in-flight verify batch (the
+    plain row rides a chunk of one) — both remain token-exact with the
+    one-shot generate path."""
+    import numpy as np
+
+    from repro.engine.inflight import InflightDecoder
+    from repro.engine.speculative import SpeculativeConfig
+
+    reqs = _spec_requests(spec_executor, 4, seed=23)
+    dec = InflightDecoder(spec_executor, slots=4,
+                          spec=SpeculativeConfig(draft_tokens=3))
+    done = {}
+    for i, (pkt, q, it) in enumerate(reqs):
+        dec.submit(i, it, pkt, q,
+                   lambda out: done.setdefault(out["seq_id"], out),
+                   speculative=(i % 2 == 0))   # every other row plain
+    dec.drain()
+    _assert_matches_generate(spec_executor, done, reqs)
+    assert [done[i]["speculative"] for i in range(4)] \
+        == [True, False, True, False]
+    # speculating rows finished in fewer steps than the plain rows'
+    # T+1-step lockstep, so the batch really mixed disciplines
+    assert dec.spec_stats.row_steps > 0
+    assert dec.spec_stats.tokens_per_step > 1.0
+
+
+def test_draft_reuses_prefix_prefill_on_repeat_frames(spec_executor):
+    """Repeat-prefix frames skip the draft model's prefill too (keyed
+    like the target prefix store) — and still serve exact results."""
+    import numpy as np
+
+    from repro.core.intent import Intent
+    from repro.data import floodseg
+    from repro.engine.inflight import InflightDecoder
+    from repro.engine.speculative import SpeculativeConfig
+
+    rng = np.random.RandomState(29)
+    b = floodseg.make_batch(rng, 1, "segment", augment=False)
+    img = jnp.asarray(b["images"])
+    dec = InflightDecoder(spec_executor, slots=2,
+                          spec=SpeculativeConfig(draft_tokens=3))
+    done = {}
+    for i in range(3):         # same frame + standing query: same prefix
+        pkt = spec_executor.edge_insight(img, spec_executor.lut.tiers[0],
+                                         i, 0.0)
+        dec.submit(i, Intent.INSIGHT, pkt, b["query"],
+                   lambda out: done.setdefault(out["seq_id"], out),
+                   operator_id="uav-A")
+    dec.drain()
+    assert dec.draft.n_prefills == 1          # one draft prefill, 3 frames
+    out = spec_executor.cloud_generate_batch([pkt], [b["query"]])[0]
+    for i in range(3):
+        assert np.array_equal(done[i]["tokens"], out[-1])
+    # shared rows survive decoder retirement (the engine passes one dict
+    # per engine): a successor decoder skips the prefill entirely
+    dec2 = InflightDecoder(spec_executor, slots=2, pool=dec.pool,
+                           spec=SpeculativeConfig(draft_tokens=3),
+                           spec_prefix_rows=dec.draft._prefix_rows)
+    pkt2 = spec_executor.edge_insight(img, spec_executor.lut.tiers[0], 9,
+                                      0.0)
+    done2 = {}
+    dec2.submit(9, Intent.INSIGHT, pkt2, b["query"],
+                lambda out: done2.setdefault(out["seq_id"], out),
+                operator_id="uav-A")
+    dec2.drain()
+    assert dec2.draft.n_prefills == 0
+    assert np.array_equal(done2[9]["tokens"], out[-1])

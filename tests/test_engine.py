@@ -483,6 +483,106 @@ def test_blackout_resolves_request_as_failed():
     assert engine.stats["blackouts"] == 1
 
 
+def test_engine_speculative_knob_matches_generate(executor):
+    """``speculative=True`` serves through Context-stream drafts + paged
+    multi-token verify; results stay equal to the one-shot generate
+    path and the engine reports acceptance/tokens-per-step stats."""
+    reqs = _edge_requests(executor, 4, seed=81)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=4, speculative=True)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        res = fut.result()
+        assert res.speculative is True
+        out = executor.cloud_generate_batch([pkt], [q])[0]
+        if it is Intent.INSIGHT:
+            mask, logits0, toks = out
+            np.testing.assert_allclose(res.mask_logits, mask, atol=3e-4)
+        else:
+            logits0, toks = out
+        np.testing.assert_allclose(res.answer_logits, logits0, atol=3e-4)
+        assert np.array_equal(res.tokens, toks)
+    stats = engine.stats
+    # the warm Context weights draft for themselves: full acceptance
+    assert stats["spec_acceptance_rate"] == 1.0
+    assert stats["spec_tokens_per_step"] >= 1.5
+    assert stats["spec_disabled_steps"] == 0
+    assert stats["kv_pages_peak"] >= stats["kv_pages_in_use"]
+
+
+def test_policy_floor_disables_drafting(executor):
+    """The acceptance-rate floor is a ControlPolicy lever: a divergent
+    draft model trips ``AdaptivePolicy.allow_speculation`` after the
+    warm-up samples and the engine falls back to plain decode — output
+    still exact."""
+    import jax
+
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import vlm
+    from repro.engine import SpeculativeConfig
+    spec = SpeculativeConfig(
+        draft_tokens=2, acceptance_floor=0.5, min_draft_samples=4,
+        draft_params=vlm.init_lisa(PCFG, jax.random.PRNGKey(123)))
+    reqs = _edge_requests(executor, 4, seed=91)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, speculative=spec)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        out = executor.cloud_generate_batch([pkt], [q])[0]
+        assert np.array_equal(fut.result().tokens, out[-1])
+    stats = engine.stats
+    assert stats["spec_acceptance_rate"] < 0.5
+    assert stats["spec_disabled_steps"] > 0
+    # the gate decides on engine-lifetime stats: a later burst (fresh
+    # decoder after drain) must stay disabled, not re-pay the warm-up
+    pkt, q, it = reqs[0]
+    fut = engine.submit_packet(pkt, q, it, time_s=10.0)
+    engine.drain()
+    out = executor.cloud_generate_batch([pkt], [q])[0]
+    assert np.array_equal(fut.result().tokens, out[-1])
+    assert engine.stats["spec_drafted"] == stats["spec_drafted"]
+    # a static policy never adapts: same draft, drafting stays on
+    engine2 = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                          max_batch=2, speculative=spec,
+                          policy=StaticTierPolicy("Balanced"))
+    for i, (p, q, it) in enumerate(reqs):
+        engine2.submit_packet(p, q, it, time_s=float(i))
+    engine2.drain()
+    assert engine2.stats["spec_disabled_steps"] == 0
+    assert engine2.stats["spec_drafted"] > stats["spec_drafted"]
+
+
+def test_speculative_requires_inflight_batching():
+    with pytest.raises(ValueError):
+        AveryEngine(lut=LUT, executor=StubExecutor(), speculative=True)
+
+
+def test_engine_max_prefixes_caps_store(executor):
+    """The engine's ``max_prefixes`` knob LRU-caps the prefix store
+    across operators without disturbing live serving."""
+    import jax.numpy as jnp
+
+    from repro.data import floodseg
+    rng = np.random.RandomState(101)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, max_prefixes=2)
+    for i in range(4):                    # 4 distinct operators/prefixes
+        b = floodseg.make_batch(rng, 1, "segment", augment=False)
+        pkt = executor.edge_insight(jnp.asarray(b["images"]), LUT.tiers[0],
+                                    i, 0.0)
+        engine.submit_packet(pkt, b["query"], Intent.INSIGHT,
+                             time_s=float(i),
+                             session=engine.session(f"uav-{i}"))
+    engine.drain()
+    stats = engine.stats
+    assert stats["prefix_entries"] <= 2
+    assert stats["prefix_evictions"] >= 2
+
+
 def test_no_share_prefixes_frees_all_pages(executor):
     """With the prefix store disabled every request owns its prefix
     pages outright — they must free when the request finishes (no

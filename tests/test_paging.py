@@ -1,0 +1,212 @@
+"""PagePool allocator + prefix-store invariants: LRU eviction under
+``max_prefixes`` (refcount-safe against live sharers), the
+``kv_pages_peak`` high-water mark that sizes pools for speculative
+bursts, speculative grow/rollback, and a property test that random
+alloc/retain/release/put_prefix/release_operator interleavings never
+leak or double-free pages."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.paging import TRASH_PAGE, PagePool, pages_for
+
+
+def _pool(**kw) -> PagePool:
+    """A pool with device storage stubbed in (host bookkeeping only):
+    seed the allocator via ``ensure`` on a tiny kv-shaped pytree."""
+    import jax.numpy as jnp
+    pool = PagePool(page_size=kw.pop("page_size", 4), **kw)
+    like = {"groups": [{"k": jnp.zeros((1, 1, pool.page_size, 1, 1)),
+                        "v": jnp.zeros((1, 1, pool.page_size, 1, 1))}]}
+    pool.ensure(8, like=like)
+    return pool
+
+
+def _invariant(pool: PagePool) -> None:
+    """Conservation: every page is exactly one of {trash, live, free}."""
+    assert pool.pages_in_use + len(pool._free) == pool.num_pages - 1
+    assert sorted(set(pool._free)) == sorted(pool._free)   # no dup frees
+    assert TRASH_PAGE not in pool._free
+    for i in pool._free:
+        assert pool._refcount[i] == 0
+
+
+# ---- LRU eviction (max_prefixes cap) ----
+
+
+def test_lru_eviction_order_and_refresh():
+    pool = _pool(max_prefixes=2)
+    for name in ("a", "b"):
+        ids = pool.alloc(1)
+        pool.put_prefix(("op", name), ids, 4, np.zeros((1, 4)))
+        pool.release(ids)            # request finishes; store pin remains
+    assert pool.lookup_prefix(("op", "a")) is not None   # refresh 'a'
+    ids = pool.alloc(1)
+    pool.put_prefix(("op", "c"), ids, 4, np.zeros((1, 4)))
+    pool.release(ids)
+    # 'b' was least-recently-hit -> evicted; 'a' survived its refresh
+    assert set(k[1] for k in pool.prefix) == {"a", "c"}
+    assert pool.prefix_evictions == 1
+    _invariant(pool)
+
+
+def test_lru_eviction_of_entry_with_live_sharer_is_refcount_safe():
+    """Evicting an entry whose pages a live slot still retains must only
+    drop the store's pin: the pages stay allocated for the live request
+    and free when it releases them."""
+    pool = _pool(max_prefixes=1)
+    ids_a = pool.alloc(2)
+    entry_a = pool.put_prefix(("op", "a"), ids_a, 8, np.zeros((1, 4)))
+    # a second request shares the prefix (one retain per sharer) and is
+    # still decoding when the entry gets evicted
+    pool.retain(entry_a.page_ids)
+    pool.release(ids_a)              # first request finished
+    ids_b = pool.alloc(1)
+    pool.put_prefix(("op", "b"), ids_b, 4, np.zeros((1, 4)))  # evicts 'a'
+    pool.release(ids_b)
+    assert pool.prefix_evictions == 1
+    assert ("op", "a") not in pool.prefix
+    # the live sharer still holds the pages: not freed, not reusable
+    assert all(pool._refcount[i] == 1 for i in ids_a)
+    assert all(i not in pool._free for i in ids_a)
+    _invariant(pool)
+    pool.release(ids_a)              # the live request finishes
+    assert all(i in pool._free for i in ids_a)
+    _invariant(pool)
+
+
+def test_max_prefixes_validation():
+    with pytest.raises(ValueError):
+        PagePool(max_prefixes=0)
+
+
+# ---- kv_pages_peak high-water mark ----
+
+
+def test_kv_pages_peak_tracks_transient_bursts():
+    pool = _pool()
+    a = pool.alloc(5)
+    assert pool.stats()["kv_pages_peak"] == 5
+    pool.release(a[2:])              # burst subsides
+    assert pool.pages_in_use == 2
+    assert pool.stats()["kv_pages_peak"] == 5    # peak sticks
+    b = pool.alloc(2)
+    assert pool.stats()["kv_pages_peak"] == 5    # below peak: unchanged
+    c = pool.alloc(3)
+    assert pool.stats()["kv_pages_peak"] == 7
+    pool.release(a[:2]); pool.release(b); pool.release(c)
+    _invariant(pool)
+
+
+# ---- speculative grow / rollback ----
+
+
+def test_grow_and_rollback_private_run():
+    pool = _pool(page_size=4)
+    run = []
+    fresh = pool.grow_to(run, 3)                  # 3 tokens -> 1 page
+    assert len(run) == 1 and fresh == run
+    assert pool.grow_to(run, 4) == []             # still covered
+    fresh = pool.grow_to(run, 11)                 # draft overhang: 3 pages
+    assert len(run) == 3 and len(fresh) == 2
+    peak = pool.kv_pages_peak
+    dropped = pool.rollback_to(run, 5)            # accept 5 -> keep 2 pages
+    assert len(run) == 2 and len(dropped) == 1
+    assert all(i in pool._free for i in dropped)
+    assert pool.rollback_to(run, 8) == []         # exact cover: no-op
+    assert pool.kv_pages_peak == peak             # rollback keeps the peak
+    pool.release(run)
+    _invariant(pool)
+
+
+def test_rollback_respects_shared_refcounts():
+    """A page in the run that something else retains survives rollback
+    (only this run's reference drops)."""
+    pool = _pool(page_size=2)
+    run = []
+    pool.grow_to(run, 6)                          # 3 pages
+    shared = run[-1]
+    pool.retain([shared])
+    dropped = pool.rollback_to(run, 2)
+    assert shared in dropped
+    assert pool._refcount[shared] == 1 and shared not in pool._free
+    pool.release([shared])
+    pool.release(run)
+    _invariant(pool)
+
+
+# ---- property test: random op interleavings conserve pages ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_ops=st.integers(min_value=5, max_value=60))
+def test_pool_ops_never_leak_or_double_free(seed, n_ops):
+    import random
+    rng = random.Random(seed)
+    pool = _pool(page_size=4,
+                 max_prefixes=rng.choice([None, 1, 2, 3]))
+    held = []                 # [(ids, kind)] request-held references
+    n_prefix = 0
+    for _ in range(n_ops):
+        op = rng.choice(["alloc", "release", "retain", "put_prefix",
+                         "release_operator", "lookup", "grow",
+                         "rollback"])
+        if op == "alloc":
+            held.append((pool.alloc(rng.randint(1, 3)), "plain"))
+        elif op == "release" and held:
+            ids, _ = held.pop(rng.randrange(len(held)))
+            pool.release(ids)
+        elif op == "retain" and held:
+            ids, kind = held[rng.randrange(len(held))]
+            pool.retain(ids)
+            held.append((list(ids), kind))
+        elif op == "put_prefix":
+            ids = pool.alloc(rng.randint(1, 3))
+            key = (f"op{rng.randint(0, 2)}", f"d{n_prefix}")
+            n_prefix += 1
+            pool.put_prefix(key, ids, len(ids) * pool.page_size,
+                            np.zeros((1, 2)))
+            held.append((ids, "prefix"))
+        elif op == "release_operator":
+            pool.release_operator(f"op{rng.randint(0, 2)}")
+        elif op == "lookup" and pool.prefix:
+            key = rng.choice(list(pool.prefix))
+            entry = pool.lookup_prefix(key)
+            if entry is not None and rng.random() < 0.5:
+                pool.retain(entry.page_ids)      # a sharer joins...
+                held.append((list(entry.page_ids), "share"))
+        elif op == "grow":
+            run = pool.alloc(1)
+            pool.grow_to(run, rng.randint(1, 5) * pool.page_size)
+            held.append((run, "run"))
+        elif op == "rollback":
+            runs = [h for h in held if h[1] == "run"]
+            if runs:
+                run, _ = runs[rng.randrange(len(runs))]
+                keep = rng.randint(0, len(run)) * pool.page_size
+                pool.rollback_to(run, keep)
+                if not run:
+                    held.remove((run, "run"))
+        _invariant(pool)
+    # teardown: every request finishes, every operator leaves
+    for ids, _ in held:
+        pool.release(ids)
+    for op_id in ("op0", "op1", "op2"):
+        pool.release_operator(op_id)
+    _invariant(pool)
+    assert pool.pages_in_use == 0, "pages leaked"
+
+
+# ---- pages_for sanity ----
+
+
+@pytest.mark.parametrize("tokens,page,expect",
+                         [(0, 4, 0), (1, 4, 1), (4, 4, 1), (5, 4, 2),
+                          (16, 16, 1), (17, 16, 2)])
+def test_pages_for(tokens, page, expect):
+    assert pages_for(tokens, page) == expect

@@ -287,3 +287,33 @@ def test_bench_serving_paged_mode_reports_prefix_reuse():
     assert float(fields["speedup_vs_no_prefix_reuse"].rstrip("x")) >= 2.0
     assert 0.0 < float(fields["prefix_hit_rate"]) <= 1.0
     assert float(fields["kv_bytes_saved"]) > 0
+
+
+@pytest.mark.slow
+def test_bench_serving_spec_mode_reports_tokens_per_step():
+    """The bench's speculative mode must report >= 1.5 tokens per
+    verify step on repeat-prefix Context-drafted traffic (the warm
+    Context weights draft for themselves, so acceptance is near-total)
+    and refresh the machine-readable BENCH_serving.json artifact."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serving", "--spec-smoke"],
+        capture_output=True, text=True, timeout=560,
+        env={**os.environ, "PYTHONPATH": "src:."})
+    assert out.returncode == 0, out.stderr[-2000:]
+    rows = [l for l in out.stdout.splitlines()
+            if l.startswith("serving/spec_insight")]
+    assert len(rows) == 1
+    fields = dict(f.split("=") for f in rows[0].split(",")[2].split(";"))
+    assert float(fields["tokens_per_step"]) >= 1.5
+    assert 0.0 < float(fields["acceptance_rate"]) <= 1.0
+    assert int(fields["verify_steps"]) < int(fields["baseline_decode_steps"])
+    art = os.path.join("benchmarks", "artifacts", "BENCH_serving.json")
+    with open(art) as f:
+        records = json.load(f)["records"]
+    # smoke rows carry their own key so they never clobber full-run rows
+    assert records["serving/spec_insight_smoke"]["tokens_per_step"] >= 1.5
