@@ -175,14 +175,17 @@ def paged_prefix_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
 
 
 def spec_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
-              draft_tokens=3, emit_row=None):
+              draft_tokens=3, emit_row=None, spec_cfg=None,
+              row_name="serving/spec_insight",
+              note="draft_shares_target_geometry_on_cpu"):
     """Speculative decoding mode: repeat-prefix per-UAV Insight traffic
     served end to end (admission + decode) through the in-flight batch,
-    with the Context-stream model drafting ``draft_tokens`` per verify
-    step vs. the non-speculative paged baseline. Tokens/step > 1 is the
-    direct measure of serving-model passes saved; greedy output is
-    token-exact either way (pinned in tests), so the speedup is free of
-    quality cost."""
+    with the draft model proposing ``draft_tokens`` per verify step vs.
+    the non-speculative paged baseline. Tokens/step > 1 is the direct
+    measure of serving-model passes saved; greedy output is token-exact
+    either way (pinned in tests), so the speedup is free of quality
+    cost. ``spec_cfg`` overrides the whole ``SpeculativeConfig`` (the
+    nano-draft row passes the truncated-trunk config)."""
     from repro.core.paging import PagePool
     from repro.engine.inflight import InflightDecoder
     from repro.engine.speculative import SpeculativeConfig
@@ -205,27 +208,132 @@ def spec_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
             if dec.draft is not None else (0, 0),
             pool.stats())
 
-    cfg = SpeculativeConfig(draft_tokens=draft_tokens)
+    cfg = spec_cfg or SpeculativeConfig(draft_tokens=draft_tokens)
     for spec in (None, cfg):
         times[spec is not None] = time_best(lambda: serve_all(spec))
     st, n_steps, draft_steps, pool_stats = stats[True]
     base_steps = stats[False][1]
-    # the CPU-container caveat: the Context-stream draft here shares the
-    # target's lisa_mini geometry, so each draft step costs ~a target
-    # step and wall-clock sits near parity; the hardware-relevant signal
-    # is tokens/step (serving-model passes saved) — with the lisa7b
-    # target the same draft is ~50x cheaper per step
+    # the CPU-container caveat: the default Context-stream draft shares
+    # the target's lisa_mini geometry, so each draft step costs ~a
+    # target step and wall-clock sits near parity; the hardware-relevant
+    # signal is tokens/step (serving-model passes saved) — with the
+    # lisa7b target the same draft is ~50x cheaper per step, and the
+    # nano row runs a truncated trunk that is cheap on any host
+    draft_layers = (cfg.draft_pcfg or executor.pcfg).llm.num_layers
     rows.append(emit_row(
-        "serving/spec_insight", times[True] * 1e6,
+        row_name, times[True] * 1e6,
         f"req_s={len(reqs) / times[True]:.1f};"
         f"speedup_vs_paged={times[False] / times[True]:.2f}x;"
         f"tokens_per_step={st.tokens_per_step:.2f};"
         f"acceptance_rate={st.acceptance_rate:.2f};"
         f"verify_steps={n_steps};baseline_decode_steps={base_steps};"
         f"draft_steps={draft_steps[0]};draft_prefills={draft_steps[1]};"
+        f"draft_layers={draft_layers};"
         f"kv_pages_peak={pool_stats['kv_pages_peak']};"
-        f"k={draft_tokens};uavs={n_uavs};frames_per_uav={frames};"
-        f"note=draft_shares_target_geometry_on_cpu"))
+        f"k={cfg.draft_tokens};uavs={n_uavs};frames_per_uav={frames};"
+        f"note={note}"))
+    return rows
+
+
+def spec_nano_rows(executor, emit_row=None, **kw):
+    """The truly-small draft row: lisa_nano (the target's truncated
+    trunk — 1 of 4 LLM layers, shared embed/head) drafting against the
+    full target. Draft steps are ~4x cheaper than the shared-geometry
+    draft; acceptance depends on how often the early-exit argmax agrees
+    with the full trunk's (weight-dependent — reported, not assumed),
+    and greedy verify keeps the output token-exact regardless."""
+    from repro.configs import lisa_nano
+    from repro.engine.speculative import SpeculativeConfig
+
+    cfg = SpeculativeConfig(
+        draft_tokens=3, draft_pcfg=lisa_nano.CONFIG,
+        draft_params=lisa_nano.nano_draft_params(executor.params))
+    return spec_rows(executor, emit_row=emit_row, spec_cfg=cfg,
+                     row_name="serving/spec_insight_nano",
+                     note="nano_truncated_trunk_draft", **kw)
+
+
+def sharded_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
+                 draft_tokens=3, emit_row=None):
+    """Sharded paged serving mode: the same repeat-prefix per-UAV
+    Insight traffic served through a ``ShardedServingContext`` on the
+    local mesh — params model-sharded, KV pool kv-heads over "model",
+    page tables replicated — in plain paged and speculative-verify
+    disciplines, pinned token-exact against the unsharded
+    ``llm_generate`` path. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real
+    8-device host mesh (ci_fast does); wall-clock vs unsharded is
+    *expected* < 1x there — eight fake devices share one CPU and pay
+    real collectives — the row's signal is exactness + per-shard pool
+    residency; on real multi-chip hardware the same partitioning is the
+    scaling path."""
+    from repro.core.paging import PagePool
+    from repro.engine.inflight import InflightDecoder
+    from repro.engine.speculative import SpeculativeConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.sharding.serving import ShardedServingContext
+
+    emit_row = emit_row or emit
+    n_dev = jax.device_count()
+    model = max(m for m in (4, 2, 1) if n_dev % m == 0)
+    mesh = make_local_mesh(model=model)
+    ctx = ShardedServingContext(executor, mesh)
+    reqs = _uav_stream(executor, n_uavs, frames, "insight")
+    T = executor.max_new_tokens
+
+    def serve_all(ex, spec, out):
+        if hasattr(ex, "place_pool"):
+            pool = PagePool(page_size=ex.page_size, placement=ex.place_pool,
+                            shards=ex.model_shards)
+        else:
+            pool = PagePool(page_size=ex.page_size)
+        dec = InflightDecoder(ex, slots=8, pool=pool, spec=spec)
+        done = {}
+        for i, (op, pkt, q) in enumerate(reqs):
+            dec.submit(i, Intent.INSIGHT, pkt, q,
+                       lambda o: done.setdefault(o["seq_id"], o),
+                       operator_id=op)
+        dec.drain()
+        out["done"], out["pool"], out["dec"] = done, pool, dec
+
+    base, shard, shsp = {}, {}, {}
+    t_base = time_best(lambda: serve_all(executor, None, base))
+    t_shard = time_best(lambda: serve_all(ctx, None, shard))
+    spec_cfg = SpeculativeConfig(draft_tokens=draft_tokens)
+    t_spec = time_best(lambda: serve_all(ctx, spec_cfg, shsp))
+
+    # exactness pin: both sharded disciplines vs the unsharded one-shot
+    # (the measured flag goes into the artifact; a mismatch also fails
+    # the run loudly so CI can't record a stale green claim)
+    exact_paged = exact_spec = True
+    for i, (op, pkt, q) in enumerate(reqs):
+        ref = executor.cloud_generate_batch([pkt], [q])[0][-1]
+        exact_paged &= bool(np.array_equal(shard["done"][i]["tokens"], ref))
+        exact_spec &= bool(np.array_equal(shsp["done"][i]["tokens"], ref))
+    if not (exact_paged and exact_spec):
+        raise AssertionError(
+            f"sharded serving diverged from unsharded llm_generate "
+            f"(paged exact={exact_paged}, spec exact={exact_spec})")
+
+    n = len(reqs)
+    st = shard["pool"].stats()
+    rows = [emit_row(
+        "serving/sharded_paged", t_shard * 1e6,
+        f"req_s={n / t_shard:.1f};tok_s={n * T / t_shard:.1f};"
+        f"vs_unsharded={t_base / t_shard:.2f}x;devices={n_dev};"
+        f"model_shards={model};token_exact={int(exact_paged)};"
+        f"kv_pool_bytes_per_shard={st['kv_pool_bytes_per_shard']};"
+        f"uavs={n_uavs};frames_per_uav={frames};"
+        f"note=host_platform_shards_share_one_cpu")]
+    sst = shsp["dec"].spec_stats
+    rows.append(emit_row(
+        "serving/sharded_spec", t_spec * 1e6,
+        f"req_s={n / t_spec:.1f};"
+        f"tokens_per_step={sst.tokens_per_step:.2f};"
+        f"acceptance_rate={sst.acceptance_rate:.2f};"
+        f"model_shards={model};token_exact={int(exact_spec)};"
+        f"k={draft_tokens};"
+        f"uavs={n_uavs};frames_per_uav={frames}"))
     return rows
 
 
@@ -287,6 +395,11 @@ def run(log=print):
                               max_new_tokens=SPEC_ANSWER_TOKENS,
                               flash_decode=False)
     rows += spec_rows(spec_exec)
+    rows += spec_nano_rows(spec_exec)
+
+    # sharded paged serving (degenerates to 1 shard on a 1-device host;
+    # ci_fast forces an 8-device host platform for the real mesh)
+    rows += sharded_rows(executor)
 
     steps = 32
     for b in BATCHES:
@@ -329,8 +442,31 @@ def run_paged_smoke():
 def run_spec():
     """Full speculative mode on its own (the rest of the serving suite
     untouched): Context-stream drafts + paged multi-token verify vs the
-    non-speculative paged baseline."""
-    rows = spec_rows(_smoke_executor(SPEC_ANSWER_TOKENS))
+    non-speculative paged baseline, plus the truly-small lisa_nano
+    truncated-trunk draft row."""
+    executor = _smoke_executor(SPEC_ANSWER_TOKENS)
+    rows = spec_rows(executor)
+    rows += spec_nano_rows(executor)
+    write_bench_json(rows)
+    return rows
+
+
+def run_sharded():
+    """Sharded paged serving mode on its own: tensor-parallel paged
+    decode + speculative verify on the local mesh, token-exact vs the
+    unsharded path. Force a multi-device host platform first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    rows = sharded_rows(_smoke_executor())
+    write_bench_json(rows)
+    return rows
+
+
+def run_sharded_smoke():
+    """CI smoke: the sharded mode at a reduced size (2 UAVs x 3 frames)
+    — mesh construction, sharded param/pool placement, sharded decode +
+    verify exactness, and the per-shard residency stats in minutes."""
+    rows = sharded_rows(_smoke_executor(), n_uavs=2, frames=3,
+                        emit_row=_smoke_emit)
     write_bench_json(rows)
     return rows
 
@@ -353,5 +489,9 @@ if __name__ == "__main__":
         run_spec_smoke()
     elif "--spec" in sys.argv:
         run_spec()
+    elif "--sharded-smoke" in sys.argv:
+        run_sharded_smoke()
+    elif "--sharded" in sys.argv:
+        run_sharded()
     else:
         run()

@@ -142,9 +142,13 @@ def write_bench_json(rows, filename: str = "BENCH_serving.json") -> str:
 
     ``rows`` are the strings ``emit`` returns (``name,us,k=v;k=v;...``);
     they merge by row name into ``benchmarks/artifacts/<filename>``, so
-    partial runs (``--paged-smoke``, ``--spec``) update their rows
-    without clobbering the rest. Returns the artifact path."""
+    partial runs (``--paged-smoke``, ``--spec``, ``--sharded``) update
+    their rows without clobbering the rest. The merged artifact is also
+    mirrored to the repo root, where the cross-PR perf trajectory is
+    tracked (a committed file, not just a benchmark byproduct).
+    Returns the artifact path."""
     import json
+    import shutil
 
     path = os.path.join(ART, filename)
     records = {}
@@ -174,4 +178,6 @@ def write_bench_json(rows, filename: str = "BENCH_serving.json") -> str:
         json.dump({"benchmark": os.path.splitext(filename)[0],
                    "records": records}, f, indent=2, sort_keys=True)
         f.write("\n")
+    shutil.copyfile(path, os.path.abspath(
+        os.path.join(ART, os.pardir, os.pardir, filename)))
     return path

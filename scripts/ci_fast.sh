@@ -18,3 +18,7 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 echo "[ci_fast] speculative decoding smoke"
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving --spec-smoke
+echo "[ci_fast] sharded serving smoke (8-device host-platform mesh)"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --sharded-smoke

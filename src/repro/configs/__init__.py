@@ -12,9 +12,9 @@ from typing import Dict, List
 from repro.models import ModelConfig
 
 from repro.configs import (deepseek_v3_671b, falcon_mamba_7b, granite_moe_3b,
-                           hubert_xlarge, lisa7b, lisa_mini, minicpm3_4b,
-                           nemotron_4_340b, phi4_mini_3p8b, qwen15_32b,
-                           qwen2_vl_2b, zamba2_7b)
+                           hubert_xlarge, lisa7b, lisa_mini, lisa_nano,
+                           minicpm3_4b, nemotron_4_340b, phi4_mini_3p8b,
+                           qwen15_32b, qwen2_vl_2b, zamba2_7b)
 
 REGISTRY: Dict[str, ModelConfig] = {
     c.CONFIG.name: c.CONFIG
@@ -26,6 +26,7 @@ REGISTRY: Dict[str, ModelConfig] = {
 LISA_REGISTRY = {
     lisa7b.CONFIG.name: lisa7b.CONFIG,
     lisa_mini.CONFIG.name: lisa_mini.CONFIG,
+    lisa_nano.CONFIG.name: lisa_nano.CONFIG,
 }
 
 ARCH_IDS: List[str] = list(REGISTRY)

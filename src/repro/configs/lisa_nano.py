@@ -1,0 +1,51 @@
+"""lisa_nano — a truly-small draft geometry for speculative decoding
+(ROADMAP "distilled draft" stepping stone).
+
+PR 4's default draft reuses the target's own Context-stream weights:
+acceptance is total, but every draft step costs a full target step, so
+on compute-bound hosts speculation sits at wall-clock parity. The nano
+draft keeps the target's embedding table, final norm, answer head and
+``seg_proj`` but runs only the first ``DRAFT_LAYERS`` transformer
+layer(s) of the trunk — a layer-truncated view of the *same* weights,
+so a draft step costs ~``DRAFT_LAYERS / num_layers`` of a target step
+(4x fewer trunk FLOPs for lisa_mini) with no separate training run.
+Truncation is distillation-free early exit: the shared embedding/head
+keep the draft's argmax correlated with the target's, and greedy verify
+makes the output token-exact regardless of how often they agree —
+acceptance only moves the cost. Swap in an actually-distilled LM later
+via ``SpeculativeConfig(draft_params=..., draft_pcfg=...)`` unchanged.
+
+Wiring: ``AveryEngine(speculative="nano")`` builds the config and
+slices the executor's weights; ``bench_serving --spec`` reports a
+``serving/spec_insight_nano`` row next to the shared-weights draft.
+"""
+import dataclasses
+
+import jax
+
+from repro.configs.lisa_mini import CONFIG as MINI
+
+# trunk layers the draft keeps (of lisa_mini's 4)
+DRAFT_LAYERS = 1
+
+CONFIG = dataclasses.replace(
+    MINI, name="lisa-nano",
+    llm=MINI.llm.replace(name="llm-nano", num_layers=DRAFT_LAYERS))
+
+
+def nano_draft_params(params: dict) -> dict:
+    """Slice a target's LISA params down to the nano draft: first
+    ``DRAFT_LAYERS`` LLM layers (leading layer axis of the scanned
+    group leaves), shared embed/norm/answer_head/seg_proj. The result
+    aliases the target's arrays — no copies, no extra device memory."""
+    llm = params["llm"]
+    return {
+        "llm": {
+            "embed": llm["embed"],
+            "groups": [jax.tree.map(lambda a: a[:DRAFT_LAYERS],
+                                    llm["groups"][0])],
+            "norm": llm["norm"],
+            "answer_head": llm["answer_head"],
+        },
+        "seg_proj": params["seg_proj"],
+    }

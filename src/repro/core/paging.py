@@ -101,10 +101,20 @@ class PagePool:
 
     def __init__(self, page_size: int = 16, share_prefixes: bool = True,
                  initial_pages: Optional[int] = None,
-                 max_prefixes: Optional[int] = None):
+                 max_prefixes: Optional[int] = None,
+                 placement: Optional[Any] = None, shards: int = 1):
+        """``placement`` (sharded serving): a callable mapping the pool
+        pytree to its device placement (``ShardedServingContext.
+        place_pool`` — kv-heads sharded over the mesh's "model" axis);
+        applied on every ``ensure`` create/growth so the device buffers
+        stay mesh-resident and page-table updates never round-trip
+        through the host. ``shards`` is the model-axis size, used only
+        for the per-shard residency telemetry."""
         self.page_size = int(page_size)
         self.share_prefixes = bool(share_prefixes)
         self.initial_pages = initial_pages
+        self.placement = placement
+        self.kv_shards = max(1, int(shards))
         if max_prefixes is not None and max_prefixes < 1:
             raise ValueError(f"max_prefixes must be >= 1, got {max_prefixes}")
         self.max_prefixes = max_prefixes
@@ -138,6 +148,13 @@ class PagePool:
         leaves = jax.tree.leaves(self.kv)
         return sum(l.nbytes for l in leaves) // max(1, self.num_pages)
 
+    @property
+    def pool_bytes(self) -> int:
+        """Total device bytes resident in the pool (all pages, all
+        layers — the logical/global size; divide by ``kv_shards`` for
+        the per-device footprint under sharded serving)."""
+        return self.page_bytes * self.num_pages
+
     def ensure(self, n_free: int, like: Optional[Dict] = None,
                capacity_hint: int = 0) -> None:
         """Guarantee ``n_free`` allocatable pages. ``like`` (a prefill's
@@ -154,7 +171,10 @@ class PagePool:
                                     a.dtype), like)
             self._refcount = [1] + [0] * (cap - 1)   # page 0: trash, pinned
             self._free = list(range(1, cap))
+            if self.placement is not None:
+                self.kv = self.placement(self.kv)
             return
+        grown = False
         while len(self._free) < n_free:
             old = self.num_pages
             grow = max(old, n_free)
@@ -164,6 +184,9 @@ class PagePool:
                                   a.dtype)], axis=1), self.kv)
             self._refcount.extend([0] * grow)
             self._free.extend(range(old, old + grow))
+            grown = True
+        if grown and self.placement is not None:
+            self.kv = self.placement(self.kv)
 
     # ---- refcounted page allocation ----
 
@@ -281,6 +304,9 @@ class PagePool:
             "kv_pages_total": self.num_pages,
             "kv_pages_in_use": self.pages_in_use,
             "kv_pages_peak": self.kv_pages_peak,
+            "kv_pool_bytes": self.pool_bytes,
+            "kv_pool_bytes_per_shard": self.pool_bytes // self.kv_shards,
+            "kv_shards": self.kv_shards,
             "prefix_entries": len(self.prefix),
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,

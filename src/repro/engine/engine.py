@@ -103,16 +103,39 @@ class AveryEngine:
                  share_prefixes: bool = True,
                  kv_pages: Optional[int] = None,
                  max_prefixes: Optional[int] = None,
-                 speculative: Any = None):
+                 speculative: Any = None,
+                 mesh: Any = None):
         """``speculative`` (in-flight batching only): ``True`` enables
         Context-stream draft + paged multi-token verify with defaults,
         an int sets ``draft_tokens``, a ``SpeculativeConfig`` sets
-        everything; the active ``ControlPolicy``'s ``allow_speculation``
-        gates drafting on the observed acceptance rate.
-        ``max_prefixes`` LRU-caps the shared prefix store."""
+        everything, and ``"nano"`` drafts with the truly-small
+        ``lisa_nano`` geometry (the target's truncated trunk — see
+        ``configs/lisa_nano``); the active ``ControlPolicy``'s
+        ``allow_speculation`` gates drafting on the observed acceptance
+        rate. ``max_prefixes`` LRU-caps the shared prefix store.
+        ``mesh`` (a ``jax.sharding.Mesh``) runs the paged serving stack
+        tensor-parallel: the executor is wrapped in a
+        ``ShardedServingContext`` (params model-sharded, KV pool
+        kv-heads over the "model" axis, page tables replicated) and the
+        engine's ``PagePool`` keeps its device buffers mesh-resident."""
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
         self.lut = lut
+        if mesh is not None:
+            if executor is None:
+                raise ValueError(
+                    "mesh= sharded serving needs an executor to wrap")
+            if batching != "inflight":
+                # only the paged in-flight stages run sharded; a
+                # microbatch/generate engine would silently serve
+                # unsharded while reporting mesh telemetry
+                raise ValueError(
+                    "mesh= shards the paged in-flight serving stack; "
+                    "construct the engine with batching='inflight'")
+            from repro.sharding.serving import ShardedServingContext
+            if not isinstance(executor, ShardedServingContext):
+                executor = ShardedServingContext(executor, mesh)
+        self.mesh = mesh
         self.executor = executor
         self.transport: Transport = transport or LoopbackTransport()
         self.policy: ControlPolicy = policy or AdaptivePolicy()
@@ -132,7 +155,9 @@ class AveryEngine:
         self.kv_pool = PagePool(
             page_size=getattr(executor, "page_size", 16),
             share_prefixes=share_prefixes, initial_pages=kv_pages,
-            max_prefixes=max_prefixes)
+            max_prefixes=max_prefixes,
+            placement=getattr(executor, "place_pool", None),
+            shards=getattr(executor, "model_shards", 1))
         self.spec_config = self._resolve_speculative(speculative)
         if self.spec_config is not None and batching != "inflight":
             raise ValueError(
@@ -154,19 +179,33 @@ class AveryEngine:
         self.n_infeasible = 0
         self.n_blackouts = 0
 
-    @staticmethod
-    def _resolve_speculative(speculative: Any) -> Optional[SpeculativeConfig]:
+    def _resolve_speculative(self, speculative: Any
+                             ) -> Optional[SpeculativeConfig]:
         if speculative is None or speculative is False:
             return None
         if speculative is True:
             return SpeculativeConfig()
+        if isinstance(speculative, str):
+            if speculative != "nano":
+                raise ValueError(
+                    f"unknown speculative mode {speculative!r}; the only "
+                    f"named mode is 'nano'")
+            if self.executor is None:
+                raise ValueError(
+                    "speculative='nano' slices its draft from the "
+                    "executor's weights; construct the engine with one")
+            from repro.configs import lisa_nano
+            return SpeculativeConfig(
+                draft_pcfg=lisa_nano.CONFIG,
+                draft_params=lisa_nano.nano_draft_params(
+                    self.executor.params))
         if isinstance(speculative, int):
             return SpeculativeConfig(draft_tokens=speculative)
         if isinstance(speculative, SpeculativeConfig):
             return speculative
         raise ValueError(
-            f"speculative must be bool, int, or SpeculativeConfig, got "
-            f"{speculative!r}")
+            f"speculative must be bool, int, str, or SpeculativeConfig, "
+            f"got {speculative!r}")
 
     def _merged_spec_stats(self) -> SpecStats:
         """Engine-lifetime speculation telemetry: retired decoders'
@@ -532,4 +571,7 @@ class AveryEngine:
                 out.update(self._merged_spec_stats().as_dict())
         if self.executor is not None:
             out["compiled_stages"] = self.executor.num_compiled_stages
+        if self.mesh is not None:
+            out["mesh_devices"] = self.mesh.size
+            out["model_shards"] = getattr(self.executor, "model_shards", 1)
         return out

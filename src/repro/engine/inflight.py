@@ -266,7 +266,10 @@ class InflightDecoder:
             max_new_tokens=self.T, draft_tokens=cfg.draft_tokens,
             flash_decode=getattr(self.executor, "flash_decode", False),
             prefix_rows=self.spec_prefix_rows,
-            prefix_cap=self.pool.max_prefixes)
+            prefix_cap=self.pool.max_prefixes,
+            # sharded serving context: draft stages jitted with mesh
+            # shardings so the draft rides the same tensor parallelism
+            fns_factory=getattr(self.executor, "draft_fns", None))
 
     # ---- the lockstep decode step ----
 

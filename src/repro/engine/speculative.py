@@ -153,7 +153,8 @@ class DraftModel:
                  prefix_len: int, max_new_tokens: int, draft_tokens: int,
                  flash_decode: bool = False,
                  prefix_rows: Optional[Dict[Any, Dict]] = None,
-                 prefix_cap: Optional[int] = None):
+                 prefix_cap: Optional[int] = None,
+                 fns_factory: Optional[Any] = None):
         self.pcfg = dataclasses.replace(
             pcfg, llm=pcfg.llm.replace(use_flash_decode=flash_decode))
         self.params = params
@@ -181,8 +182,17 @@ class DraftModel:
             prefix_rows if prefix_rows is not None else {})
         self._prefix_cap = (prefix_cap if prefix_cap is not None
                             else 2 * self.slots)
-        self._prefill, self._step, self._insert = _draft_fns(self.pcfg,
-                                                             self.width)
+        # ``fns_factory`` (sharded serving): the engine's serving
+        # context supplies jitted prefill/step/insert with explicit
+        # mesh shardings (``ShardedServingContext.draft_fns``); the
+        # default is the module-level jit cache, which survives decoder
+        # retirement the same way
+        if fns_factory is not None:
+            self._prefill, self._step, self._insert = fns_factory(
+                self.pcfg, self.width, self.params)
+        else:
+            self._prefill, self._step, self._insert = _draft_fns(self.pcfg,
+                                                                 self.width)
 
     @staticmethod
     def _insert_row(dst: Dict, src: Dict, row) -> Dict:

@@ -1,4 +1,17 @@
-"""Jit'd wrapper: (B,H,hd) / (B,W,K,hd) layouts, cache-length padding."""
+"""Jit'd wrapper: (B,H,hd) / (B,W,K,hd) layouts, cache-length padding.
+
+Per-shard head counts (sharded serving): under tensor parallelism the
+paged pool shards kv-heads over the mesh's "model" axis, so inside a
+``shard_map`` each shard calls these wrappers with
+``K = n_kv_heads / model_shards`` (and ``H = num_heads / model_shards``)
+— the ``group``/``heads_per_batch`` grid math is derived from the
+per-shard shapes, so the kernel bodies run unchanged on the smaller K.
+On this CPU container the kernels execute in *interpret mode* and
+cannot lower inside a GSPMD partition, so ``ShardedServingContext``
+serves the jnp reference attention instead (XLA partitions it over the
+head-sharded operands); route the kernels through ``shard_map`` with
+the per-shard head counts on real TPU.
+"""
 from __future__ import annotations
 
 import functools

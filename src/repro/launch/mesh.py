@@ -25,6 +25,18 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:
-    """Single-host mesh for tests: uses however many devices exist."""
+    """Single-host mesh for tests and sharded serving: uses however many
+    devices exist. ``model`` (the tensor-parallel axis size) is clamped
+    to the device count — asking for more shards than devices degrades
+    to whatever the host has instead of building an empty ``(0, k)``
+    mesh — and must divide the remaining device count."""
     n = len(jax.devices())
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    model = min(model, n)
+    if n % model:
+        raise ValueError(
+            f"model={model} does not divide the {n} local devices; pick a "
+            f"divisor of {n} (or force more host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     return jax.make_mesh((n // model, model), ("data", "model"))

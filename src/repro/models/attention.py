@@ -203,7 +203,17 @@ def gqa_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array,
     additive over the row's gathered virtual sequence. Returns
     (out, new pool). Gathered virtual order preserves ascending
     positions and masked slots contribute exactly zero, so outputs match
-    the contiguous ring cache bit-for-bit up to reduction order."""
+    the contiguous ring cache bit-for-bit up to reduction order.
+
+    Sharded serving (``sharding/serving.py``) runs this body under a
+    mesh with kv-heads sharded over "model": the page gather and both
+    einsums stay shard-local per head slice (each shard sees
+    K / model_shards kv heads) and the only collective is the
+    all-reduce after the row-parallel ``wo``. The flash kernel path is
+    per-shard-head-count-ready but needs ``shard_map`` (it cannot lower
+    inside a GSPMD partition in interpret mode), so sharded contexts
+    pin ``use_flash_decode=False`` — see ``kernels/decode_attention``.
+    """
     B, S, d = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     if cfg.shard_cache_hd:

@@ -1,4 +1,5 @@
 from repro.sharding.specs import (batch_specs, cache_specs, param_specs,
-                                  to_shardings)
+                                  serving_specs, to_shardings)
 
-__all__ = ["param_specs", "batch_specs", "cache_specs", "to_shardings"]
+__all__ = ["param_specs", "batch_specs", "cache_specs", "serving_specs",
+           "to_shardings"]

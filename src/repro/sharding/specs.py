@@ -170,6 +170,38 @@ def cache_specs(cfg: ModelConfig, abstract_cache: Any, mesh: Mesh) -> Any:
         lambda p, l: _cache_rule(p, l, cfg, mesh), abstract_cache)
 
 
+def _serving_rule(path, leaf, mesh: Mesh) -> P:
+    """Key-path rule for the *paged serving* pytrees (the in-flight
+    decode substrate, not the training state):
+
+      * KV leaves ("k"/"v") — the shared page pool (L, P, page, K, hd),
+        a paged prefix (L, n_pages, page, K, hd), or the draft model's
+        contiguous ring (L, B, W, K, hd) — shard the kv-heads axis
+        (always second-to-last) over "model" when divisible; the page /
+        batch / width axes replicate, so page-table indirection stays a
+        *local* gather on every shard.
+      * everything else — page tables, per-slot positions, token ids,
+        logits, per-row scalars, MLA latent caches (which do not page) —
+        replicates.
+    """
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    if name in ("k", "v") and nd >= 2:
+        spec = [None] * nd
+        spec[-2] = _maybe(shape[-2], "model", mesh)
+        return P(*spec)
+    return P(*([None] * nd))
+
+
+def serving_specs(abstract_tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpecs for any serving pytree (pool, paged prefix KV,
+    draft ring cache, page tables, logits, scalars) by key-path."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _serving_rule(p, l, mesh), abstract_tree)
+
+
 def _batch_rule(path, leaf, mesh: Mesh) -> P:
     names = _path_names(path)
     name = names[-1] if names else ""

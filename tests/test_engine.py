@@ -597,3 +597,62 @@ def test_no_share_prefixes_frees_all_pages(executor):
     stats = engine.stats
     assert stats["prefix_entries"] == 0
     assert stats["kv_pages_in_use"] == 0    # everything returned
+
+
+# ---- lisa_nano draft + sharded serving knobs ----
+
+
+def test_engine_nano_draft_speculative_matches_generate(executor):
+    """``speculative="nano"``: the truly-small lisa_nano draft (the
+    target's truncated trunk, sliced not trained) serves token-exact
+    through the engine — acceptance only moves the cost, never the
+    output — and the draft really is 1 layer of the target's 4."""
+    import jax
+
+    from repro.configs import lisa_nano
+
+    reqs = _edge_requests(executor, 3, seed=31)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, speculative="nano")
+    assert engine.spec_config.draft_pcfg.llm.num_layers \
+        == lisa_nano.DRAFT_LAYERS
+    leaf = jax.tree.leaves(engine.spec_config.draft_params["llm"]
+                           ["groups"][0])[0]
+    assert leaf.shape[0] == lisa_nano.DRAFT_LAYERS
+    futs = [engine.submit_packet(p, q, it, time_s=0.0)
+            for (p, q, it) in reqs]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        ref = executor.cloud_generate_batch([pkt], [q])[0]
+        assert np.array_equal(fut.result().tokens, ref[-1])
+    assert engine.stats["spec_drafted"] > 0
+
+
+def test_engine_mesh_knob_shards_serving(executor):
+    """``AveryEngine(mesh=...)`` wraps the executor in a
+    ShardedServingContext, keeps the PagePool mesh-resident, reports
+    the mesh telemetry, and serves token-exact vs the one-shot path
+    (degenerate 1-shard mesh on this host; the multi-shard pin lives in
+    test_sharding's 1x2 subprocess test)."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.sharding.serving import ShardedServingContext
+
+    # only the paged in-flight stages run sharded: a microbatch engine
+    # would silently serve unsharded while reporting mesh telemetry
+    with pytest.raises(ValueError):
+        AveryEngine(lut=LUT, executor=executor, mesh=make_local_mesh())
+    reqs = _edge_requests(executor, 2, seed=41)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, mesh=make_local_mesh(model=1))
+    assert isinstance(engine.executor, ShardedServingContext)
+    assert engine.kv_pool.placement is not None
+    futs = [engine.submit_packet(p, q, it, time_s=0.0)
+            for (p, q, it) in reqs]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        ref = executor.cloud_generate_batch([pkt], [q])[0]
+        assert np.array_equal(fut.result().tokens, ref[-1])
+    stats = engine.stats
+    assert stats["mesh_devices"] >= 1
+    assert stats["model_shards"] >= 1
+    assert stats["kv_pool_bytes_per_shard"] > 0

@@ -210,3 +210,41 @@ def test_pool_ops_never_leak_or_double_free(seed, n_ops):
                           (16, 16, 1), (17, 16, 2)])
 def test_pages_for(tokens, page, expect):
     assert pages_for(tokens, page) == expect
+
+
+# ---- device-memory residency telemetry (sharded serving) ----
+
+
+def test_stats_report_pool_residency_per_shard():
+    """``stats()`` reports the pool's device residency — total bytes
+    (page_bytes x num_pages) and the per-model-shard share — so
+    ``kv_pages_peak`` sizing works per device under sharded serving."""
+    pool = _pool(shards=4)
+    st = pool.stats()
+    assert st["kv_pool_bytes"] == pool.page_bytes * pool.num_pages
+    assert st["kv_pool_bytes"] > 0
+    assert st["kv_pool_bytes_per_shard"] == st["kv_pool_bytes"] // 4
+    assert st["kv_shards"] == 4
+    # an unsharded pool degenerates to one shard holding everything
+    assert _pool().stats()["kv_pool_bytes_per_shard"] \
+        == _pool().stats()["kv_pool_bytes"]
+
+
+def test_placement_applied_on_ensure_and_growth():
+    """``placement`` re-places the pool's device buffers on creation
+    and on every growth, so the buffers stay mesh-resident as the pool
+    doubles (the sharded context passes ``place_pool`` here)."""
+    calls = []
+
+    def placement(kv):
+        calls.append(sum(l.shape[1] for l in
+                         __import__("jax").tree.leaves(kv)) // 2)
+        return kv
+
+    pool = _pool(placement=placement)
+    assert calls == [pool.num_pages]          # placed at creation
+    before = pool.num_pages
+    pool.ensure(before + 8)                   # force growth
+    assert pool.num_pages > before
+    assert calls[-1] == pool.num_pages        # re-placed after growth
+    _invariant(pool)
