@@ -44,6 +44,14 @@ FRAMES_PER_UAV = 6
 # speculative mode: longer answers amortise the per-admission draft
 # prefill over more verify rounds (the Insight-path regime spec targets)
 SPEC_ANSWER_TOKENS = 8
+# chaos storm workload: fleet burst + seeded fault schedule (blackout
+# window, mid-decode stage fault, latency-spiked straggler) under a
+# per-request SLO, served with retry-with-downshift + deadline cancel
+CHAOS_UAVS = 3
+CHAOS_FRAMES = 8
+CHAOS_SLO_S = 8.0
+CHAOS_BLACKOUT = (2.0, 4.0)       # swallows the t=2,3 submissions
+CHAOS_SPIKE_EXTRA_S = 60.0        # straggler arrives hopelessly late
 
 
 def _requests(executor, n):
@@ -337,6 +345,109 @@ def sharded_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
     return rows
 
 
+def chaos_rows(executor, n_uavs=CHAOS_UAVS, frames=CHAOS_FRAMES,
+               emit_row=None, seed=0):
+    """Chaos storm mode: a repeat-prefix fleet burst (one Insight frame
+    per mission second, UAVs round-robin) served through the in-flight
+    engine under a seeded fault schedule — an uplink blackout window
+    that swallows two submissions, a ``cloud_decode_rows`` fault that
+    kills the whole running batch mid-decode, and a latency spike that
+    blows the final straggler frame past its SLO — with a
+    ``RetryPolicy`` (backoff + tier downshift), per-request deadlines
+    (``max_latency_s``), and ``debug_invariants`` page audits on.
+
+    The row reports the delivered-under-SLO rate and the retry/
+    downshift/cancel telemetry; the run *asserts* the fault-tolerance
+    contract (every future resolves, at least one successful
+    downshifted retry, at least one deadline cancellation, zero leaked
+    KV pages) so CI cannot record a green row for a broken engine."""
+    import dataclasses
+
+    from repro.core.intent import DEFAULT_REQUIREMENTS
+    from repro.engine import (FaultInjector, FaultyExecutor,
+                              LoopbackTransport, RetryPolicy)
+
+    emit_row = emit_row or emit
+    n = n_uavs * frames
+    rng = np.random.RandomState(seed)
+    fleet = []
+    for u in range(n_uavs):
+        b = floodseg.make_batch(rng, 1, "segment", augment=False)
+        fleet.append((f"uav-{u}", jnp.asarray(b["images"]), b["query"]))
+    reqs = dict(DEFAULT_REQUIREMENTS)
+    reqs[Intent.INSIGHT] = dataclasses.replace(
+        reqs[Intent.INSIGHT], max_latency_s=CHAOS_SLO_S)
+    out = {}
+
+    # the straggler flies long after the burst (and its retry tail) has
+    # drained, so the spiked delivery's watermark jump can only sweep
+    # the straggler itself, not still-decoding burst requests
+    t_straggler = float(n + 30)
+
+    def serve():
+        # fresh faults + engine per rep: the schedule (call indices, RNG
+        # stream, mission clock) must replay identically every run
+        faults = FaultInjector(
+            LoopbackTransport(), seed=seed, blackouts=[CHAOS_BLACKOUT],
+            spikes=[(t_straggler, t_straggler + 1.0, CHAOS_SPIKE_EXTRA_S)])
+        chaotic = FaultyExecutor(executor,
+                                 fail_at={"cloud_decode_rows": [2]})
+        engine = make_engine(
+            chaotic, transport=faults, batching="inflight", max_batch=8,
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.25),
+            debug_invariants=True)
+        sessions = {op: engine.session(op, requirements=dict(reqs))
+                    for op, _, _ in fleet}
+        futs = []
+        for i in range(n - 1):           # the storm burst
+            op, img, q = fleet[i % n_uavs]
+            futs.append(sessions[op].submit(
+                prompt="segment the stranded person", images=img, query=q,
+                time_s=float(i), intent=Intent.INSIGHT))
+        engine.drain()
+        # the straggler: its delivery is spiked past the SLO, so the
+        # deadline sweep must cancel it (slot + pages released) instead
+        # of letting its future hang
+        op, img, q = fleet[(n - 1) % n_uavs]
+        futs.append(sessions[op].submit(
+            prompt="segment the stranded person", images=img, query=q,
+            time_s=t_straggler, intent=Intent.INSIGHT))
+        engine.drain()
+        for s in sessions.values():
+            s.close()
+        out["futs"], out["engine"] = futs, engine
+
+    chaos_s = time_best(serve)
+    futs, engine = out["futs"], out["engine"]
+    resps = [f.result() for f in futs]   # must all resolve, never hang
+    st = engine.stats
+    leaks = engine.kv_pool.pages_in_use
+    engine.kv_pool.check_invariants()
+    served_retried = [r for r in resps
+                      if r.failure is None and r.attempts > 1]
+    if not served_retried or st["downshifts"] < 1:
+        raise AssertionError(
+            f"chaos storm produced no successful downshifted retry "
+            f"(retried-and-served={len(served_retried)}, "
+            f"downshifts={st['downshifts']})")
+    if st["deadline_cancelled"] < 1:
+        raise AssertionError("spiked straggler was not deadline-cancelled")
+    if leaks != 0:
+        raise AssertionError(f"chaos run leaked {leaks} KV pages")
+    slo = sum(1 for r in resps if r.failure is None) / len(resps)
+    return [emit_row(
+        "serving/chaos", chaos_s * 1e6,
+        f"req_s={n / chaos_s:.1f};delivered_under_slo={slo:.2f};"
+        f"retries={int(st['retries'])};downshifts={int(st['downshifts'])};"
+        f"deadline_cancelled={int(st['deadline_cancelled'])};"
+        f"inflight_cancelled={int(st['inflight_cancelled'])};"
+        f"stage_faults={int(st['stage_faults'])};"
+        f"blackouts_terminal={int(st['blackouts'])};"
+        f"cloud_errors_terminal={int(st['cloud_errors'])};"
+        f"page_leaks={leaks};slo_s={CHAOS_SLO_S};seed={seed};"
+        f"uavs={n_uavs};frames_per_uav={frames}")]
+
+
 def run(log=print):
     rows = []
     params, bns, lut = init_serving_system(PCFG)
@@ -400,6 +511,9 @@ def run(log=print):
     # sharded paged serving (degenerates to 1 shard on a 1-device host;
     # ci_fast forces an 8-device host platform for the real mesh)
     rows += sharded_rows(executor)
+
+    # chaos storm: the fault-tolerance contract under a seeded schedule
+    rows += chaos_rows(executor)
 
     steps = 32
     for b in BATCHES:
@@ -471,6 +585,28 @@ def run_sharded_smoke():
     return rows
 
 
+def run_chaos():
+    """Chaos storm mode on its own: the full-size seeded fault schedule
+    (3 UAVs x 8 frames) against the in-flight engine with retries,
+    downshifts, deadlines, and page audits — asserting the
+    fault-tolerance contract, not just timing it."""
+    rows = chaos_rows(_smoke_executor())
+    write_bench_json(rows)
+    return rows
+
+
+def run_chaos_smoke():
+    """CI smoke: the chaos storm at a reduced size (2 UAVs x 3 frames)
+    — blackout retry-with-downshift, batch-wide stage-fault recovery,
+    and the spiked straggler's deadline cancellation in seconds, with
+    the same hard asserts (>=1 successful downshifted retry, >=1
+    deadline cancel, zero leaked pages) as the full run."""
+    rows = chaos_rows(_smoke_executor(), n_uavs=2, frames=3,
+                      emit_row=_smoke_emit)
+    write_bench_json(rows)
+    return rows
+
+
 def run_spec_smoke():
     """CI smoke: speculative decoding end to end at a reduced size
     (2 UAVs x 3 frames) — draft model, verify kernel path, greedy
@@ -493,5 +629,9 @@ if __name__ == "__main__":
         run_sharded_smoke()
     elif "--sharded" in sys.argv:
         run_sharded()
+    elif "--chaos-smoke" in sys.argv:
+        run_chaos_smoke()
+    elif "--chaos" in sys.argv:
+        run_chaos()
     else:
         run()

@@ -22,3 +22,9 @@ echo "[ci_fast] sharded serving smoke (8-device host-platform mesh)"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving --sharded-smoke
+echo "[ci_fast] chaos storm smoke (retry/downshift/deadline, zero leaks)"
+# chaos_rows asserts the fault-tolerance contract itself: every future
+# resolves, >=1 successful downshifted retry, >=1 deadline cancel, and
+# zero leaked KV pages — a broken engine fails this step, not just a row
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --chaos-smoke

@@ -15,6 +15,7 @@ from __future__ import annotations
 import enum
 import re
 from dataclasses import dataclass
+from typing import Optional
 
 
 class Intent(enum.Enum):
@@ -27,6 +28,12 @@ class IntentRequirements:
     """Service-level objectives induced by an intent (paper §3.1)."""
     min_update_pps: float         # F_I: minimum update throughput (packets/s)
     min_fidelity: float = 0.0     # Q_I: minimum Average IoU (Insight only)
+    # per-request latency SLO: a request not delivered within
+    # max_latency_s of its submission is cancelled by the engine
+    # (Response.failure == "deadline"); None disables the deadline —
+    # matching the paper's listing, where timeliness is a throughput
+    # floor (F_I) and hard per-request deadlines are deployment knobs
+    max_latency_s: Optional[float] = None
 
 
 # Deployment defaults (paper §3.3: F_I = 0.5 PPS for Insight-level intents;

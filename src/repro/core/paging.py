@@ -291,6 +291,46 @@ class PagePool:
             self.release(self.prefix.pop(k).page_ids)
         return len(keys)
 
+    # ---- invariant audit ----
+
+    def check_invariants(self) -> Dict[str, int]:
+        """Audit the allocator: every page is exactly one of
+        {trash, live, free}, the free list carries no duplicates and
+        only refcount-zero pages, no refcount is negative, and every
+        stored prefix still holds live pages. Raises ``RuntimeError``
+        naming the first violations; returns the page accounting on
+        success. Cheap (host bookkeeping only), so the engine's
+        ``debug_invariants`` knob can run it after every pump/cancel,
+        and the chaos bench runs it after every storm."""
+        errs = []
+        rc = self._refcount
+        if any(c < 0 for c in rc):
+            errs.append("negative refcount")
+        if len(set(self._free)) != len(self._free):
+            errs.append("duplicate ids on the free list")
+        if rc and TRASH_PAGE in self._free:
+            errs.append("trash page on the free list")
+        if rc and rc[TRASH_PAGE] < 1:
+            errs.append("trash page lost its pin")
+        for i in self._free:
+            if rc[i] != 0:
+                errs.append(f"free page {i} has refcount {rc[i]}")
+                break
+        if rc and self.pages_in_use + len(self._free) != self.num_pages - 1:
+            errs.append(
+                f"conservation violated: {self.pages_in_use} in use + "
+                f"{len(self._free)} free != {self.num_pages} pages - trash")
+        for key, entry in self.prefix.items():
+            if any(rc[i] <= 0 for i in entry.page_ids):
+                errs.append(f"prefix {key} holds a freed page")
+                break
+        if errs:
+            raise RuntimeError("PagePool invariants violated: "
+                               + "; ".join(errs))
+        return {"pages_in_use": self.pages_in_use,
+                "pages_free": len(self._free),
+                "pages_total": self.num_pages}
+
     # ---- telemetry ----
 
     @property

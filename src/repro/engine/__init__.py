@@ -2,7 +2,9 @@
 
   api         — Request / Response / StreamEvent / RequestFuture
   transport   — Transport protocol; ChannelTransport, LoopbackTransport
-  policy      — ControlPolicy protocol; Adaptive / StaticTier / BestEffort
+  policy      — ControlPolicy protocol; Adaptive / StaticTier / BestEffort;
+                RetryPolicy (backoff + tier downshift on failure)
+  faults      — chaos injection: FaultInjector (transport), FaultyExecutor
   inflight    — token-level continuous batching (join a running decode)
   speculative — Context-stream DraftModel + paged multi-token verify
   engine      — AveryEngine + OperatorSession
@@ -12,10 +14,13 @@ benchmarks) construct and drive the system through this package.
 """
 from repro.engine.api import Request, RequestFuture, Response, StreamEvent
 from repro.engine.engine import AveryEngine, OperatorSession
+from repro.engine.faults import (CloudStageError, FaultInjector,
+                                 FaultyExecutor)
 from repro.engine.inflight import InflightDecoder
 from repro.engine.policy import (AdaptivePolicy, BestEffortPolicy,
-                                 ControlPolicy, StaticTierPolicy,
-                                 TierDecision, policy_from_mode)
+                                 ControlPolicy, RetryPolicy,
+                                 StaticTierPolicy, TierDecision,
+                                 policy_from_mode)
 from repro.engine.speculative import (DraftModel, SpecStats,
                                       SpeculativeConfig)
 from repro.engine.transport import (ChannelTransport, LoopbackTransport,
@@ -25,7 +30,8 @@ __all__ = [
     "Request", "Response", "StreamEvent", "RequestFuture",
     "AveryEngine", "OperatorSession", "InflightDecoder",
     "ControlPolicy", "TierDecision", "AdaptivePolicy", "StaticTierPolicy",
-    "BestEffortPolicy", "policy_from_mode",
+    "BestEffortPolicy", "RetryPolicy", "policy_from_mode",
+    "CloudStageError", "FaultInjector", "FaultyExecutor",
     "DraftModel", "SpecStats", "SpeculativeConfig",
     "Transport", "ChannelTransport", "LoopbackTransport",
 ]

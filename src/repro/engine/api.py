@@ -37,7 +37,8 @@ class Request:
 @dataclass
 class StreamEvent:
     """Lifecycle marker: queued, tier_selected, transmitted, blackout,
-    prefilled, joined_batch, served, infeasible."""
+    prefilled, joined_batch, served, infeasible, retry, cloud_error,
+    cancelled."""
     kind: str
     t: float = 0.0
     data: Dict[str, Any] = field(default_factory=dict)
@@ -50,6 +51,16 @@ class Response:
     intent: Intent
     tier_name: Optional[str] = None    # None for Context-stream requests
     feasible: bool = True              # Algorithm-1 feasibility verdict
+    # terminal failure taxonomy — exactly one of:
+    #   None          served (the semantic product is present)
+    #   "blackout"    every transmission attempt died on the uplink
+    #   "deadline"    cancelled past IntentRequirements.max_latency_s
+    #   "infeasible"  no admissible tier (strict policy idles the frame)
+    #   "cloud_error" a cloud serving stage failed and retries ran out
+    # ``feasible`` keeps its pre-failure-taxonomy semantics (False on
+    # every failed response, and on served best-effort starved frames).
+    failure: Optional[str] = None
+    attempts: int = 1                  # transmission attempts (1 = no retry)
     # semantic products
     answer_logits: Optional[np.ndarray] = None
     mask_logits: Optional[np.ndarray] = None
@@ -88,6 +99,10 @@ class RequestFuture:
         self._engine = engine
         self._response: Optional[Response] = None
         self.events: List[StreamEvent] = []
+        # engine-side bookkeeping: decision/rec of the latest attempt,
+        # owning session, absolute deadline (None = no SLO)
+        self.meta: Dict[str, Any] = {}
+        self.attempts = 0
 
     def emit(self, kind: str, t: float = 0.0, **data: Any) -> None:
         self.events.append(StreamEvent(kind=kind, t=t, data=data))

@@ -43,7 +43,8 @@ from repro.core.lut import SystemLUT
 from repro.core.paging import PagePool
 from repro.engine.api import Request, RequestFuture, Response
 from repro.engine.inflight import InflightDecoder
-from repro.engine.policy import AdaptivePolicy, ControlPolicy, TierDecision
+from repro.engine.policy import (AdaptivePolicy, ControlPolicy, RetryPolicy,
+                                 TierDecision)
 from repro.engine.speculative import SpecStats, SpeculativeConfig
 from repro.engine.transport import LoopbackTransport, Transport
 from repro.network.energy import EdgeDevice, edge_insight_flops
@@ -104,7 +105,9 @@ class AveryEngine:
                  kv_pages: Optional[int] = None,
                  max_prefixes: Optional[int] = None,
                  speculative: Any = None,
-                 mesh: Any = None):
+                 mesh: Any = None,
+                 retry: Optional[RetryPolicy] = None,
+                 debug_invariants: bool = False):
         """``speculative`` (in-flight batching only): ``True`` enables
         Context-stream draft + paged multi-token verify with defaults,
         an int sets ``draft_tokens``, a ``SpeculativeConfig`` sets
@@ -117,7 +120,12 @@ class AveryEngine:
         tensor-parallel: the executor is wrapped in a
         ``ShardedServingContext`` (params model-sharded, KV pool
         kv-heads over the "model" axis, page tables replicated) and the
-        engine's ``PagePool`` keeps its device buffers mesh-resident."""
+        engine's ``PagePool`` keeps its device buffers mesh-resident.
+        ``retry`` (a ``RetryPolicy``) turns transmission blackouts and
+        cloud-stage faults into bounded backoff-and-downshift retries
+        instead of terminal failures; ``debug_invariants`` audits the KV
+        pool (``PagePool.check_invariants``) after every pump/drain/
+        cancellation — cheap, but meant for tests and chaos runs."""
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
         self.lut = lut
@@ -168,16 +176,32 @@ class AveryEngine:
         self._draft_prefix_rows: Dict = {}
         self._inflight: Dict[int, InflightDecoder] = {}   # qlen -> decoder
         self._retired_inflight = (0, 0)   # (steps, slot-steps) of evicted
+        self._retired_faults = (0, 0)     # (cancels, stage faults) of evicted
         self._retired_spec = SpecStats()  # spec telemetry of evicted
         self._futures: Dict[int, RequestFuture] = {}
         self._order: List[int] = []
         self._seq = 0
         self.sessions: List[OperatorSession] = []
-        # telemetry
+        self.retry = retry
+        self.debug_invariants = debug_invariants
+        # mission-clock watermark: the latest time the engine has seen
+        # (submissions, deliveries, retry backoffs). Deadline sweeps
+        # cancel in-flight requests the watermark has passed.
+        self._now = 0.0
+        # telemetry — terminal outcomes are mutually exclusive: every
+        # submitted request lands in exactly one of {completed,
+        # infeasible, blackouts, deadline_cancelled, cloud_errors};
+        # n_starved separately counts *served* best-effort responses
+        # with feasible=False (those also count as completed)
         self.n_submitted = 0
         self.n_completed = 0
         self.n_infeasible = 0
         self.n_blackouts = 0
+        self.n_deadline = 0
+        self.n_cloud_errors = 0
+        self.n_starved = 0
+        self.n_retries = 0
+        self.n_downshifts = 0
 
     def _resolve_speculative(self, speculative: Any
                              ) -> Optional[SpeculativeConfig]:
@@ -280,6 +304,11 @@ class AveryEngine:
         self.n_submitted += 1
         return fut
 
+    def _deadline_for(self, session: OperatorSession, intent: Intent,
+                      t: float) -> Optional[float]:
+        max_latency = session.requirements[intent].max_latency_s
+        return None if max_latency is None else t + max_latency
+
     def submit(self, request: Request, session: OperatorSession
                ) -> RequestFuture:
         if self.executor is None:      # before any bookkeeping: a raise
@@ -291,21 +320,46 @@ class AveryEngine:
             intent = request.intent = session.classify(request.prompt)
         session.history.append((request.time_s, request.prompt, intent))
         fut = self._register(request, session)
-        t = request.time_s
+        fut.meta["session"] = session
+        fut.meta["deadline"] = self._deadline_for(session, intent,
+                                                  request.time_s)
+        self._advance(request.time_s)
+        self._attempt(fut, request.time_s)
+        self._sweep_deadlines()
+        return fut
+
+    # ---- attempts, retries, failures ----
+
+    def _attempt(self, fut: RequestFuture, t: float,
+                 prev_tier: Any = None) -> None:
+        """One full serving attempt at mission time ``t``: Sense/Select
+        (downshifted below ``prev_tier`` on a retry), edge (re-)encode at
+        the chosen tier, transmit, enqueue on the cloud. Failures route
+        through ``_send_failed`` which retries or resolves."""
+        request = fut.request
+        session: OperatorSession = fut.meta["session"]
+        intent = request.intent
         transport, decision, bw = self._decide(session, intent, t)
+        if prev_tier is not None and self.retry is not None:
+            decision = self.retry.downshifted(decision, prev_tier, self.lut,
+                                              bw)
+            if (decision.tier is not None
+                    and decision.tier.payload_mb < prev_tier.payload_mb):
+                self.n_downshifts += 1
+        fut.attempts += 1
         fut.emit("tier_selected", t, bandwidth_mbps=bw,
                  tier=decision.tier.name if decision.tier else None,
-                 feasible=decision.feasible)
+                 feasible=decision.feasible, attempt=fut.attempts)
         if decision.stream == "insight" and decision.tier is None:
             self.n_infeasible += 1
             fut.emit("infeasible", t)
             fut.set_result(Response(
                 request_id=request.request_id,
                 operator_id=session.operator_id, intent=intent,
-                feasible=False, t_submit=t, t_delivered=t))
-            return fut
-        if not decision.feasible:
-            self.n_infeasible += 1       # best-effort: served but starved
+                feasible=False, failure="infeasible",
+                attempts=max(1, fut.attempts), t_submit=request.time_s,
+                t_delivered=t))
+            return
         if intent is Intent.CONTEXT:
             packet, _ = self.executor.edge_context(
                 request.images, request.request_id, t)
@@ -313,22 +367,108 @@ class AveryEngine:
             packet = self.executor.edge_insight(
                 request.images, decision.tier, request.request_id, t)
         rec = transport.send(packet, t)
-        if not rec.delivered:            # uplink blackout: fail fast so
-            self._fail_blackout(fut, decision, rec)   # the policy can react
-            return fut
+        self._advance(rec.end_s)
+        if not rec.delivered:            # uplink blackout / drop
+            self._send_failed(fut, decision, rec)
+            return
         fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
         self._enqueue_cloud(fut, packet, request.query, decision, rec)
-        return fut
 
-    def _fail_blackout(self, fut: RequestFuture, decision: TierDecision,
-                       rec: Any) -> None:
-        """The transport gave up on the packet (bandwidth blackout). The
-        request resolves as a failed delivery — no cloud work — so the
-        caller/policy can defer or retry instead of hanging."""
-        self.n_blackouts += 1
+    def _attempt_packet(self, fut: RequestFuture, t: float) -> None:
+        """Retry path for pre-encoded submissions: re-send the same
+        packet (no images to re-encode means no tier downshift)."""
+        session: OperatorSession = fut.meta["session"]
+        transport = session.transport or self.transport
+        packet: pk.Packet = fut.meta["fixed_packet"]
+        decision: TierDecision = fut.meta["decision"]
+        fut.attempts += 1
+        rec = transport.send(packet, t)
+        self._advance(rec.end_s)
+        if not rec.delivered:
+            self._send_failed(fut, decision, rec)
+            return
+        fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
+        self._enqueue_cloud(fut, packet, fut.request.query, decision, rec)
+
+    def _send_failed(self, fut: RequestFuture, decision: TierDecision,
+                     rec: Any) -> None:
+        """The transport gave up on the packet (bandwidth blackout or a
+        drop). With a ``RetryPolicy`` and budget left — attempts below
+        the cap, deadline not yet passed at the backed-off retry time —
+        the engine retries; otherwise the request resolves as a failed
+        delivery (no cloud work) so the caller can react instead of
+        hanging."""
         fut.emit("blackout", rec.end_s)
-        fut.meta = {"decision": decision, "rec": rec}
-        fut.set_result(self._base_response(fut, feasible=False))
+        fut.meta.update(decision=decision, rec=rec)
+        if self._can_retry(fut, rec.end_s):
+            self._retry(fut, rec.end_s, decision.tier)
+            return
+        self.n_blackouts += 1
+        fut.set_result(self._base_response(fut, feasible=False,
+                                           failure="blackout"))
+
+    def _cloud_failed(self, fut: RequestFuture, out: Dict[str, Any]) -> None:
+        """A cloud serving stage died under this request (the in-flight
+        decoder already released its pages). Retry — back through edge
+        encode and the transport, downshifted — or resolve failed."""
+        decision: TierDecision = fut.meta["decision"]
+        t_fail = max(self._now, fut.meta["rec"].end_s)
+        fut.emit("cloud_error", t_fail, error=out.get("error", ""))
+        if self._can_retry(fut, t_fail):
+            self._retry(fut, t_fail, decision.tier)
+            return
+        self.n_cloud_errors += 1
+        fut.set_result(self._base_response(fut, feasible=False,
+                                           failure="cloud_error"))
+
+    def _can_retry(self, fut: RequestFuture, t_fail: float) -> bool:
+        if self.retry is None or fut.attempts >= self.retry.max_attempts:
+            return False
+        deadline = fut.meta.get("deadline")
+        t_retry = t_fail + self.retry.backoff_s(fut.attempts)
+        return deadline is None or t_retry < deadline
+
+    def _retry(self, fut: RequestFuture, t_fail: float,
+               prev_tier: Any) -> None:
+        t = t_fail + self.retry.backoff_s(fut.attempts)
+        self.n_retries += 1
+        fut.emit("retry", t, attempt=fut.attempts + 1)
+        self._advance(t)
+        if fut.meta.get("fixed_packet") is not None:
+            self._attempt_packet(fut, t)
+        else:
+            self._attempt(fut, t, prev_tier=prev_tier)
+
+    # ---- deadlines (IntentRequirements.max_latency_s) ----
+
+    def _advance(self, t: float) -> None:
+        if t > self._now:
+            self._now = t
+
+    def _sweep_deadlines(self) -> None:
+        """Cancel every unresolved request whose deadline the mission
+        clock has passed: remove it from its decoder (slot + pages
+        released refcount-safely) and resolve its future with a
+        ``deadline`` failure, so ``result()`` never hangs on it."""
+        for fut in list(self._futures.values()):
+            if fut.done():
+                continue
+            deadline = fut.meta.get("deadline")
+            if deadline is None or self._now < deadline:
+                continue
+            self._cancel_request(fut, deadline)
+
+    def _cancel_request(self, fut: RequestFuture, deadline: float) -> None:
+        rid = fut.request.request_id
+        for dec in self._inflight.values():
+            if dec.cancel(rid):
+                break
+        self.n_deadline += 1
+        fut.emit("cancelled", deadline, reason="deadline")
+        fut.set_result(self._base_response(fut, feasible=False,
+                                           failure="deadline"))
+        if self.debug_invariants:
+            self.kv_pool.check_invariants()
 
     def submit_packet(self, packet: pk.Packet, query, intent: Intent,
                       time_s: float = 0.0,
@@ -344,24 +484,23 @@ class AveryEngine:
                               else self.session("_direct"))
         fut = self._register(Request(intent=intent, query=np.asarray(query),
                                      time_s=time_s), session)
-        request = fut.request
-        transport = session.transport or self.transport
-        rec = transport.send(packet, time_s)
         decision = TierDecision(
             stream=packet.kind,
             tier=self.lut.by_name(packet.tier_name) if packet.tier_name
             else None)
-        if not rec.delivered:
-            self._fail_blackout(fut, decision, rec)
-            return fut
-        self._enqueue_cloud(fut, packet, request.query, decision, rec)
+        fut.meta.update(session=session, fixed_packet=packet,
+                        decision=decision,
+                        deadline=self._deadline_for(session, intent, time_s))
+        self._advance(time_s)
+        self._attempt_packet(fut, time_s)
+        self._sweep_deadlines()
         return fut
 
     # ---- cloud dispatch: closed microbatches or the in-flight batch ----
 
     def _enqueue_cloud(self, fut: RequestFuture, packet: pk.Packet, query,
                        decision: TierDecision, rec: Any) -> None:
-        fut.meta = {"decision": decision, "rec": rec}
+        fut.meta.update(decision=decision, rec=rec)
         rid = fut.request.request_id
         if self.batching == "inflight":
             qlen = int(np.asarray(query).shape[-1])
@@ -395,20 +534,32 @@ class AveryEngine:
             intent=fut.request.intent,
             tier_name=decision.tier.name if decision.tier else None,
             feasible=kw.pop("feasible", decision.feasible),
+            failure=kw.pop("failure", None),
+            attempts=max(1, fut.attempts),
             t_submit=fut.request.time_s,
             t_delivered=rec.end_s, **kw)
 
     def _resolve_scheduled(self, res: Any) -> None:
         fut = self._futures[res.seq_id]
+        if fut.done():          # e.g. already cancelled past its deadline
+            return
         fut.emit("served", fut.meta["rec"].end_s, batch_size=res.batch_size)
-        fut.set_result(self._base_response(
+        resp = self._base_response(
             fut, answer_logits=res.answer_logits,
             mask_logits=res.mask_logits, tokens=res.tokens,
-            batch_size=res.batch_size))
+            batch_size=res.batch_size)
+        fut.set_result(resp)
         self.n_completed += 1
+        if not resp.feasible:
+            self.n_starved += 1        # served best-effort, F_I unmet
 
     def _resolve_inflight(self, out: Dict[str, Any]) -> None:
         fut = self._futures[out["seq_id"]]
+        if fut.done():          # e.g. already cancelled past its deadline
+            return
+        if out.get("failure") == "cloud_error":
+            self._cloud_failed(fut, out)
+            return
         fut.emit("served", fut.meta["rec"].end_s,
                  joined_step=out["joined_step"],
                  prefix_hit=out["prefix_hit"])
@@ -421,15 +572,22 @@ class AveryEngine:
         resp.speculative = out.get("speculative")
         fut.set_result(resp)
         self.n_completed += 1
+        if not resp.feasible:
+            self.n_starved += 1        # served best-effort, F_I unmet
 
     def pump(self) -> None:
         """Advance cloud serving without waiting: serve any full
-        microbatches, or one in-flight decode step per live decoder."""
+        microbatches, or one in-flight decode step per live decoder.
+        Sweeps deadlines first — an overdue request must not consume a
+        decode step it can no longer use."""
+        self._sweep_deadlines()
         if self._scheduler is not None:
             for res in self._scheduler.step_ready():
                 self._resolve_scheduled(res)
         for dec in self._inflight.values():
             dec.pump(1)
+        if self.debug_invariants:
+            self.kv_pool.check_invariants()
 
     def drain(self, release_operator: Optional[str] = None
               ) -> List[Response]:
@@ -443,6 +601,7 @@ class AveryEngine:
         point of the prefix store); pass ``release_operator`` to also
         free that operator's prefix pages once their requests are served
         (``OperatorSession.close`` does this for you)."""
+        self._sweep_deadlines()
         if self._scheduler is not None:
             for res in self._scheduler.drain():
                 self._resolve_scheduled(res)
@@ -453,6 +612,9 @@ class AveryEngine:
             steps, slots = self._retired_inflight
             self._retired_inflight = (steps + dec.n_steps,
                                       slots + dec.n_slot_steps)
+            cancels, faults = self._retired_faults
+            self._retired_faults = (cancels + dec.n_cancelled,
+                                    faults + dec.n_stage_faults)
             self._retired_spec.merge(dec.spec_stats)
             del self._inflight[qlen]
         out, remaining = [], []
@@ -466,6 +628,8 @@ class AveryEngine:
         self._order = remaining
         if release_operator is not None:
             self.release_prefixes(release_operator)
+        if self.debug_invariants:
+            self.kv_pool.check_invariants()
         return out
 
     def release_prefixes(self, operator_id: str) -> int:
@@ -484,40 +648,82 @@ class AveryEngine:
                      intent: Intent = Intent.INSIGHT) -> Response:
         rid, self._seq = self._seq, self._seq + 1
         self.n_submitted += 1
+        self._advance(t)
+        deadline = self._deadline_for(session, intent, t)
         transport, decision, bw = self._decide(session, intent, t)
         if decision.stream == "context":
             return self._context_frame(session, transport, rid, t)
-        if decision.tier is None:
-            self.n_infeasible += 1
-            return Response(request_id=rid, operator_id=session.operator_id,
-                            intent=intent, feasible=False, t_submit=t,
-                            t_delivered=t)
-        tier = decision.tier
-        if not decision.feasible:
-            self.n_infeasible += 1
-        flops = edge_insight_flops(self.deploy, tier.ratio)
-        compute_s = self.edge_device.latency_s(flops)
-        energy = (self.edge_device.compute_energy_j(flops)
-                  + self.edge_device.tx_energy_j(tier.payload_mb * 1e6))
-        packet = pk.Packet(kind="insight", tier_name=tier.name, seq_id=rid,
-                           created_at=t,
-                           payload_bytes=int(tier.payload_mb * 1e6))
-        rec = transport.send(packet, t + compute_s)
-        if not rec.delivered:
-            self.n_blackouts += 1
+        attempts, t_try, prev_tier = 0, t, None
+        compute_total = energy_total = 0.0
+        while True:
+            attempts += 1
+            if decision.tier is None:
+                self.n_infeasible += 1
+                return Response(request_id=rid,
+                                operator_id=session.operator_id,
+                                intent=intent, feasible=False,
+                                failure="infeasible", attempts=attempts,
+                                t_submit=t, t_delivered=t_try,
+                                edge_compute_s=compute_total,
+                                edge_energy_j=energy_total)
+            tier = decision.tier
+            flops = edge_insight_flops(self.deploy, tier.ratio)
+            compute_s = self.edge_device.latency_s(flops)
+            compute_total += compute_s
+            energy_total += (self.edge_device.compute_energy_j(flops)
+                             + self.edge_device.tx_energy_j(
+                                 tier.payload_mb * 1e6))
+            packet = pk.Packet(kind="insight", tier_name=tier.name,
+                               seq_id=rid, created_at=t_try,
+                               payload_bytes=int(tier.payload_mb * 1e6))
+            rec = transport.send(packet, t_try + compute_s)
+            self._advance(rec.end_s)
+            if rec.delivered:
+                break
+            # blackout: retry with backoff + downshift while the budget
+            # (attempt cap, deadline) holds — same loop as the real path
+            t_next = (rec.end_s + self.retry.backoff_s(attempts)
+                      if self.retry is not None else rec.end_s)
+            if (self.retry is None or attempts >= self.retry.max_attempts
+                    or (deadline is not None and t_next >= deadline)):
+                self.n_blackouts += 1
+                return Response(request_id=rid,
+                                operator_id=session.operator_id,
+                                intent=intent, tier_name=tier.name,
+                                feasible=False, failure="blackout",
+                                attempts=attempts, t_submit=t,
+                                t_delivered=rec.end_s,
+                                edge_compute_s=compute_total,
+                                edge_energy_j=energy_total)
+            self.n_retries += 1
+            prev_tier, t_try = tier, t_next
+            self._advance(t_try)
+            transport, decision, bw = self._decide(session, intent, t_try)
+            decision = self.retry.downshifted(decision, prev_tier, self.lut,
+                                              bw)
+            if (decision.tier is not None
+                    and decision.tier.payload_mb < prev_tier.payload_mb):
+                self.n_downshifts += 1
+        if deadline is not None and rec.end_s >= deadline:
+            self.n_deadline += 1
             return Response(request_id=rid, operator_id=session.operator_id,
                             intent=intent, tier_name=tier.name,
-                            feasible=False, t_submit=t,
-                            t_delivered=rec.end_s, edge_compute_s=compute_s,
-                            edge_energy_j=energy)
+                            feasible=False, failure="deadline",
+                            attempts=attempts, t_submit=t,
+                            t_delivered=rec.end_s,
+                            edge_compute_s=compute_total,
+                            edge_energy_j=energy_total)
         iou = (session.oracle.measure(tier)
                if session.oracle is not None else None)
         self.n_completed += 1
+        if not decision.feasible:
+            self.n_starved += 1        # served best-effort, F_I unmet
         return Response(request_id=rid, operator_id=session.operator_id,
                         intent=intent, tier_name=tier.name,
-                        feasible=decision.feasible, iou=iou, t_submit=t,
-                        t_delivered=rec.end_s, edge_compute_s=compute_s,
-                        edge_energy_j=energy)
+                        feasible=decision.feasible, attempts=attempts,
+                        iou=iou, t_submit=t, t_delivered=rec.end_s,
+                        edge_compute_s=compute_total,
+                        edge_energy_j=energy_total)
 
     def _context_frame(self, session: OperatorSession, transport: Transport,
                        rid: int, t: float) -> Response:
@@ -537,15 +743,17 @@ class AveryEngine:
                            created_at=t,
                            payload_bytes=int(payload_mb * 1e6))
         rec = transport.send(packet, t + compute_s)
+        self._advance(rec.end_s)
         if not rec.delivered:
             self.n_blackouts += 1
         else:
             self.n_completed += 1
         return Response(request_id=rid, operator_id=session.operator_id,
                         intent=Intent.CONTEXT, tier_name=None,
-                        feasible=rec.delivered, t_submit=t,
-                        t_delivered=rec.end_s, edge_compute_s=compute_s,
-                        edge_energy_j=energy)
+                        feasible=rec.delivered,
+                        failure=None if rec.delivered else "blackout",
+                        t_submit=t, t_delivered=rec.end_s,
+                        edge_compute_s=compute_s, edge_energy_j=energy)
 
     # ---- telemetry ----
 
@@ -556,6 +764,11 @@ class AveryEngine:
             "completed": self.n_completed,
             "infeasible": self.n_infeasible,
             "blackouts": self.n_blackouts,
+            "deadline_cancelled": self.n_deadline,
+            "cloud_errors": self.n_cloud_errors,
+            "starved": self.n_starved,
+            "retries": self.n_retries,
+            "downshifts": self.n_downshifts,
         }
         if self._scheduler is not None:
             out["n_microbatches"] = self._scheduler.n_microbatches
@@ -566,6 +779,11 @@ class AveryEngine:
             slots += sum(d.n_slot_steps for d in self._inflight.values())
             out["inflight_steps"] = steps
             out["mean_live_slots"] = slots / steps if steps else 0.0
+            cancels, faults = self._retired_faults
+            out["inflight_cancelled"] = cancels + sum(
+                d.n_cancelled for d in self._inflight.values())
+            out["stage_faults"] = faults + sum(
+                d.n_stage_faults for d in self._inflight.values())
             out.update(self.kv_pool.stats())
             if self.spec_config is not None:
                 out.update(self._merged_spec_stats().as_dict())

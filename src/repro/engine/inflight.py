@@ -58,6 +58,7 @@ from repro.core import packets as pk
 from repro.core.intent import Intent
 from repro.core.paging import (TRASH_PAGE, PagePool, pages_for,
                                prefix_digest, prefix_positions)
+from repro.engine.faults import CloudStageError
 from repro.engine.speculative import (DraftModel, SpecStats,
                                       SpeculativeConfig, greedy_accept)
 
@@ -134,6 +135,9 @@ class InflightDecoder:
         self.n_steps = 0
         self.n_slot_steps = 0             # sum of live slots across steps
         self.n_served = 0
+        self.n_cancelled = 0              # requests removed via cancel()
+        self.n_stage_faults = 0           # CloudStageErrors absorbed
+        self._admitting = False           # reentrancy guard (see admit)
 
     # ---- geometry (fixed once qlen is known) ----
 
@@ -193,69 +197,129 @@ class InflightDecoder:
         return packet.content["clip" if packet.kind == "insight" else "ctx"]
 
     def admit(self) -> int:
-        admitted = 0
+        """Admit queued requests into free slots. A ``CloudStageError``
+        from an admission stage fails only that request — its pages are
+        unwound refcount-safely by ``_admit_one`` and ``on_done`` fires
+        with a ``cloud_error`` failure — and admission continues.
+        Reentrant calls (an ``on_done`` callback resubmitting a retry
+        mid-admission) are no-ops; the outer loop picks up whatever they
+        queued."""
+        if self._admitting:
+            return 0
+        self._admitting = True
+        try:
+            admitted = 0
+            while self.pending and len(self.active) < self.slots:
+                item = self.pending.popleft()
+                try:
+                    self._admit_one(item)
+                    admitted += 1
+                except CloudStageError as e:
+                    self.n_stage_faults += 1
+                    item.on_done({
+                        "seq_id": item.seq_id, "intent": item.intent,
+                        "tier_name": item.packet.tier_name,
+                        "failure": "cloud_error", "error": str(e)})
+            return admitted
+        finally:
+            self._admitting = False
+
+    def _admit_one(self, item: _PendingRequest) -> None:
+        """Prefill one request into a free slot. Any stage failure
+        unwinds exactly the pages acquired so far and re-raises, so a
+        fault mid-admission never leaks a page or corrupts the prefix
+        store (a faulted miss leaves the store either without the entry
+        or with a fully written one)."""
         page = self.pool.page_size
-        while self.pending and len(self.active) < self.slots:
-            item = self.pending.popleft()
-            ctx = self._prefix_ctx(item.packet)
-            key = (item.operator_id, prefix_digest(ctx, item.query))
-            entry = self.pool.lookup_prefix(key)
-            hit = entry is not None
-            if not hit:
-                logits0, paged = self.executor.cloud_prefix(ctx, item.query)
-                self.pool.ensure(
-                    self.n_prefix_pages, like=paged,
-                    capacity_hint=1 + self.slots * (self.n_prefix_pages
-                                                    + self.n_private_pages))
-                ids = self.pool.alloc(self.n_prefix_pages)
+        ctx = self._prefix_ctx(item.packet)
+        key = (item.operator_id, prefix_digest(ctx, item.query))
+        entry = self.pool.lookup_prefix(key)
+        hit = entry is not None
+        if not hit:
+            logits0, paged = self.executor.cloud_prefix(ctx, item.query)
+            self.pool.ensure(
+                self.n_prefix_pages, like=paged,
+                capacity_hint=1 + self.slots * (self.n_prefix_pages
+                                                + self.n_private_pages))
+            ids = self.pool.alloc(self.n_prefix_pages)
+            try:
                 self.pool.kv = self.executor.pool_write(self.pool.kv, paged,
                                                         ids)
-                entry = self.pool.put_prefix(key, ids, self.prefix_len,
-                                             np.asarray(logits0))
-            else:
-                # a hit rides the stored pages: take this request's ref
-                # (a miss already owns its pages' alloc reference)
-                self.pool.retain(entry.page_ids)
-            speculative = (self.spec is not None
-                           and item.speculative is not False)
-            # speculating rows allocate decode pages lazily per verify
-            # chunk (grow ahead of acceptance, roll back on rejection);
-            # plain rows keep the whole answer's pages up front
-            private = ([] if speculative
-                       else self.pool.alloc(self.n_private_pages))
+            except Exception:
+                self.pool.release(ids)
+                raise
+            entry = self.pool.put_prefix(key, ids, self.prefix_len,
+                                         np.asarray(logits0))
+        else:
+            # a hit rides the stored pages: take this request's ref
+            # (a miss already owns its pages' alloc reference)
+            self.pool.retain(entry.page_ids)
+        # SAM feats before decode-page allocation: a feats fault unwinds
+        # by dropping this request's prefix ref alone (the store keeps
+        # its own ref, so a retry hits the cached prefix)
+        try:
             feats = (self.executor.cloud_sam_feats(item.packet)
                      if item.packet.kind == "insight" else None)
-            slot = min(set(range(self.slots)) - set(self.active))
-            if self.page_tables is None:
-                n_pages = self.n_prefix_pages + self.n_private_pages
-                self.page_tables = np.full((self.slots, n_pages),
-                                           TRASH_PAGE, np.int32)
-                self.positions = np.full((self.slots, self.width), -1,
-                                         np.int32)
-            self.page_tables[slot] = (list(entry.page_ids) + private
-                                      + [TRASH_PAGE]
-                                      * (self.n_private_pages
-                                         - len(private)))
-            self.positions[slot] = -1
-            self.positions[slot, :self.n_prefix_pages * page] = \
-                prefix_positions(self.prefix_len, self.n_prefix_pages, page)
-            if speculative:
-                if self.draft is None:
-                    self.draft = self._make_draft()
-                # same key as the target prefix store: repeat-prefix
-                # frames skip the draft prefill too (honouring the
-                # pool's sharing knob so baselines stay baselines)
-                self.draft.admit(slot, ctx, item.query,
-                                 key=key if self.pool.share_prefixes
-                                 else None)
-            self.active[slot] = _SlotState(
-                req=item, tokens=[int(np.argmax(entry.logits0[0]))],
-                logits0=entry.logits0, feats=feats, pos=self.prefix_len,
-                joined_step=self.step_idx, prefix_ids=entry.page_ids,
-                private_ids=private, prefix_hit=hit,
-                speculative=speculative)
-            admitted += 1
-        return admitted
+        except Exception:
+            self.pool.release(entry.page_ids)
+            raise
+        speculative = (self.spec is not None
+                       and item.speculative is not False)
+        # speculating rows allocate decode pages lazily per verify
+        # chunk (grow ahead of acceptance, roll back on rejection);
+        # plain rows keep the whole answer's pages up front
+        private = ([] if speculative
+                   else self.pool.alloc(self.n_private_pages))
+        slot = min(set(range(self.slots)) - set(self.active))
+        if self.page_tables is None:
+            n_pages = self.n_prefix_pages + self.n_private_pages
+            self.page_tables = np.full((self.slots, n_pages),
+                                       TRASH_PAGE, np.int32)
+            self.positions = np.full((self.slots, self.width), -1,
+                                     np.int32)
+        self.page_tables[slot] = (list(entry.page_ids) + private
+                                  + [TRASH_PAGE]
+                                  * (self.n_private_pages
+                                     - len(private)))
+        self.positions[slot] = -1
+        self.positions[slot, :self.n_prefix_pages * page] = \
+            prefix_positions(self.prefix_len, self.n_prefix_pages, page)
+        if speculative:
+            if self.draft is None:
+                self.draft = self._make_draft()
+            # same key as the target prefix store: repeat-prefix
+            # frames skip the draft prefill too (honouring the
+            # pool's sharing knob so baselines stay baselines)
+            self.draft.admit(slot, ctx, item.query,
+                             key=key if self.pool.share_prefixes
+                             else None)
+        self.active[slot] = _SlotState(
+            req=item, tokens=[int(np.argmax(entry.logits0[0]))],
+            logits0=entry.logits0, feats=feats, pos=self.prefix_len,
+            joined_step=self.step_idx, prefix_ids=entry.page_ids,
+            private_ids=private, prefix_hit=hit,
+            speculative=speculative)
+
+    # ---- cancellation (deadline enforcement) ----
+
+    def cancel(self, seq_id: int) -> bool:
+        """Remove one request from the decoder — pending or mid-decode —
+        releasing its slot and pages refcount-safely. The caller (the
+        engine's deadline sweep) resolves the request's future; the
+        decoder only reclaims resources. Returns False when ``seq_id``
+        is not here (already finished, or queued on another decoder)."""
+        for i, item in enumerate(self.pending):
+            if item.seq_id == seq_id:
+                del self.pending[i]
+                self.n_cancelled += 1
+                return True
+        for s, st in list(self.active.items()):
+            if st.req.seq_id == seq_id:
+                self._release_slot(s, st)
+                self.n_cancelled += 1
+                self.admit()          # the freed slot lets queued work in
+                return True
+        return False
 
     def _make_draft(self) -> DraftModel:
         cfg = self.spec
@@ -312,9 +376,12 @@ class InflightDecoder:
             toks[s, 0] = st.tokens[-1]
             pos[s] = st.pos
             write_slot[s] = base + len(st.tokens) - 1
-        logits, seg, self.pool.kv = self.executor.cloud_decode_rows(
-            self.pool.kv, self.page_tables, self.positions, toks, pos,
-            write_slot)
+        try:
+            logits, seg, self.pool.kv = self.executor.cloud_decode_rows(
+                self.pool.kv, self.page_tables, self.positions, toks, pos,
+                write_slot)
+        except CloudStageError as e:
+            return self._fail_step(e)
         logits, seg = np.asarray(logits), np.asarray(seg)
         live = len(self.active)
         self.n_steps += 1
@@ -369,9 +436,12 @@ class InflightDecoder:
                 clens[s] = 1 + j
             # cover the chunk (incl. the draft overhang) with decode pages
             self._grow_private(s, st, n - 1 + int(clens[s]))
-        logits, seg, self.pool.kv = self.executor.cloud_verify_rows(
-            self.pool.kv, self.page_tables, self.positions, toks, pos,
-            write_slot, clens)
+        try:
+            logits, seg, self.pool.kv = self.executor.cloud_verify_rows(
+                self.pool.kv, self.page_tables, self.positions, toks, pos,
+                write_slot, clens)
+        except CloudStageError as e:
+            return self._fail_step(e)
         logits, seg = np.asarray(logits), np.asarray(seg)
         live = len(self.active)
         self.n_steps += 1
@@ -427,14 +497,41 @@ class InflightDecoder:
         if fresh:
             self.page_tables[slot, lo:lo + len(fresh)] = fresh
 
+    def _fail_step(self, err: CloudStageError) -> int:
+        """A batch-wide decode/verify stage died: the step failed for
+        every live row (the paged pass is one device call). Release all
+        slots first — pages back, tables parked — then report each
+        request as a ``cloud_error`` (callbacks may resubmit retries
+        into the now-free slots), then admit queued work."""
+        self.n_stage_faults += 1
+        failed = list(self.active.items())
+        for s, st in failed:
+            self._release_slot(s, st)
+        for _, st in failed:
+            st.req.on_done({
+                "seq_id": st.req.seq_id, "intent": st.req.intent,
+                "tier_name": st.req.packet.tier_name,
+                "failure": "cloud_error", "error": str(err)})
+        self.admit()
+        return 0
+
     def _finish_slot(self, s: int, st: _SlotState) -> int:
         """Deliver a finished row: decode its mask from the stored SAM
         feats and the captured <SEG> state, hand the result back, and
         release its pages."""
         mask = None
         if st.feats is not None:
-            mask = np.asarray(self.executor.cloud_mask(
-                st.feats, st.seg[None]))
+            try:
+                mask = np.asarray(self.executor.cloud_mask(
+                    st.feats, st.seg[None]))
+            except CloudStageError as e:
+                self.n_stage_faults += 1
+                self._release_slot(s, st)
+                st.req.on_done({
+                    "seq_id": st.req.seq_id, "intent": st.req.intent,
+                    "tier_name": st.req.packet.tier_name,
+                    "failure": "cloud_error", "error": str(e)})
+                return 1
         st.req.on_done({
             "seq_id": st.req.seq_id,
             "intent": st.req.intent,

@@ -129,6 +129,60 @@ class BestEffortPolicy:
         return self.inner.allow_speculation(stats, cfg)
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Fault-tolerance policy: what the engine does when an attempt
+    fails (uplink blackout, packet drop, or a cloud-stage error).
+
+    A failed attempt retries after exponential backoff, and the retry
+    **re-runs Select at the retry time** — the paper's adaptation loop
+    applied to faults: the self-aware controller re-senses bandwidth and
+    picks a tier for the world as it is *after* the failure. With
+    ``downshift=True`` the retry is additionally forced onto a strictly
+    cheaper compression tier than the failed attempt's (or the lightest
+    tier, if the failure already happened at the bottom): a link that
+    just ate a packet gets a smaller one next, whatever the sensed
+    bandwidth claims (the sense lie / stale-estimate case).
+
+    ``max_attempts`` bounds total attempts (first try included); the
+    engine additionally stops retrying once the request's deadline
+    (``IntentRequirements.max_latency_s``) would pass before the retry
+    even starts.
+    """
+    max_attempts: int = 3
+    backoff_base_s: float = 0.5
+    backoff_factor: float = 2.0
+    downshift: bool = True
+
+    def backoff_s(self, attempt: int) -> float:
+        """Backoff before the retry following failed attempt number
+        ``attempt`` (1-based: the first retry waits ``backoff_base_s``)."""
+        return self.backoff_base_s * self.backoff_factor ** (attempt - 1)
+
+    def downshifted(self, decision: TierDecision, prev_tier,
+                    lut: SystemLUT, bandwidth_mbps: float) -> TierDecision:
+        """Post-Select downshift enforcement for a retry: keep the fresh
+        decision when it is already strictly cheaper than the failed
+        attempt's tier, otherwise force the heaviest tier still cheaper
+        than it (or the lightest tier overall — a retry is degraded
+        service by definition, so an infeasible re-Select degrades
+        rather than idles)."""
+        if (not self.downshift or prev_tier is None
+                or decision.stream != "insight"):
+            return decision
+        if (decision.tier is not None
+                and decision.tier.payload_mb < prev_tier.payload_mb):
+            return decision
+        cheaper = [t for t in lut.tiers
+                   if t.payload_mb < prev_tier.payload_mb]
+        tier = (max(cheaper, key=lambda t: t.payload_mb) if cheaper
+                else min(lut.tiers, key=lambda t: t.payload_mb))
+        return TierDecision(
+            stream="insight", tier=tier,
+            feasible=decision.feasible and decision.tier is not None,
+            throughput_pps=tier.max_pps(bandwidth_mbps))
+
+
 def policy_from_mode(mode: str, static_tier: Optional[str] = None,
                      fallback: bool = False) -> ControlPolicy:
     """Deprecation shim: map the pre-engine ``MissionSpec`` knobs

@@ -56,12 +56,20 @@ class ChannelTransport:
     def records(self) -> List[TransmitRecord]:
         return self.channel.log
 
+    @property
+    def records_dropped(self) -> int:
+        return self.channel.records_dropped
+
 
 @dataclass
 class LoopbackTransport:
     """In-process link: constant sensed bandwidth, instant delivery."""
     bandwidth_mbps: float = 1000.0
     records: List[TransmitRecord] = field(default_factory=list)
+    # same bound as Channel.max_log: benchmarks loop this transport for
+    # thousands of sends and must not accumulate records without bound
+    max_records: int = 4096
+    n_sent: int = 0
 
     def bandwidth(self, t: float) -> float:
         return self.bandwidth_mbps
@@ -69,4 +77,11 @@ class LoopbackTransport:
     def send(self, packet: Packet, t: float) -> TransmitRecord:
         rec = TransmitRecord(packet=packet, start_s=t, end_s=t)
         self.records.append(rec)
+        self.n_sent += 1
+        if len(self.records) > self.max_records:
+            del self.records[:len(self.records) - self.max_records]
         return rec
+
+    @property
+    def records_dropped(self) -> int:
+        return self.n_sent - len(self.records)

@@ -44,6 +44,11 @@ class Channel:
     # consecutive dead seconds tolerated before the transmission fails
     blackout_timeout_s: float = 30.0
     log: List[TransmitRecord] = field(default_factory=list)
+    # transmit-log cap: a long mission (or a chaos storm retrying every
+    # frame) must not grow the log without bound — keep the newest
+    # ``max_log`` records and count the rest as dropped
+    max_log: int = 4096
+    n_logged: int = 0
 
     def measure_bandwidth(self, t: float) -> float:
         """The controller's Sense stage reads the current estimate (the
@@ -92,4 +97,12 @@ class Channel:
                              delivered=delivered)
         self.busy_until = end
         self.log.append(rec)
+        self.n_logged += 1
+        if len(self.log) > self.max_log:
+            del self.log[:len(self.log) - self.max_log]
         return rec
+
+    @property
+    def records_dropped(self) -> int:
+        """Transmit records evicted by the ``max_log`` cap."""
+        return self.n_logged - len(self.log)

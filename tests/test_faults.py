@@ -1,0 +1,411 @@
+"""Fault-tolerant serving core: chaos injection (FaultInjector /
+FaultyExecutor), retry-with-downshift (RetryPolicy), per-request
+deadlines with in-flight cancellation, and the bounded transmit logs.
+
+The contract under test: every submitted request resolves exactly once
+with an accurate ``failure``/``attempts``; retries re-run Select and
+transmit a strictly cheaper tier; cancellations and stage faults release
+pages refcount-safely (``PagePool.check_invariants`` passes, zero
+leaks); and retries never corrupt the prefix store — a retried request
+serves token-exact results."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import paper_lut
+from repro.core.intent import DEFAULT_REQUIREMENTS, Intent
+from repro.engine import (AdaptivePolicy, AveryEngine, CloudStageError,
+                          FaultInjector, FaultyExecutor, LoopbackTransport,
+                          RetryPolicy, StaticTierPolicy)
+from repro.core.packets import Packet
+from repro.network.channel import Channel
+from repro.network.traces import BandwidthTrace
+
+from test_engine import LUT, StubExecutor, _edge_requests, _insight_images
+
+
+def _packet(seq_id=0, t=0.0, mb=1.0):
+    return Packet(kind="insight", tier_name="Balanced", seq_id=seq_id,
+                  created_at=t, payload_bytes=int(mb * 1e6))
+
+
+# ---- FaultInjector: deterministic transport chaos ----
+
+
+def test_fault_injector_blackout_window():
+    inj = FaultInjector(LoopbackTransport(12.0), blackouts=[(2.0, 6.0)])
+    ok = inj.send(_packet(0, 1.0), 1.0)
+    assert ok.delivered
+    dead = inj.send(_packet(1, 3.0), 3.0)
+    assert not dead.delivered
+    assert dead.end_s == 6.0          # the window's end: retry resume point
+    after = inj.send(_packet(2, 6.0), 6.0)   # half-open: end excluded
+    assert after.delivered
+    assert inj.n_blackout_failures == 1 and inj.n_sends == 3
+
+
+def test_fault_injector_drop_determinism_and_delegation():
+    inner1, inner2 = LoopbackTransport(12.0), LoopbackTransport(12.0)
+    a = FaultInjector(inner1, seed=7, drop_rate=0.5)
+    b = FaultInjector(inner2, seed=7, drop_rate=0.5)
+    pat_a = [a.send(_packet(i, float(i)), float(i)).delivered
+             for i in range(32)]
+    pat_b = [b.send(_packet(i, float(i)), float(i)).delivered
+             for i in range(32)]
+    assert pat_a == pat_b             # same seed, same fault stream
+    assert 0 < sum(pat_a) < 32        # both outcomes occur
+    assert a.n_drops == 32 - sum(pat_a)
+    # delivered packets reached the wrapped transport; drops did not
+    assert len(inner1.records) == sum(pat_a)
+    assert a.records is inner1.records
+
+
+def test_fault_injector_spikes_and_sense_lies():
+    inj = FaultInjector(LoopbackTransport(12.0),
+                        spikes=[(0.0, 1.0, 9.0)],
+                        sense_lies=[(5.0, 6.0, 99.0)])
+    spiked = inj.send(_packet(0, 0.5), 0.5)
+    assert spiked.delivered and spiked.end_s == 0.5 + 9.0
+    clean = inj.send(_packet(1, 2.0), 2.0)
+    assert clean.end_s == 2.0
+    assert inj.bandwidth(5.5) == 99.0        # the Sense stage is lied to
+    assert inj.bandwidth(7.0) == 12.0
+    assert inj.n_spiked == 1 and inj.n_sense_lies == 1
+    assert set(inj.stats()) == {"fault_sends", "fault_blackout_failures",
+                                "fault_drops", "fault_spiked",
+                                "fault_sense_lies"}
+
+
+# ---- FaultyExecutor ----
+
+
+def test_faulty_executor_schedule_and_validation():
+    with pytest.raises(ValueError, match="unknown faultable"):
+        FaultyExecutor(StubExecutor(), fail_at={"edge_context": [0]})
+    fx = FaultyExecutor(StubExecutor(),
+                        fail_at={"cloud_decode_rows": [1]})
+    assert fx.max_new_tokens == 2            # plain attrs delegate
+    fx._gate("cloud_decode_rows")            # call 0: clean
+    with pytest.raises(CloudStageError, match="cloud_decode_rows call 1"):
+        fx._gate("cloud_decode_rows")
+    assert fx.calls["cloud_decode_rows"] == 2 and fx.n_faults == 1
+
+
+# ---- RetryPolicy math ----
+
+
+def test_retry_policy_backoff_and_downshift():
+    pol = RetryPolicy(backoff_base_s=0.5, backoff_factor=2.0)
+    assert pol.backoff_s(1) == 0.5 and pol.backoff_s(3) == 2.0
+    lut = paper_lut()
+    ha, bal, ht = lut.tiers          # heaviest -> lightest
+    assert ha.payload_mb > bal.payload_mb > ht.payload_mb
+    adaptive = AdaptivePolicy()
+    reqs = DEFAULT_REQUIREMENTS[Intent.INSIGHT]
+    rich = adaptive.select(20.0, Intent.INSIGHT, reqs, lut)
+    assert rich.tier is ha
+    # re-Select still picks the tier that just failed -> force cheaper
+    down = pol.downshifted(rich, ha, lut, 20.0)
+    assert down.tier is bal
+    # failure at the bottom: stay on the lightest (degrade, don't idle)
+    floor = pol.downshifted(rich, ht, lut, 20.0)
+    assert floor.tier is ht
+    # a fresh decision already cheaper than the failed tier is kept
+    poor = adaptive.select(9.0, Intent.INSIGHT, reqs, lut)
+    assert pol.downshifted(poor, ha, lut, 9.0) is poor
+    # context stream / downshift disabled: untouched
+    ctx = adaptive.select(20.0, Intent.CONTEXT, reqs, lut)
+    assert pol.downshifted(ctx, ha, lut, 20.0) is ctx
+    off = RetryPolicy(downshift=False)
+    assert off.downshifted(rich, ha, lut, 20.0) is rich
+
+
+# ---- engine: blackout retry with tier downshift ----
+
+
+def test_blackout_retry_downshifts_and_succeeds():
+    """A blackout-windowed first attempt retries after backoff on a
+    strictly cheaper tier and serves; telemetry reports the journey."""
+    engine = AveryEngine(
+        lut=LUT, executor=StubExecutor(),
+        transport=FaultInjector(LoopbackTransport(20.0),
+                                blackouts=[(0.0, 5.0)]),
+        retry=RetryPolicy(max_attempts=3, backoff_base_s=3.0))
+    fut = engine.session("op").submit(
+        prompt="segment the person",
+        images=_insight_images(np.random.RandomState(0)),
+        query=np.zeros((1, 4), np.int32), time_s=0.0)
+    engine.drain()
+    res = fut.result()
+    assert res.failure is None and res.feasible
+    assert res.attempts == 2
+    assert res.tier_name == "Balanced"       # downshifted from High Accuracy
+    assert res.answer_logits is not None
+    kinds = [e.kind for e in res.events]
+    assert "blackout" in kinds and "retry" in kinds
+    stats = engine.stats
+    assert stats["retries"] == 1 and stats["downshifts"] == 1
+    assert stats["blackouts"] == 0           # not a terminal blackout
+    assert stats["completed"] == 1
+
+
+def test_blackout_exhausts_attempts_then_terminal():
+    # drop_rate=1.0: every attempt dies on the wire (a blackout window
+    # can't exhaust retries — its end_s is the retry resume point)
+    engine = AveryEngine(
+        lut=LUT, executor=StubExecutor(),
+        transport=FaultInjector(LoopbackTransport(20.0), drop_rate=1.0),
+        retry=RetryPolicy(max_attempts=2, backoff_base_s=0.1))
+    fut = engine.session("op").submit(
+        prompt="segment the person",
+        images=_insight_images(np.random.RandomState(0)),
+        query=np.zeros((1, 4), np.int32), time_s=0.0)
+    engine.drain()
+    res = fut.result()
+    assert res.failure == "blackout" and not res.feasible
+    assert res.attempts == 2 and res.answer_logits is None
+    stats = engine.stats
+    assert stats["blackouts"] == 1 and stats["retries"] == 1
+    assert stats["completed"] == 0
+
+
+def test_infeasible_failure_taxonomy_and_single_count():
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                         transport=LoopbackTransport(1.0))
+    fut = engine.session("op").submit(
+        prompt="segment the person",
+        images=_insight_images(np.random.RandomState(0)),
+        query=np.zeros((1, 4), np.int32))
+    engine.drain()
+    res = fut.result()
+    assert res.failure == "infeasible" and not res.feasible
+    stats = engine.stats
+    assert stats["infeasible"] == 1 and stats["blackouts"] == 0
+    assert stats["completed"] == 0
+
+
+def test_best_effort_starved_is_served_not_infeasible():
+    """Exactly-once classification: a served best-effort frame counts as
+    completed + starved, never as infeasible (the old double-count)."""
+    from repro.engine import BestEffortPolicy
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                         transport=LoopbackTransport(1.0),
+                         policy=BestEffortPolicy())
+    fut = engine.session("op").submit(
+        prompt="segment the person",
+        images=_insight_images(np.random.RandomState(0)),
+        query=np.zeros((1, 4), np.int32))
+    engine.drain()
+    res = fut.result()
+    assert res.failure is None and not res.feasible   # served, F_I unmet
+    stats = engine.stats
+    assert stats["completed"] == 1 and stats["starved"] == 1
+    assert stats["infeasible"] == 0 and stats["blackouts"] == 0
+
+
+def test_chaos_determinism_same_seed_same_outcomes():
+    """The chaos-determinism contract: an identical seeded schedule
+    yields an identical per-request (failure, attempts) sequence."""
+    def run(seed):
+        engine = AveryEngine(
+            lut=LUT, executor=StubExecutor(),
+            transport=FaultInjector(LoopbackTransport(20.0), seed=seed,
+                                    drop_rate=0.6),
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.1))
+        sess = engine.session("op")
+        rng = np.random.RandomState(0)
+        futs = [sess.submit(prompt="segment the person",
+                            images=_insight_images(rng),
+                            query=np.zeros((1, 4), np.int32),
+                            time_s=float(i)) for i in range(8)]
+        engine.drain()
+        return ([(f.result().failure, f.result().attempts) for f in futs],
+                engine.stats["retries"])
+
+    first, retries = run(seed=3)
+    again, _ = run(seed=3)
+    assert first == again
+    assert retries >= 1                      # the schedule really bites
+    assert any(f is None for f, _ in first)  # and some requests survive
+
+
+def test_submit_frame_retries_with_downshift():
+    """The profiled mission path rides the same retry loop: blackout,
+    backoff past the window, re-Select downshifted, serve."""
+    engine = AveryEngine(
+        lut=LUT,
+        transport=FaultInjector(LoopbackTransport(20.0),
+                                blackouts=[(0.0, 30.0)]),
+        retry=RetryPolicy(max_attempts=3, backoff_base_s=1.0))
+    res = engine.session("op").submit_frame(0.0)
+    assert res.failure is None and res.feasible
+    assert res.attempts == 2
+    assert res.tier_name == "Balanced"
+    assert engine.stats["downshifts"] == 1
+    # energy telemetry accumulates across attempts
+    one = AveryEngine(lut=LUT).session("op").submit_frame(0.0)
+    assert res.edge_energy_j > one.edge_energy_j
+
+
+# ---- transmit log caps ----
+
+
+def test_loopback_transmit_log_bounded():
+    tr = LoopbackTransport(12.0, max_records=5)
+    for i in range(12):
+        tr.send(_packet(i, float(i)), float(i))
+    assert len(tr.records) == 5 and tr.n_sent == 12
+    assert tr.records_dropped == 7
+    assert tr.records[0].packet.seq_id == 7      # newest records kept
+
+
+def test_channel_transmit_log_bounded():
+    ch = Channel(BandwidthTrace(np.full(600, 12.0), name="flat"),
+                 max_log=3)
+    for i in range(5):
+        ch.transmit(_packet(i, mb=0.1), float(i))
+    assert len(ch.log) == 3 and ch.n_logged == 5
+    assert ch.records_dropped == 2
+    assert ch.log[0].packet.seq_id == 2
+
+
+# ---- real executor: cancellation, deadlines, cloud-stage faults ----
+
+
+@pytest.fixture(scope="module")
+def executor():
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import DualStreamExecutor, profile as prof
+    params, bns, _ = prof.random_init_system(PCFG, lut=LUT)
+    return DualStreamExecutor(pcfg=PCFG, params=params, bottlenecks=bns,
+                              lut=LUT, max_new_tokens=3, flash_decode=False)
+
+
+def test_decoder_cancel_pending_and_active(executor):
+    """InflightDecoder.cancel removes a request from either queue state,
+    releasing its slot and pages refcount-safely."""
+    from repro.engine.inflight import InflightDecoder
+    reqs = _edge_requests(executor, 2, seed=7)
+    dec = InflightDecoder(executor, slots=1)
+    done = []
+    for sid, (pkt, q, it) in enumerate(reqs):
+        dec.submit(sid, it, pkt, q, done.append)
+    assert len(dec.active) == 1 and len(dec.pending) == 1
+    assert dec.cancel(1)                     # still pending: dequeued
+    assert not dec.pending
+    assert dec.cancel(0)                     # mid-decode: slot released
+    assert not dec.active and not done
+    assert not dec.cancel(99)                # unknown seq: a no-op
+    assert dec.n_cancelled == 2
+    dec.pool.check_invariants()
+    # only the store's prefix pins survive; private pages all returned
+    dec.pool.release_operator("")
+    assert dec.pool.pages_in_use == 0
+
+
+def test_deadline_cancels_inflight_request(executor):
+    """A latency spike blows the request past max_latency_s: the engine
+    cancels it mid-decode — pages released, invariants audited — and the
+    future resolves with a ``deadline`` failure instead of hanging."""
+    reqs = _edge_requests(executor, 2, seed=17)
+    engine = AveryEngine(
+        lut=LUT, executor=executor, batching="inflight", max_batch=2,
+        transport=FaultInjector(LoopbackTransport(1000.0),
+                                spikes=[(0.0, 1.0, 10.0)]),
+        debug_invariants=True)
+    sess = engine.session("op")
+    sess.requirements[Intent.INSIGHT] = dataclasses.replace(
+        sess.requirements[Intent.INSIGHT], max_latency_s=5.0)
+    (p1, q1, i1), (p2, q2, i2) = reqs
+    late = engine.submit_packet(p1, q1, Intent.INSIGHT, time_s=0.0,
+                                session=sess)
+    # the spiked delivery moved the mission clock to t=10; the second
+    # request arrives after that, with deadline headroom
+    ok = engine.submit_packet(p2, q2, i2, time_s=12.0, session=sess)
+    engine.drain()
+    res = late.result()
+    assert res.failure == "deadline" and not res.feasible
+    assert res.tokens is None
+    assert any(e.kind == "cancelled" for e in res.events)
+    assert ok.result().failure is None       # the spike missed this one
+    stats = engine.stats
+    assert stats["deadline_cancelled"] == 1 and stats["inflight_cancelled"] == 1
+    assert stats["completed"] == 1
+    engine.kv_pool.check_invariants()
+    sess.close()
+    engine.release_prefixes("_direct")
+    assert engine.stats["kv_pages_in_use"] == 0   # zero leaked pages
+
+
+@pytest.mark.parametrize("stage", ["cloud_prefix", "pool_write",
+                                   "cloud_sam_feats", "cloud_decode_rows"])
+def test_cloud_stage_fault_retries_token_exact(executor, stage):
+    """A cloud-stage fault mid-serve retries through the full path and
+    the retry is token-exact vs the one-shot generate reference —
+    faults never corrupt the KV pool or the prefix store."""
+    reqs = _edge_requests(executor, 1, seed=27)
+    pkt, q, it = reqs[0]
+    faulty = FaultyExecutor(executor, fail_at={stage: [0]})
+    engine = AveryEngine(lut=LUT, executor=faulty, batching="inflight",
+                         max_batch=2, debug_invariants=True,
+                         retry=RetryPolicy(max_attempts=3,
+                                           backoff_base_s=0.1))
+    fut = engine.submit_packet(pkt, q, it, time_s=0.0)
+    engine.drain()
+    res = fut.result()
+    assert res.failure is None and res.attempts == 2
+    assert any(e.kind == "cloud_error" for e in res.events)
+    ref = executor.cloud_generate_batch([pkt], [q])[0]
+    assert np.array_equal(res.tokens, ref[-1])
+    np.testing.assert_allclose(res.mask_logits, ref[0], atol=3e-4)
+    stats = engine.stats
+    assert stats["retries"] == 1 and stats["cloud_errors"] == 0
+    assert stats["stage_faults"] == 1
+    engine.kv_pool.check_invariants()
+    engine.release_prefixes("_direct")
+    assert engine.stats["kv_pages_in_use"] == 0
+
+
+def test_cloud_fault_terminal_after_exhaustion(executor):
+    reqs = _edge_requests(executor, 1, seed=37)
+    pkt, q, it = reqs[0]
+    faulty = FaultyExecutor(executor,
+                            fail_at={"cloud_decode_rows": range(32)})
+    engine = AveryEngine(lut=LUT, executor=faulty, batching="inflight",
+                         max_batch=2, debug_invariants=True,
+                         retry=RetryPolicy(max_attempts=2,
+                                           backoff_base_s=0.1))
+    fut = engine.submit_packet(pkt, q, it, time_s=0.0)
+    engine.drain()
+    res = fut.result()
+    assert res.failure == "cloud_error" and res.attempts == 2
+    assert res.tokens is None
+    stats = engine.stats
+    assert stats["cloud_errors"] == 1 and stats["retries"] == 1
+    engine.kv_pool.check_invariants()
+    engine.release_prefixes("_direct")
+    assert engine.stats["kv_pages_in_use"] == 0
+
+
+def test_batch_wide_fault_fails_all_then_retries(executor):
+    """A decode-stage fault kills the step for every co-active slot;
+    with a RetryPolicy both requests re-admit (prefix hits) and serve
+    token-exact."""
+    reqs = _edge_requests(executor, 2, seed=47)
+    faulty = FaultyExecutor(executor, fail_at={"cloud_decode_rows": [1]})
+    engine = AveryEngine(lut=LUT, executor=faulty, batching="inflight",
+                         max_batch=2, debug_invariants=True,
+                         retry=RetryPolicy(max_attempts=3,
+                                           backoff_base_s=0.1))
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    for fut, (pkt, q, it) in zip(futs, reqs):
+        res = fut.result()
+        assert res.failure is None and res.attempts == 2
+        ref = executor.cloud_generate_batch([pkt], [q])[0]
+        assert np.array_equal(res.tokens, ref[-1])
+    assert engine.stats["stage_faults"] == 1     # one fault, two victims
+    assert engine.stats["retries"] == 2
+    engine.kv_pool.check_invariants()

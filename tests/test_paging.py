@@ -27,12 +27,41 @@ def _pool(**kw) -> PagePool:
 
 
 def _invariant(pool: PagePool) -> None:
-    """Conservation: every page is exactly one of {trash, live, free}."""
-    assert pool.pages_in_use + len(pool._free) == pool.num_pages - 1
+    """Conservation: every page is exactly one of {trash, live, free} —
+    the pool's own audit plus the historical spot checks."""
+    summary = pool.check_invariants()
+    assert summary["pages_in_use"] + summary["pages_free"] \
+        == summary["pages_total"] - 1
     assert sorted(set(pool._free)) == sorted(pool._free)   # no dup frees
     assert TRASH_PAGE not in pool._free
     for i in pool._free:
         assert pool._refcount[i] == 0
+
+
+def test_check_invariants_catches_corruption():
+    """The audit actually fires: a duplicated free-list id, a freed page
+    still referenced by a prefix entry, and a negative refcount each
+    raise; an unseeded (storage-less) pool audits clean."""
+    PagePool(page_size=4).check_invariants()       # empty pool: no-op
+    pool = _pool()
+    ids = pool.alloc(2)
+    pool.release(ids)
+    pool._free.append(ids[0])                      # duplicate free
+    with pytest.raises(RuntimeError, match="duplicate"):
+        pool.check_invariants()
+    pool = _pool()
+    ids = pool.alloc(1)
+    pool.put_prefix(("op", "x"), ids, 4, np.zeros((1, 4)))
+    pool.release(ids)
+    pool._refcount[ids[0]] = 0                     # store pin lost
+    with pytest.raises(RuntimeError):
+        pool.check_invariants()
+    pool = _pool()
+    ids = pool.alloc(1)
+    pool.release(ids)
+    pool._refcount[ids[0]] = -1                    # double release
+    with pytest.raises(RuntimeError, match="negative"):
+        pool.check_invariants()
 
 
 # ---- LRU eviction (max_prefixes cap) ----
@@ -151,11 +180,12 @@ def test_pool_ops_never_leak_or_double_free(seed, n_ops):
     pool = _pool(page_size=4,
                  max_prefixes=rng.choice([None, 1, 2, 3]))
     held = []                 # [(ids, kind)] request-held references
+    slots = []                # [(prefix_ids, run)] admitted "slots"
     n_prefix = 0
     for _ in range(n_ops):
         op = rng.choice(["alloc", "release", "retain", "put_prefix",
                          "release_operator", "lookup", "grow",
-                         "rollback"])
+                         "rollback", "admit", "cancel"])
         if op == "alloc":
             held.append((pool.alloc(rng.randint(1, 3)), "plain"))
         elif op == "release" and held:
@@ -192,8 +222,30 @@ def test_pool_ops_never_leak_or_double_free(seed, n_ops):
                 pool.rollback_to(run, keep)
                 if not run:
                     held.remove((run, "run"))
+        elif op == "admit":
+            # the InflightDecoder admission shape: a prefix reference
+            # (store hit retains, miss allocs + puts) plus a private run
+            key = (f"op{rng.randint(0, 2)}", f"p{rng.randint(0, 3)}")
+            entry = pool.lookup_prefix(key)
+            if entry is None:
+                ids = pool.alloc(2)
+                entry = pool.put_prefix(key, ids, 2 * pool.page_size,
+                                        np.zeros((1, 2)))
+            else:
+                pool.retain(entry.page_ids)
+            run = pool.alloc(1)
+            slots.append((list(entry.page_ids), run))
+        elif op == "cancel" and slots:
+            # the _release_slot / cancel path: prefix ref and private
+            # run return together, mid-decode
+            ids, run = slots.pop(rng.randrange(len(slots)))
+            pool.release(ids)
+            pool.release(run)
         _invariant(pool)
     # teardown: every request finishes, every operator leaves
+    for ids, run in slots:
+        pool.release(ids)
+        pool.release(run)
     for ids, _ in held:
         pool.release(ids)
     for op_id in ("op0", "op1", "op2"):
