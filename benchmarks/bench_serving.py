@@ -52,6 +52,16 @@ CHAOS_FRAMES = 8
 CHAOS_SLO_S = 8.0
 CHAOS_BLACKOUT = (2.0, 4.0)       # swallows the t=2,3 submissions
 CHAOS_SPIKE_EXTRA_S = 60.0        # straggler arrives hopelessly late
+# fleet storm workload (multi-tenant scheduling): many operators across
+# both QoS classes, heavy-tailed arrivals, operator churn, a mid-storm
+# blackout, and one spamming operator — the same seeded trace served
+# under FifoScheduler vs QoSScheduler
+STORM_SEED = 0
+STORM_DURATION_S = 40.0
+STORM_SLOTS = 4                   # decode slots (scarce on purpose)
+STORM_TOKENS = 6                  # answer length (queueing pressure)
+STORM_PUMP_DT = 0.5               # mission seconds per decode pump
+STORM_SPAM_RATE = (0.8, 2.0)      # spammer's token bucket (rate, burst)
 
 
 def _requests(executor, n):
@@ -448,6 +458,207 @@ def chaos_rows(executor, n_uavs=CHAOS_UAVS, frames=CHAOS_FRAMES,
         f"uavs={n_uavs};frames_per_uav={frames}")]
 
 
+def _storm_ops(duration_s):
+    """The storm's operator roster: (op, kind, priority, t_start, t_end,
+    mean-gap scale). Two recon streams are the latency class, the
+    command post is a priority-1 Insight operator, three bulk mappers
+    are the throughput class — ``bulk-0`` spams at ~3x the others and
+    ``bulk-2`` churns out at 40% (its session closes); ``late-0`` joins
+    at 60% (operator churn in both directions)."""
+    return [
+        ("recon-0", "context", 0, 0.0, duration_s, 0.55),
+        ("recon-1", "context", 0, 0.0, duration_s, 0.55),
+        ("cmdpost", "insight", 1, 0.0, duration_s, 0.6),
+        ("bulk-0", "insight", 0, 0.0, duration_s, 0.3),
+        ("bulk-1", "insight", 0, 0.0, duration_s, 0.55),
+        ("bulk-2", "insight", 0, 0.0, 0.55 * duration_s, 0.45),
+        ("late-0", "insight", 0, 0.45 * duration_s, duration_s, 0.45),
+    ]
+
+
+def _storm_trace(executor, duration_s, seed):
+    """Seeded storm trace: one packet per operator (repeat-prefix, like
+    a standing query over a hovering UAV's feed) plus a heavy-tailed
+    (Pareto inter-arrival) submission schedule, merged in arrival
+    order. Returns (ops, packets, events)."""
+    ops = _storm_ops(duration_s)
+    rng = np.random.RandomState(seed)
+    tier = executor.lut.tiers[0]
+    packets = {}
+    events = []
+    for i, (op, kind, _prio, t0, t1, scale) in enumerate(ops):
+        b = floodseg.make_batch(
+            rng, 1, "segment" if kind == "insight" else "any",
+            augment=False)
+        img = jnp.asarray(b["images"])
+        if kind == "insight":
+            pkt = executor.edge_insight(img, tier, i, 0.0)
+        else:
+            pkt, _ = executor.edge_context(img, i, 0.0)
+        packets[op] = (pkt, b["query"])
+        t = t0
+        while True:
+            t += scale * (0.4 + rng.pareto(1.8))
+            if t >= t1:
+                break
+            events.append((round(t, 3), op))
+    events.sort()
+    return ops, packets, events
+
+
+def fleet_storm_rows(executor, duration_s=STORM_DURATION_S, emit_row=None,
+                     seed=STORM_SEED):
+    """Fleet storm mode: the multi-tenant scheduling contract, measured.
+
+    The same seeded trace — 7 operators, both QoS classes, Pareto
+    bursts, churn, a spammer, and a blackout window mid-storm — is
+    served twice through the in-flight engine: once under the default
+    ``FifoScheduler`` and once under a ``QoSScheduler`` (weighted-fair
+    classes, strict priority, per-operator rate limit on the spammer,
+    page-rollback preemption). Mission time advances with the trace and
+    decode pumps are metered per mission second, so per-class latency
+    (``t_finished - t_submit``) measures queueing on the mission clock,
+    not wall-clock.
+
+    The run *asserts* the scheduling contract on the QoS pass — Context
+    p99 strictly better than FIFO on the same trace, Jain's index over
+    per-operator served counts >= 0.9, at least one preemption with a
+    preempted-then-resumed request finishing token-exact vs the
+    uninterrupted ``cloud_generate_batch`` path, at least one rate-limit
+    rejection, and zero leaked KV pages — so CI cannot record a green
+    row for a scheduler that starves, leaks, or corrupts decodes."""
+    import dataclasses
+    import time as _time
+
+    from repro.core.intent import DEFAULT_REQUIREMENTS
+    from repro.engine import (FaultInjector, FifoScheduler,
+                              LoopbackTransport, QoSScheduler, RetryPolicy,
+                              jain_index, qos_class)
+
+    emit_row = emit_row or emit
+    ops, packets, events = _storm_trace(executor, duration_s, seed)
+    blackout = (0.7 * duration_s, 0.7 * duration_s + 1.0)
+    close_t = 0.55 * duration_s          # bulk-2's churn-out time
+    # no per-request SLO: the storm measures queueing latency, and a
+    # deadline sweep would censor exactly the tail the rows report
+    reqs = {i: dataclasses.replace(r, max_latency_s=None)
+            for i, r in DEFAULT_REQUIREMENTS.items()}
+    kinds = {op: kind for op, kind, *_ in ops}
+    prios = {op: prio for op, _, prio, *_ in ops}
+
+    def serve(make_sched):
+        faults = FaultInjector(LoopbackTransport(), seed=seed,
+                               blackouts=[blackout])
+        engine = make_engine(
+            executor, transport=faults, batching="inflight",
+            max_batch=STORM_SLOTS, scheduler=make_sched(),
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.25),
+            debug_invariants=True)
+        sessions, futs, closed = {}, [], False
+        t_pump = 0.0
+        for t, op in events:
+            while t_pump + STORM_PUMP_DT <= t:   # metered decode service
+                t_pump += STORM_PUMP_DT
+                engine.pump()
+            if not closed and t >= close_t and "bulk-2" in sessions:
+                sessions["bulk-2"].close()       # churn: operator leaves
+                closed = True
+            sess = sessions.get(op)
+            if sess is None:                     # churn: operator joins
+                sess = sessions[op] = engine.session(
+                    op, requirements=dict(reqs), priority=prios[op])
+            pkt, q = packets[op]
+            futs.append(engine.submit_packet(
+                pkt, q,
+                Intent.CONTEXT if kinds[op] == "context"
+                else Intent.INSIGHT, time_s=t, session=sess))
+        engine.drain()
+        resps = [f.result() for f in futs]       # every future resolves
+        for s in sessions.values():
+            s.close()
+        return engine, resps
+
+    out = {}
+    for name, make_sched in (
+            ("fifo", FifoScheduler),
+            ("qos", lambda: QoSScheduler(
+                rate_overrides={"bulk-0": STORM_SPAM_RATE},
+                # patience below the typical slot turnover (~0.2 mission
+                # seconds at this load), so urgent latency-class arrivals
+                # preempt instead of waiting out a full bulk decode
+                max_queue=64, latency_patience_s=0.15, max_resumes=2))):
+        t0 = _time.perf_counter()
+        engine, resps = serve(make_sched)
+        out[name] = (_time.perf_counter() - t0, engine, resps)
+
+    def lat_percentiles(resps, cls):
+        xs = [r.t_finished - r.t_submit for r in resps
+              if r.failure is None and qos_class(r.intent) == cls]
+        if not xs:
+            return 0.0, 0.0
+        return (float(np.percentile(xs, 50)), float(np.percentile(xs, 99)))
+
+    # the scheduling contract, asserted on the QoS pass
+    _, eng_q, resps_q = out["qos"]
+    _, eng_f, resps_f = out["fifo"]
+    st_q, st_f = eng_q.stats, eng_f.stats
+    ctx_fifo = lat_percentiles(resps_f, "latency")
+    ctx_qos = lat_percentiles(resps_q, "latency")
+    if not ctx_qos[1] < ctx_fifo[1]:
+        raise AssertionError(
+            f"QoS did not beat FIFO on Context p99 "
+            f"({ctx_qos[1]:.2f}s vs {ctx_fifo[1]:.2f}s)")
+    jain = jain_index(eng_q.served_by_operator.values())
+    if jain < 0.9:
+        raise AssertionError(
+            f"per-operator service too uneven (jain={jain:.3f}, "
+            f"served={eng_q.served_by_operator})")
+    if st_q["sched_preemptions"] < 1:
+        raise AssertionError("storm produced no preemption")
+    if st_q["sched_rejected_rate_limit"] < 1:
+        raise AssertionError("spammer was never rate-limited")
+    resumed = [r for r in resps_q
+               if r.failure is None and r.preemptions > 0
+               and r.intent is Intent.INSIGHT]
+    if not resumed:
+        raise AssertionError("no preempted-then-resumed request served")
+    for r in resumed:                        # token-exactness guarantee
+        pkt, q = packets[r.operator_id]
+        ref = executor.cloud_generate_batch([pkt], [q])[0][-1]
+        if not np.array_equal(r.tokens, ref):
+            raise AssertionError(
+                f"resumed request {r.request_id} diverged from the "
+                f"uninterrupted decode (op={r.operator_id})")
+    for eng in (eng_q, eng_f):
+        if eng.kv_pool.pages_in_use != 0:
+            raise AssertionError(
+                f"storm leaked {eng.kv_pool.pages_in_use} KV pages")
+        eng.kv_pool.check_invariants()
+
+    rows = []
+    for name, st, ctx, resps, eng in (
+            ("fifo", st_f, ctx_fifo, resps_f, eng_f),
+            ("qos", st_q, ctx_qos, resps_q, eng_q)):
+        thr = lat_percentiles(resps, "throughput")
+        n_served = sum(1 for r in resps if r.failure is None)
+        rows.append(emit_row(
+            f"serving/fleet_storm_{name}", out[name][0] * 1e6,
+            f"served={n_served};offered={len(resps)};"
+            f"ctx_p50_s={ctx[0]:.2f};ctx_p99_s={ctx[1]:.2f};"
+            f"thr_p50_s={thr[0]:.2f};thr_p99_s={thr[1]:.2f};"
+            f"jain={jain_index(eng.served_by_operator.values()):.3f};"
+            f"preemptions={int(st['sched_preemptions'])};"
+            f"resumed_served={int(st['sched_resumed_served'])};"
+            f"tokens_replayed={int(st['sched_tokens_replayed'])};"
+            f"rejected_rate_limit={int(st['sched_rejected_rate_limit'])};"
+            f"rejected_queue_full={int(st['sched_rejected_queue_full'])};"
+            f"wait_latency_p95_s={st['sched_wait_latency_p95_s']:.2f};"
+            f"wait_throughput_p95_s="
+            f"{st['sched_wait_throughput_p95_s']:.2f};"
+            f"page_leaks=0;ops=7;duration_s={duration_s};seed={seed}"))
+    return rows
+
+
 def run(log=print):
     rows = []
     params, bns, lut = init_serving_system(PCFG)
@@ -514,6 +725,13 @@ def run(log=print):
 
     # chaos storm: the fault-tolerance contract under a seeded schedule
     rows += chaos_rows(executor)
+
+    # fleet storm: the multi-tenant scheduling contract (FIFO vs QoS on
+    # the same seeded heavy-tailed trace); its own executor — longer
+    # answers keep the decode slots contended
+    rows += fleet_storm_rows(make_executor(
+        PCFG, params, bns, lut, max_new_tokens=STORM_TOKENS,
+        flash_decode=False))
 
     steps = 32
     for b in BATCHES:
@@ -607,6 +825,27 @@ def run_chaos_smoke():
     return rows
 
 
+def run_fleet_storm():
+    """Fleet storm mode on its own: the full-size multi-tenant trace
+    (7 operators, 40 mission seconds) under FIFO vs QoS scheduling,
+    asserting the scheduling contract (Context p99 win, Jain >= 0.9,
+    token-exact preemption resume, rate-limit shed, zero page leaks)."""
+    rows = fleet_storm_rows(_smoke_executor(STORM_TOKENS))
+    write_bench_json(rows)
+    return rows
+
+
+def run_fleet_storm_smoke():
+    """CI smoke: the fleet storm at a reduced size (16 mission seconds,
+    same 7-operator roster) — weighted-fair admission, strict priority,
+    rate limiting, and page-rollback preemption end to end in minutes,
+    with the same hard asserts as the full run."""
+    rows = fleet_storm_rows(_smoke_executor(STORM_TOKENS),
+                            duration_s=16.0, emit_row=_smoke_emit)
+    write_bench_json(rows)
+    return rows
+
+
 def run_spec_smoke():
     """CI smoke: speculative decoding end to end at a reduced size
     (2 UAVs x 3 frames) — draft model, verify kernel path, greedy
@@ -633,5 +872,9 @@ if __name__ == "__main__":
         run_chaos_smoke()
     elif "--chaos" in sys.argv:
         run_chaos()
+    elif "--fleet-storm-smoke" in sys.argv:
+        run_fleet_storm_smoke()
+    elif "--fleet-storm" in sys.argv:
+        run_fleet_storm()
     else:
         run()

@@ -28,3 +28,9 @@ echo "[ci_fast] chaos storm smoke (retry/downshift/deadline, zero leaks)"
 # zero leaked KV pages — a broken engine fails this step, not just a row
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving --chaos-smoke
+echo "[ci_fast] fleet storm smoke (QoS scheduling vs FIFO)"
+# fleet_storm_rows asserts the multi-tenant scheduling contract: Context
+# p99 strictly beats FIFO on the same trace, Jain >= 0.9, >=1 preemption
+# with token-exact resume, >=1 rate-limit rejection, zero leaked pages
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --fleet-storm-smoke

@@ -4,6 +4,9 @@
   transport   — Transport protocol; ChannelTransport, LoopbackTransport
   policy      — ControlPolicy protocol; Adaptive / StaticTier / BestEffort;
                 RetryPolicy (backoff + tier downshift on failure)
+  scheduler   — admission policy: FifoScheduler (default), QoSScheduler
+                (intent QoS classes, weighted-fair + strict-priority,
+                rate limits, page-rollback preemption)
   faults      — chaos injection: FaultInjector (transport), FaultyExecutor
   inflight    — token-level continuous batching (join a running decode)
   speculative — Context-stream DraftModel + paged multi-token verify
@@ -21,6 +24,9 @@ from repro.engine.policy import (AdaptivePolicy, BestEffortPolicy,
                                  ControlPolicy, RetryPolicy,
                                  StaticTierPolicy, TierDecision,
                                  policy_from_mode)
+from repro.engine.scheduler import (QOS_LATENCY, QOS_THROUGHPUT,
+                                    FifoScheduler, QoSScheduler,
+                                    jain_index, qos_class)
 from repro.engine.speculative import (DraftModel, SpecStats,
                                       SpeculativeConfig)
 from repro.engine.transport import (ChannelTransport, LoopbackTransport,
@@ -31,6 +37,8 @@ __all__ = [
     "AveryEngine", "OperatorSession", "InflightDecoder",
     "ControlPolicy", "TierDecision", "AdaptivePolicy", "StaticTierPolicy",
     "BestEffortPolicy", "RetryPolicy", "policy_from_mode",
+    "FifoScheduler", "QoSScheduler", "jain_index", "qos_class",
+    "QOS_LATENCY", "QOS_THROUGHPUT",
     "CloudStageError", "FaultInjector", "FaultyExecutor",
     "DraftModel", "SpecStats", "SpeculativeConfig",
     "Transport", "ChannelTransport", "LoopbackTransport",

@@ -29,6 +29,10 @@ class Request:
     images: Optional[Any] = None       # edge frame(s) (real serving path)
     query: Optional[np.ndarray] = None  # (B, L) tokenised model query
     time_s: float = 0.0                # mission-clock submission time
+    # scheduling: strict-priority override (0 = normal; higher admits
+    # first and may preempt lower-ranked active decodes — see
+    # engine/scheduler.py)
+    priority: int = 0
     # filled in by the engine
     request_id: int = -1
     operator_id: str = ""
@@ -38,7 +42,7 @@ class Request:
 class StreamEvent:
     """Lifecycle marker: queued, tier_selected, transmitted, blackout,
     prefilled, joined_batch, served, infeasible, retry, cloud_error,
-    cancelled."""
+    cancelled, rejected."""
     kind: str
     t: float = 0.0
     data: Dict[str, Any] = field(default_factory=dict)
@@ -57,6 +61,8 @@ class Response:
     #   "deadline"    cancelled past IntentRequirements.max_latency_s
     #   "infeasible"  no admissible tier (strict policy idles the frame)
     #   "cloud_error" a cloud serving stage failed and retries ran out
+    #   "rejected"    shed by admission control (operator over its rate
+    #                 limit, or the scheduler's bounded queue was full)
     # ``feasible`` keeps its pre-failure-taxonomy semantics (False on
     # every failed response, and on served best-effort starved frames).
     failure: Optional[str] = None
@@ -81,6 +87,14 @@ class Response:
     # in-flight: whether this request decoded speculatively (Context-
     # stream drafts + paged multi-token verify) — None outside that path
     speculative: Optional[bool] = None
+    # scheduling telemetry (in-flight path): total time queued before
+    # admission (summed across preemption round-trips), times this
+    # request was preempted-and-parked, and the mission-clock watermark
+    # at resolution — (t_finished - t_submit) is the end-to-end latency
+    # the fleet-storm bench reports per QoS class
+    queue_wait_s: Optional[float] = None
+    preemptions: int = 0
+    t_finished: Optional[float] = None
     events: List[StreamEvent] = field(default_factory=list)
 
     @property

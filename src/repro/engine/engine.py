@@ -45,6 +45,7 @@ from repro.engine.api import Request, RequestFuture, Response
 from repro.engine.inflight import InflightDecoder
 from repro.engine.policy import (AdaptivePolicy, ControlPolicy, RetryPolicy,
                                  TierDecision)
+from repro.engine.scheduler import FifoScheduler
 from repro.engine.speculative import SpecStats, SpeculativeConfig
 from repro.engine.transport import LoopbackTransport, Transport
 from repro.network.energy import EdgeDevice, edge_insight_flops
@@ -66,6 +67,9 @@ class OperatorSession:
     transport: Optional[Transport] = None
     policy: Optional[ControlPolicy] = None
     oracle: Optional[Any] = None       # FidelityOracle for profiled frames
+    # scheduling priority for every request on this session (a command
+    # post outranks routine UAV telemetry); per-request override wins
+    priority: int = 0
     history: List[tuple] = field(default_factory=list)
 
     def classify(self, prompt: str) -> Intent:
@@ -73,11 +77,14 @@ class OperatorSession:
 
     def submit(self, prompt: str = "", images: Any = None,
                query: Optional[np.ndarray] = None, time_s: float = 0.0,
-               intent: Optional[Intent] = None) -> RequestFuture:
+               intent: Optional[Intent] = None,
+               priority: Optional[int] = None) -> RequestFuture:
         """Full serving path: edge inference -> transport -> cloud batch."""
         return self.engine.submit(
             Request(prompt=prompt, intent=intent, images=images, query=query,
-                    time_s=time_s), self)
+                    time_s=time_s,
+                    priority=self.priority if priority is None
+                    else int(priority)), self)
 
     def submit_frame(self, t: float,
                      intent: Intent = Intent.INSIGHT) -> Response:
@@ -107,6 +114,7 @@ class AveryEngine:
                  speculative: Any = None,
                  mesh: Any = None,
                  retry: Optional[RetryPolicy] = None,
+                 scheduler: Any = None,
                  debug_invariants: bool = False):
         """``speculative`` (in-flight batching only): ``True`` enables
         Context-stream draft + paged multi-token verify with defaults,
@@ -123,8 +131,15 @@ class AveryEngine:
         engine's ``PagePool`` keeps its device buffers mesh-resident.
         ``retry`` (a ``RetryPolicy``) turns transmission blackouts and
         cloud-stage faults into bounded backoff-and-downshift retries
-        instead of terminal failures; ``debug_invariants`` audits the KV
-        pool (``PagePool.check_invariants``) after every pump/drain/
+        instead of terminal failures; ``scheduler`` (``engine.scheduler``)
+        plugs the admission policy — the default ``FifoScheduler``
+        preserves strict arrival order; a ``QoSScheduler`` adds
+        intent-aware classes, weighted-fair + strict-priority admission,
+        per-operator rate limits, and preemption. The engine keeps the
+        given instance as a prototype: rate buckets and telemetry are
+        fleet-wide, each in-flight decoder gets a ``spawn()``.
+        ``debug_invariants`` audits the KV pool
+        (``PagePool.check_invariants``) after every pump/drain/
         cancellation — cheap, but meant for tests and chaos runs."""
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
@@ -183,6 +198,8 @@ class AveryEngine:
         self._seq = 0
         self.sessions: List[OperatorSession] = []
         self.retry = retry
+        self.scheduler_proto = scheduler if scheduler is not None \
+            else FifoScheduler()
         self.debug_invariants = debug_invariants
         # mission-clock watermark: the latest time the engine has seen
         # (submissions, deliveries, retry backoffs). Deadline sweeps
@@ -190,18 +207,21 @@ class AveryEngine:
         self._now = 0.0
         # telemetry — terminal outcomes are mutually exclusive: every
         # submitted request lands in exactly one of {completed,
-        # infeasible, blackouts, deadline_cancelled, cloud_errors};
-        # n_starved separately counts *served* best-effort responses
-        # with feasible=False (those also count as completed)
+        # infeasible, blackouts, deadline_cancelled, cloud_errors,
+        # rejected}; n_starved separately counts *served* best-effort
+        # responses with feasible=False (those also count as completed)
         self.n_submitted = 0
         self.n_completed = 0
         self.n_infeasible = 0
         self.n_blackouts = 0
         self.n_deadline = 0
         self.n_cloud_errors = 0
+        self.n_rejected = 0           # shed by admission control
         self.n_starved = 0
         self.n_retries = 0
         self.n_downshifts = 0
+        self.n_load_downshifts = 0    # policy adapted tier to queue load
+        self.served_by_operator: Dict[str, int] = {}
 
     def _resolve_speculative(self, speculative: Any
                              ) -> Optional[SpeculativeConfig]:
@@ -324,9 +344,31 @@ class AveryEngine:
         fut.meta["deadline"] = self._deadline_for(session, intent,
                                                   request.time_s)
         self._advance(request.time_s)
+        if self._reject_overload(fut, session, request.time_s):
+            return fut
         self._attempt(fut, request.time_s)
         self._sweep_deadlines()
         return fut
+
+    def _reject_overload(self, fut: RequestFuture,
+                         session: OperatorSession, t: float) -> bool:
+        """Admission control at the front door: an operator over its
+        rate limit is shed *before* any edge compute or transmission —
+        the cheapest possible rejection. Resolves the future with
+        ``failure="rejected"`` and returns True when shed."""
+        reason = self.scheduler_proto.admission_check(
+            session.operator_id, t)
+        if reason is None:
+            return False
+        self.n_rejected += 1
+        fut.emit("rejected", t, reason=reason)
+        fut.set_result(Response(
+            request_id=fut.request.request_id,
+            operator_id=session.operator_id, intent=fut.request.intent,
+            feasible=False, failure="rejected",
+            attempts=max(1, fut.attempts), t_submit=t, t_delivered=t,
+            t_finished=self._now))
+        return True
 
     # ---- attempts, retries, failures ----
 
@@ -340,6 +382,7 @@ class AveryEngine:
         session: OperatorSession = fut.meta["session"]
         intent = request.intent
         transport, decision, bw = self._decide(session, intent, t)
+        decision = self._adapt_to_load(session, decision, bw)
         if prev_tier is not None and self.retry is not None:
             decision = self.retry.downshifted(decision, prev_tier, self.lut,
                                               bw)
@@ -373,6 +416,24 @@ class AveryEngine:
             return
         fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
         self._enqueue_cloud(fut, packet, request.query, decision, rec)
+
+    def _adapt_to_load(self, session: OperatorSession,
+                       decision: TierDecision, bw: float) -> TierDecision:
+        """Scheduler feedback as a self-awareness input: policies with
+        an ``adapt_to_load`` hook see the live queue pressure and may
+        trade fidelity for admission latency (AdaptivePolicy downshifts
+        the Insight tier under deep backlogs; Static never adapts; see
+        engine/policy.py — the same optional-hook pattern as the
+        speculation gate)."""
+        policy = session.policy or self.policy
+        hook = getattr(policy, "adapt_to_load", None)
+        if hook is None or self.batching != "inflight":
+            return decision
+        adapted = hook(decision, self.scheduler_proto.load(), self.lut, bw)
+        if (adapted.tier is not None and decision.tier is not None
+                and adapted.tier.payload_mb < decision.tier.payload_mb):
+            self.n_load_downshifts += 1
+        return adapted
 
     def _attempt_packet(self, fut: RequestFuture, t: float) -> None:
         """Retry path for pre-encoded submissions: re-send the same
@@ -472,8 +533,8 @@ class AveryEngine:
 
     def submit_packet(self, packet: pk.Packet, query, intent: Intent,
                       time_s: float = 0.0,
-                      session: Optional[OperatorSession] = None
-                      ) -> RequestFuture:
+                      session: Optional[OperatorSession] = None,
+                      priority: Optional[int] = None) -> RequestFuture:
         """Low-level entry: serve an already-encoded packet (benchmarks
         and tests that prepare edge payloads out of band)."""
         if self.executor is None:
@@ -483,7 +544,10 @@ class AveryEngine:
         session = session or (self.sessions[0] if self.sessions
                               else self.session("_direct"))
         fut = self._register(Request(intent=intent, query=np.asarray(query),
-                                     time_s=time_s), session)
+                                     time_s=time_s,
+                                     priority=session.priority
+                                     if priority is None
+                                     else int(priority)), session)
         decision = TierDecision(
             stream=packet.kind,
             tier=self.lut.by_name(packet.tier_name) if packet.tier_name
@@ -492,6 +556,8 @@ class AveryEngine:
                         decision=decision,
                         deadline=self._deadline_for(session, intent, time_s))
         self._advance(time_s)
+        if self._reject_overload(fut, session, time_s):
+            return fut
         self._attempt_packet(fut, time_s)
         self._sweep_deadlines()
         return fut
@@ -509,10 +575,17 @@ class AveryEngine:
                 dec = self._inflight[qlen] = InflightDecoder(
                     self.executor, slots=self.max_batch, pool=self.kv_pool,
                     spec=self.spec_config, spec_gate=self._spec_gate,
-                    spec_prefix_rows=self._draft_prefix_rows)
+                    spec_prefix_rows=self._draft_prefix_rows,
+                    scheduler=self.scheduler_proto.spawn(),
+                    clock=lambda: self._now)
             dec.submit(rid, fut.request.intent, packet, query,
                        on_done=self._resolve_inflight,
-                       operator_id=fut.request.operator_id)
+                       operator_id=fut.request.operator_id,
+                       priority=fut.request.priority,
+                       deadline=fut.meta.get("deadline"),
+                       t_submit=rec.end_s)
+            if fut.done():           # shed at enqueue (bounded queue)
+                return
             # actual admission may happen steps later if slots are full;
             # the decoder stamps the real join point on the response
             fut.emit("queued", rec.end_s)
@@ -548,8 +621,10 @@ class AveryEngine:
             fut, answer_logits=res.answer_logits,
             mask_logits=res.mask_logits, tokens=res.tokens,
             batch_size=res.batch_size)
+        resp.t_finished = self._now
         fut.set_result(resp)
         self.n_completed += 1
+        self._note_served(fut.request.operator_id)
         if not resp.feasible:
             self.n_starved += 1        # served best-effort, F_I unmet
 
@@ -557,8 +632,26 @@ class AveryEngine:
         fut = self._futures[out["seq_id"]]
         if fut.done():          # e.g. already cancelled past its deadline
             return
-        if out.get("failure") == "cloud_error":
+        failure = out.get("failure")
+        if failure == "cloud_error":
             self._cloud_failed(fut, out)
+            return
+        if failure == "deadline":
+            # the decoder's pre-admission sweep: expired while pending,
+            # resolved without paying the prefill
+            self.n_deadline += 1
+            fut.emit("cancelled", self._now, reason="deadline")
+            fut.set_result(self._base_response(
+                fut, feasible=False, failure="deadline",
+                t_finished=self._now))
+            return
+        if failure == "rejected":
+            # shed at enqueue: the scheduler's bounded queue is full
+            self.n_rejected += 1
+            fut.emit("rejected", self._now, reason=out.get("reason", ""))
+            fut.set_result(self._base_response(
+                fut, feasible=False, failure="rejected",
+                t_finished=self._now))
             return
         fut.emit("served", fut.meta["rec"].end_s,
                  joined_step=out["joined_step"],
@@ -570,10 +663,18 @@ class AveryEngine:
         resp.joined_step = out["joined_step"]
         resp.prefix_hit = out["prefix_hit"]
         resp.speculative = out.get("speculative")
+        resp.preemptions = out.get("preemptions", 0)
+        resp.queue_wait_s = out.get("queue_wait")
+        resp.t_finished = self._now
         fut.set_result(resp)
         self.n_completed += 1
+        self._note_served(fut.request.operator_id)
         if not resp.feasible:
             self.n_starved += 1        # served best-effort, F_I unmet
+
+    def _note_served(self, operator_id: str) -> None:
+        self.served_by_operator[operator_id] = \
+            self.served_by_operator.get(operator_id, 0) + 1
 
     def pump(self) -> None:
         """Advance cloud serving without waiting: serve any full
@@ -649,6 +750,15 @@ class AveryEngine:
         rid, self._seq = self._seq, self._seq + 1
         self.n_submitted += 1
         self._advance(t)
+        reason = self.scheduler_proto.admission_check(session.operator_id,
+                                                      t)
+        if reason is not None:       # rate-limited: shed pre-edge-compute
+            self.n_rejected += 1
+            return Response(request_id=rid,
+                            operator_id=session.operator_id,
+                            intent=intent, feasible=False,
+                            failure="rejected", t_submit=t, t_delivered=t,
+                            t_finished=t)
         deadline = self._deadline_for(session, intent, t)
         transport, decision, bw = self._decide(session, intent, t)
         if decision.stream == "context":
@@ -716,6 +826,7 @@ class AveryEngine:
         iou = (session.oracle.measure(tier)
                if session.oracle is not None else None)
         self.n_completed += 1
+        self._note_served(session.operator_id)
         if not decision.feasible:
             self.n_starved += 1        # served best-effort, F_I unmet
         return Response(request_id=rid, operator_id=session.operator_id,
@@ -748,6 +859,7 @@ class AveryEngine:
             self.n_blackouts += 1
         else:
             self.n_completed += 1
+            self._note_served(session.operator_id)
         return Response(request_id=rid, operator_id=session.operator_id,
                         intent=Intent.CONTEXT, tier_name=None,
                         feasible=rec.delivered,
@@ -766,10 +878,18 @@ class AveryEngine:
             "blackouts": self.n_blackouts,
             "deadline_cancelled": self.n_deadline,
             "cloud_errors": self.n_cloud_errors,
+            "rejected": self.n_rejected,
             "starved": self.n_starved,
             "retries": self.n_retries,
             "downshifts": self.n_downshifts,
+            "load_downshifts": self.n_load_downshifts,
         }
+        # scheduler telemetry (queue depth/waits per class, preemptions,
+        # rejection reasons) and per-operator served counts — the
+        # fairness surface for fleet-scale multi-tenant serving
+        out.update(self.scheduler_proto.stats())
+        for op, n in self.served_by_operator.items():
+            out[f"served_op:{op}"] = n
         if self._scheduler is not None:
             out["n_microbatches"] = self._scheduler.n_microbatches
             out["mean_batch_size"] = self._scheduler.mean_batch_size

@@ -33,6 +33,15 @@ One decoder serves one query length (page tables are fixed-shape per
 qlen); decoders on one engine share one ``PagePool``, so prefix pages
 cached by a retired decoder stay warm for its successors.
 
+Admission order is pluggable (``engine.scheduler``): the default
+``FifoScheduler`` reproduces the historical single-deque behavior;
+``QoSScheduler`` adds intent-aware classes, weighted-fair + strict-
+priority pops, bounded queues, and preemption — an urgent queued
+request parks the lowest-ranked active decode (pages rolled back, its
+generated tokens carried along) and the victim later resumes token-
+exactly by replaying them from its prefix. Expired deadlines resolve
+at the admission boundary, before any prefill is paid.
+
 With a ``SpeculativeConfig`` the decoder runs the draft/verify loop
 (``engine.speculative``): each pump step first lets the Context-stream
 ``DraftModel`` propose k tokens per speculating row, then scores every
@@ -59,6 +68,7 @@ from repro.core.intent import Intent
 from repro.core.paging import (TRASH_PAGE, PagePool, pages_for,
                                prefix_digest, prefix_positions)
 from repro.engine.faults import CloudStageError
+from repro.engine.scheduler import FifoScheduler, qos_class
 from repro.engine.speculative import (DraftModel, SpecStats,
                                       SpeculativeConfig, greedy_accept)
 
@@ -72,6 +82,13 @@ class _PendingRequest:
     on_done: Callable[[Dict[str, Any]], None]
     operator_id: str = ""
     speculative: Optional[bool] = None   # None -> decoder default
+    # scheduling state (see engine.scheduler)
+    priority: int = 0                 # strict band; higher admits first
+    deadline: Optional[float] = None  # mission-clock expiry
+    t_enqueue: float = 0.0            # when this wait segment started
+    queue_wait: float = 0.0           # total time queued (all segments)
+    resumes: int = 0                  # times parked by preemption
+    resume_tokens: Optional[List[int]] = None  # generated-so-far tokens
 
 
 @dataclass
@@ -89,6 +106,7 @@ class _SlotState:
     seg: Optional[np.ndarray] = None  # <SEG> state once the final token fed
     steps_done: int = 0
     batch_acc: int = 0                # sum of co-active slots over steps
+    replay: Optional[Deque[int]] = None  # parked tokens to re-decode
 
 
 class InflightDecoder:
@@ -106,8 +124,16 @@ class InflightDecoder:
                  pool: Optional[PagePool] = None,
                  spec: Optional[SpeculativeConfig] = None,
                  spec_gate: Optional[Callable[[SpecStats], bool]] = None,
-                 spec_prefix_rows: Optional[Dict[Any, Any]] = None):
+                 spec_prefix_rows: Optional[Dict[Any, Any]] = None,
+                 scheduler: Optional[Any] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.executor = executor
+        # admission policy (engine.scheduler): the engine passes a
+        # per-decoder spawn sharing fleet-wide telemetry/rate buckets;
+        # standalone decoders default to plain FIFO
+        self.scheduler = scheduler if scheduler is not None \
+            else FifoScheduler()
+        self._clock = clock or (lambda: 0.0)
         self.slots = int(slots)
         self.T = int(executor.max_new_tokens)
         self.pool = pool if pool is not None else PagePool(
@@ -125,7 +151,6 @@ class InflightDecoder:
         # like the target's prefix pages); None -> private to this decoder
         self.spec_prefix_rows = spec_prefix_rows
         self.draft: Optional[DraftModel] = None
-        self.pending: Deque[_PendingRequest] = deque()
         self.active: Dict[int, _SlotState] = {}
         self.qlen: Optional[int] = None
         # per-slot paging state, shaped once qlen is known
@@ -137,7 +162,18 @@ class InflightDecoder:
         self.n_served = 0
         self.n_cancelled = 0              # requests removed via cancel()
         self.n_stage_faults = 0           # CloudStageErrors absorbed
+        self.n_preempted = 0              # rows parked for urgent work
+        self.n_rejected = 0               # shed at enqueue (queue bound)
+        self.n_expired = 0                # dead on arrival at admission
         self._admitting = False           # reentrancy guard (see admit)
+
+    @property
+    def pending(self):
+        """Compat view of queued admissions. The FIFO path exposes its
+        real deque (tests/benches seed it directly); QoS schedulers
+        return a read-only snapshot across their class queues."""
+        q = getattr(self.scheduler, "queue", None)
+        return q if q is not None else self.scheduler.snapshot()
 
     # ---- geometry (fixed once qlen is known) ----
 
@@ -161,18 +197,28 @@ class InflightDecoder:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.pending or self.active)
+        return bool(self.scheduler.has_pending or self.active)
 
     # ---- queueing ----
 
     def submit(self, seq_id: int, intent: Intent, packet: pk.Packet, query,
                on_done: Callable[[Dict[str, Any]], None],
                operator_id: str = "",
-               speculative: Optional[bool] = None) -> None:
+               speculative: Optional[bool] = None,
+               priority: int = 0,
+               deadline: Optional[float] = None,
+               t_submit: Optional[float] = None) -> None:
         """``speculative``: per-request drafting override — None follows
         the decoder's config (drafting iff a ``SpeculativeConfig`` was
         given), False forces a plain row even on a speculating decoder
-        (plain and speculating rows share the verify batch)."""
+        (plain and speculating rows share the verify batch).
+
+        ``priority``/``deadline``/``t_submit`` feed the scheduler:
+        strict band, mission-clock expiry (expired items resolve
+        ``failure="deadline"`` *before* paying a prefill), and the
+        enqueue timestamp for time-in-queue accounting. A bounded or
+        rate-limited scheduler may shed the request here — ``on_done``
+        then fires immediately with ``failure="rejected"``."""
         query = np.asarray(query).reshape(-1, np.asarray(query).shape[-1])
         if query.shape[0] != 1:
             raise ValueError(
@@ -183,9 +229,20 @@ class InflightDecoder:
         elif int(query.shape[-1]) != self.qlen:
             raise ValueError(
                 f"decoder serves qlen={self.qlen}, got {query.shape[-1]}")
-        self.pending.append(_PendingRequest(seq_id, intent, packet, query,
-                                            on_done, operator_id,
-                                            speculative=speculative))
+        now = self._clock()
+        item = _PendingRequest(seq_id, intent, packet, query, on_done,
+                               operator_id, speculative=speculative,
+                               priority=int(priority), deadline=deadline,
+                               t_enqueue=t_submit if t_submit is not None
+                               else now)
+        reason = self.scheduler.enqueue(item, now)
+        if reason is not None:
+            self.n_rejected += 1
+            item.on_done({
+                "seq_id": item.seq_id, "intent": item.intent,
+                "tier_name": item.packet.tier_name,
+                "failure": "rejected", "reason": reason})
+            return
         self.admit()
 
     # ---- admission: prefix reuse + page allocation between steps ----
@@ -197,8 +254,9 @@ class InflightDecoder:
         return packet.content["clip" if packet.kind == "insight" else "ctx"]
 
     def admit(self) -> int:
-        """Admit queued requests into free slots. A ``CloudStageError``
-        from an admission stage fails only that request — its pages are
+        """Admit queued requests into free slots in scheduler order,
+        then let urgent queued work preempt. A ``CloudStageError`` from
+        an admission stage fails only that request — its pages are
         unwound refcount-safely by ``_admit_one`` and ``on_done`` fires
         with a ``cloud_error`` failure — and admission continues.
         Reentrant calls (an ``on_done`` callback resubmitting a retry
@@ -209,20 +267,55 @@ class InflightDecoder:
         self._admitting = True
         try:
             admitted = 0
-            while self.pending and len(self.active) < self.slots:
-                item = self.pending.popleft()
-                try:
-                    self._admit_one(item)
-                    admitted += 1
-                except CloudStageError as e:
-                    self.n_stage_faults += 1
-                    item.on_done({
-                        "seq_id": item.seq_id, "intent": item.intent,
-                        "tier_name": item.packet.tier_name,
-                        "failure": "cloud_error", "error": str(e)})
+            now = self._clock()
+            while self.scheduler.has_pending \
+                    and len(self.active) < self.slots:
+                item = self.scheduler.pop_next(now)
+                if item is None:
+                    break
+                admitted += self._try_admit(item, now)
+            # preemption: an urgent pending request (deadline at risk,
+            # or latency-class/priority patience exceeded) evicts the
+            # lowest-ranked active decode; the victim parks token-
+            # exactly and requeues at the front of its class. Bounded
+            # by ``slots`` — each round parks one strictly lower-ranked
+            # victim, so chains terminate.
+            for _ in range(self.slots):
+                if not (self.scheduler.has_pending and self.active):
+                    break
+                pick = self.scheduler.pick_preemption(self.active, now)
+                if pick is None:
+                    break
+                item, victim = pick
+                self._park_slot(victim, self.active[victim])
+                admitted += self._try_admit(item, now)
             return admitted
         finally:
             self._admitting = False
+
+    def _try_admit(self, item: _PendingRequest, now: float) -> int:
+        """Admit one popped item. An already-expired deadline resolves
+        ``failure="deadline"`` here — *before* the prefill — so a dead
+        request can never waste cloud compute on its way out."""
+        if item.deadline is not None and now >= item.deadline:
+            self.n_expired += 1
+            self.scheduler.note_expired()
+            item.on_done({
+                "seq_id": item.seq_id, "intent": item.intent,
+                "tier_name": item.packet.tier_name,
+                "failure": "deadline"})
+            return 0
+        try:
+            self._admit_one(item)
+            self.scheduler.note_admitted(item, now)
+            return 1
+        except CloudStageError as e:
+            self.n_stage_faults += 1
+            item.on_done({
+                "seq_id": item.seq_id, "intent": item.intent,
+                "tier_name": item.packet.tier_name,
+                "failure": "cloud_error", "error": str(e)})
+            return 0
 
     def _admit_one(self, item: _PendingRequest) -> None:
         """Prefill one request into a free slot. Any stage failure
@@ -293,12 +386,20 @@ class InflightDecoder:
             self.draft.admit(slot, ctx, item.query,
                              key=key if self.pool.share_prefixes
                              else None)
-        self.active[slot] = _SlotState(
+        st = _SlotState(
             req=item, tokens=[int(np.argmax(entry.logits0[0]))],
             logits0=entry.logits0, feats=feats, pos=self.prefix_len,
             joined_step=self.step_idx, prefix_ids=entry.page_ids,
             private_ids=private, prefix_hit=hit,
             speculative=speculative)
+        if item.resume_tokens:
+            # a parked victim resumes from its prefix: token 0 re-emerges
+            # from the (cached or re-prefilled) prefix logits, the rest
+            # replay through the decode loop. Greedy decoding makes the
+            # replay byte-identical to the original run, so the resumed
+            # request stays token-exact with an uninterrupted one.
+            st.replay = deque(item.resume_tokens[1:])
+        self.active[slot] = st
 
     # ---- cancellation (deadline enforcement) ----
 
@@ -308,11 +409,9 @@ class InflightDecoder:
         engine's deadline sweep) resolves the request's future; the
         decoder only reclaims resources. Returns False when ``seq_id``
         is not here (already finished, or queued on another decoder)."""
-        for i, item in enumerate(self.pending):
-            if item.seq_id == seq_id:
-                del self.pending[i]
-                self.n_cancelled += 1
-                return True
+        if self.scheduler.remove(seq_id):
+            self.n_cancelled += 1
+            return True
         for s, st in list(self.active.items()):
             if st.req.seq_id == seq_id:
                 self._release_slot(s, st)
@@ -347,8 +446,13 @@ class InflightDecoder:
             return 0
         draft_rows = {}
         if self.spec is not None and self.draft is not None:
+            # resumed rows replay their parked tokens through the plain
+            # path first (drafting against a replay is pointless — the
+            # outcome is already known); they rejoin drafting once the
+            # replay drains
             candidates = {s: st for s, st in self.active.items()
-                          if st.speculative and len(st.tokens) < self.T}
+                          if st.speculative and len(st.tokens) < self.T
+                          and not st.replay}
             if candidates and self.spec_gate(self.spec_stats):
                 draft_rows = candidates
             elif candidates:
@@ -393,7 +497,14 @@ class InflightDecoder:
             st.steps_done += 1
             st.batch_acc += live
             if n < self.T:
-                st.tokens.append(int(np.argmax(logits[s])))
+                if st.replay:
+                    # replaying a parked run: the stored token IS the
+                    # greedy pick (deterministic decode), so feeding it
+                    # keeps the resumed row token-exact
+                    st.tokens.append(st.replay.popleft())
+                    self.scheduler.note_replayed()
+                else:
+                    st.tokens.append(int(np.argmax(logits[s])))
                 st.pos += 1
                 continue
             # final step: this row's seg is the <SEG> state at the last
@@ -460,6 +571,14 @@ class InflightDecoder:
             new = [int(g) for g in greedy[:m + 1]][:self.T - n]
             st.tokens.extend(new)
             st.pos += len(new)
+            if st.replay:
+                # a resumed row riding someone else's verify batch
+                # advances by the model's own greedy picks — identical
+                # to the parked tokens — so its replay drains in step
+                for _ in new:
+                    if st.replay:
+                        st.replay.popleft()
+                        self.scheduler.note_replayed()
             st.steps_done += 1
             st.batch_acc += live
             if j:
@@ -543,7 +662,11 @@ class InflightDecoder:
             "joined_step": st.joined_step,
             "prefix_hit": st.prefix_hit,
             "speculative": st.speculative,
+            "preemptions": st.req.resumes,
+            "queue_wait": st.req.queue_wait,
         })
+        if st.req.resumes:
+            self.scheduler.note_resumed_served()
         self._release_slot(s, st)
         self.n_served += 1
         return 1
@@ -558,6 +681,30 @@ class InflightDecoder:
         if st.speculative and self.draft is not None:
             self.draft.release(slot)
         del self.active[slot]
+
+    def _park_slot(self, slot: int, st: _SlotState) -> None:
+        """Preempt one active decode: roll its private pages back to
+        empty (``PagePool.rollback_to`` — the same machinery as a
+        speculative rejection, dropped all the way), drop its prefix
+        reference, and requeue the request at the front of its class
+        carrying its generated-so-far tokens. Re-admission replays them
+        from the (usually still cached) prefix, token-exactly."""
+        self.pool.rollback_to(st.private_ids, 0)
+        self.pool.release(st.prefix_ids)
+        self.page_tables[slot] = TRASH_PAGE
+        self.positions[slot] = -1
+        if st.speculative and self.draft is not None:
+            self.draft.release(slot)
+        del self.active[slot]
+        item = st.req
+        # fold any undrained replay back in: tokens already committed
+        # to st.tokens are the authoritative resume point
+        item.resume_tokens = list(st.tokens)
+        item.resumes += 1
+        item.t_enqueue = self._clock()
+        self.n_preempted += 1
+        self.scheduler.note_preempted()
+        self.scheduler.requeue_preempted(item, item.t_enqueue)
 
     def pump(self, max_steps: int = 1) -> None:
         # admission first: pending requests must start even when no batch

@@ -50,6 +50,15 @@ class ControlPolicy(Protocol):
     # — the engine consults it before every speculative verify step, so
     # the drafting lever rides the same Sense/Evaluate/Select loop as
     # tier selection (a policy without the hook leaves drafting on).
+    #
+    # Policies may also expose
+    #   adapt_to_load(decision, load, lut, bandwidth_mbps) -> TierDecision
+    # — scheduler feedback as a self-awareness input: ``load`` is the
+    # live queue pressure (engine.scheduler's ``load()`` dict) and the
+    # policy may revise its fresh decision against it, e.g. downshift
+    # the Insight tier under a deep backlog so admission latency is
+    # traded against per-frame fidelity. A policy without the hook (or
+    # one that returns the decision unchanged) keeps Select's verdict.
 
 
 def _context_decision(bandwidth_mbps: float, lut: SystemLUT) -> TierDecision:
@@ -59,8 +68,15 @@ def _context_decision(bandwidth_mbps: float, lut: SystemLUT) -> TierDecision:
 
 @dataclass(frozen=True)
 class AdaptivePolicy:
-    """Algorithm 1: adaptive tier selection under the mission goal."""
+    """Algorithm 1: adaptive tier selection under the mission goal.
+
+    ``overload_queue_depth`` arms the scheduler-feedback loop: once the
+    engine's admission queues hold at least that many requests, fresh
+    Insight decisions downshift one notch toward the lightest tier
+    (smaller prefill payloads clear a backlog faster). None (default)
+    disables the hook — existing behavior is untouched."""
     power: PowerConfig = field(default_factory=PowerConfig)
+    overload_queue_depth: Optional[int] = None
 
     def select(self, bandwidth_mbps, intent, requirements, lut, *,
                goal=MissionGoal.PRIORITIZE_ACCURACY,
@@ -86,6 +102,27 @@ class AdaptivePolicy:
             return True                   # still warming up the estimate
         return stats.acceptance_rate >= cfg.acceptance_floor
 
+    def adapt_to_load(self, decision: TierDecision, load: dict,
+                      lut: SystemLUT,
+                      bandwidth_mbps: float) -> TierDecision:
+        """Scheduler feedback as embodied self-awareness: under a deep
+        admission backlog, trade one notch of Insight fidelity for
+        faster queue clearance (the heaviest tier strictly cheaper than
+        Select's pick). Context decisions and shallow queues pass
+        through untouched."""
+        if (self.overload_queue_depth is None
+                or decision.stream != "insight" or decision.tier is None
+                or load.get("queue_depth", 0) < self.overload_queue_depth):
+            return decision
+        cheaper = [t for t in lut.tiers
+                   if t.payload_mb < decision.tier.payload_mb]
+        if not cheaper:
+            return decision               # already the lightest
+        tier = max(cheaper, key=lambda t: t.payload_mb)
+        return TierDecision(stream="insight", tier=tier,
+                            feasible=decision.feasible,
+                            throughput_pps=tier.max_pps(bandwidth_mbps))
+
 
 @dataclass(frozen=True)
 class StaticTierPolicy:
@@ -107,6 +144,12 @@ class StaticTierPolicy:
         baselines that keep transmitting into a degraded link)."""
         return True
 
+    def adapt_to_load(self, decision: TierDecision, load: dict,
+                      lut: SystemLUT,
+                      bandwidth_mbps: float) -> TierDecision:
+        """Static baseline: queue pressure changes nothing."""
+        return decision
+
 
 @dataclass(frozen=True)
 class BestEffortPolicy:
@@ -127,6 +170,12 @@ class BestEffortPolicy:
 
     def allow_speculation(self, stats, cfg) -> bool:
         return self.inner.allow_speculation(stats, cfg)
+
+    def adapt_to_load(self, decision: TierDecision, load: dict,
+                      lut: SystemLUT,
+                      bandwidth_mbps: float) -> TierDecision:
+        return self.inner.adapt_to_load(decision, load, lut,
+                                        bandwidth_mbps)
 
 
 @dataclass(frozen=True)

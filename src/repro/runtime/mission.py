@@ -170,6 +170,43 @@ class FidelityOracle:
         return float(np.clip(base + self.rng.randn() * 0.02, 0.0, 1.0))
 
 
+def mission_session(engine: AveryEngine, trace: BandwidthTrace,
+                    spec: MissionSpec, oracle: FidelityOracle):
+    """One UAV's ``OperatorSession`` for a profiled mission: its own
+    bandwidth share and controller, the shared engine's cloud side."""
+    reqs = DEFAULT_REQUIREMENTS[Intent.INSIGHT]
+    if spec.min_pps != reqs.min_update_pps:
+        reqs = dataclasses.replace(reqs, min_update_pps=spec.min_pps)
+    return engine.session(
+        f"uav-{spec.seed}",
+        transport=ChannelTransport.from_trace(trace),
+        policy=spec.resolve_policy(), goal=spec.goal,
+        finetuned=spec.finetuned,
+        requirements={**DEFAULT_REQUIREMENTS, Intent.INSIGHT: reqs},
+        oracle=oracle)
+
+
+def mission_step(sess, log: MissionLog, lut: SystemLUT, t: float) -> float:
+    """One profiled mission frame at capture time ``t``: submit through
+    the engine's admission path, account it on ``log``, and return the
+    next capture time (pipelined capture — frame k+1 overlaps packet
+    k's transmission). Shared by ``run_mission`` and the fleet loop so
+    both drive the exact same per-frame semantics."""
+    resp = sess.submit_frame(t)
+    if not resp.feasible:
+        log.infeasible_s += 1.0
+        # a strict policy idles the frame; admission control sheds it
+        # (``rejected``) — either way no frame transmits this second
+        if resp.tier_name is None:
+            return t + 1.0
+    log.frames.append(FrameResult(
+        t_capture=t, t_delivered=resp.t_delivered, tier=resp.tier_name,
+        payload_mb=lut.by_name(resp.tier_name).payload_mb,
+        iou=resp.iou, edge_energy_j=resp.edge_energy_j))
+    return max(t + resp.edge_compute_s,
+               resp.t_delivered - resp.edge_compute_s, t + 1e-3)
+
+
 def run_mission(lut: SystemLUT, trace: BandwidthTrace, spec: MissionSpec,
                 executor=None, pcfg: Optional[LISAPipelineConfig] = None,
                 deploy: Optional[LISAPipelineConfig] = None,
@@ -186,34 +223,13 @@ def run_mission(lut: SystemLUT, trace: BandwidthTrace, spec: MissionSpec,
             raise ValueError("shared engine carries a different executor")
     if oracle is None:
         oracle = FidelityOracle(lut, spec, executor=executor, pcfg=pcfg)
-    reqs = DEFAULT_REQUIREMENTS[Intent.INSIGHT]
-    if spec.min_pps != reqs.min_update_pps:
-        reqs = dataclasses.replace(reqs, min_update_pps=spec.min_pps)
-    sess = engine.session(
-        f"uav-{spec.seed}",
-        transport=ChannelTransport.from_trace(trace),
-        policy=spec.resolve_policy(), goal=spec.goal,
-        finetuned=spec.finetuned,
-        requirements={**DEFAULT_REQUIREMENTS, Intent.INSIGHT: reqs},
-        oracle=oracle)
+    sess = mission_session(engine, trace, spec, oracle)
 
     log = MissionLog(spec=spec)
     t = 0.0
     seq = 0
     while t < spec.duration_s:
-        resp = sess.submit_frame(t)
-        if not resp.feasible:
-            log.infeasible_s += 1.0
-            if resp.tier_name is None:     # strict policy: idle this frame
-                t += 1.0
-                continue
-        log.frames.append(FrameResult(
-            t_capture=t, t_delivered=resp.t_delivered, tier=resp.tier_name,
-            payload_mb=lut.by_name(resp.tier_name).payload_mb,
-            iou=resp.iou, edge_energy_j=resp.edge_energy_j))
-        # pipelined capture: next frame overlaps with this transmission
-        t = max(t + resp.edge_compute_s, resp.t_delivered - resp.edge_compute_s,
-                t + 1e-3)
+        t = mission_step(sess, log, lut, t)
         seq += 1
         if seq > 100_000:
             break

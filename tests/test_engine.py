@@ -656,3 +656,118 @@ def test_engine_mesh_knob_shards_serving(executor):
     assert stats["mesh_devices"] >= 1
     assert stats["model_shards"] >= 1
     assert stats["kv_pool_bytes_per_shard"] > 0
+
+
+# ---- QoS scheduling through the engine front door ----
+
+
+def test_preempted_request_resumes_token_exact(executor):
+    """Page-rollback preemption round trip on a 1-slot decoder: an
+    urgent Context request evicts the running Insight decode; the victim
+    parks (private pages rolled back to the prefix), resumes, replays
+    its generated-so-far tokens, and still finishes with exactly the
+    tokens of the uncontended one-shot generate path."""
+    from repro.engine import QoSScheduler
+    reqs = _edge_requests(executor, 3, seed=61)
+    bulk, _, urgent = reqs               # i%3==2 is the CONTEXT request
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=1, debug_invariants=True,
+                         scheduler=QoSScheduler(latency_patience_s=0.0))
+    f_a = engine.submit_packet(*bulk, time_s=0.0)
+    f_c = engine.submit_packet(*urgent, time_s=1.0)
+    engine.drain()
+    r_a = f_a.result()
+    assert r_a.preemptions == 1
+    for fut, (pkt, q, _) in ((f_a, bulk), (f_c, urgent)):
+        ref = executor.cloud_generate_batch([pkt], [q])[0]
+        assert np.array_equal(fut.result().tokens, ref[-1])
+    st = engine.stats
+    assert st["sched_preemptions"] == 1
+    assert st["sched_resumed_served"] == 1
+    assert st["sched_tokens_replayed"] >= 1
+    engine.kv_pool.check_invariants()
+
+
+def test_rate_limited_operator_shed_before_edge_compute():
+    """An operator over its token bucket is rejected at the front door:
+    the future resolves ``failure="rejected"`` with zero transmissions
+    for the shed requests, and the telemetry attributes the reason."""
+    from repro.engine import QoSScheduler
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(),
+                         scheduler=QoSScheduler(rate_per_s=1.0, burst=1.0))
+    sess = engine.session("spammy")
+    rng = np.random.RandomState(0)
+    futs = [sess.submit(prompt="segment the person",
+                        images=_insight_images(rng),
+                        query=np.zeros((1, 4), np.int32), time_s=0.0)
+            for _ in range(3)]
+    engine.drain()
+    fails = [f.result().failure for f in futs]
+    assert fails == [None, "rejected", "rejected"]
+    assert all(any(e.kind == "rejected" for e in f.result().events)
+               for f in futs[1:])
+    st = engine.stats
+    assert st["rejected"] == 2
+    assert st["sched_rejected_rate_limit"] == 2
+    assert engine.transport.n_sent == 1  # shed before any transmission
+
+
+def test_bounded_queue_sheds_queue_full(executor):
+    """A full per-class pending queue sheds at enqueue (after transport,
+    before any prefill); everything that was admitted still serves
+    token-exact."""
+    from repro.engine import QoSScheduler
+    reqs = [r for r in _edge_requests(executor, 5, seed=71)
+            if r[2] is Intent.INSIGHT]   # 4 same-class requests
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=1, debug_invariants=True,
+                         scheduler=QoSScheduler(max_queue=1))
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    results = [f.result() for f in futs]
+    shed = [r for r in results if r.failure == "rejected"]
+    assert shed and engine.stats["sched_rejected_queue_full"] == len(shed)
+    for res, (pkt, q, _) in zip(results, reqs):
+        if res.failure is None:
+            ref = executor.cloud_generate_batch([pkt], [q])[0]
+            assert np.array_equal(res.tokens, ref[-1])
+    engine.kv_pool.check_invariants()
+
+
+def test_expired_pending_request_never_pays_prefill(executor):
+    """The admission-boundary deadline sweep: a request whose SLO
+    expired while queued resolves ``failure="deadline"`` without ever
+    calling the prefill — dead requests cost no cloud compute."""
+
+    class CountingExecutor:
+        def __init__(self, inner):
+            self._inner = inner
+            self.prefix_calls = 0
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def cloud_prefix(self, ctx, query):
+            self.prefix_calls += 1
+            return self._inner.cloud_prefix(ctx, query)
+
+    counting = CountingExecutor(executor)
+    engine = AveryEngine(lut=LUT, executor=counting, batching="inflight",
+                         max_batch=1, debug_invariants=True)
+    plain = engine.session("plain")
+    slo = engine.session("slo", requirements={
+        Intent.CONTEXT: DEFAULT_REQUIREMENTS[Intent.CONTEXT],
+        Intent.INSIGHT: dataclasses.replace(
+            DEFAULT_REQUIREMENTS[Intent.INSIGHT], max_latency_s=0.5)})
+    (pa, qa, ia), (pb, qb, ib), _, (pc, qc, ic), _ = \
+        _edge_requests(executor, 5, seed=81)
+    f_a = engine.submit_packet(pa, qa, ia, time_s=0.0, session=plain)
+    f_b = engine.submit_packet(pb, qb, ib, time_s=0.1, session=slo)
+    f_c = engine.submit_packet(pc, qc, ic, time_s=5.0, session=plain)
+    engine.drain()
+    assert f_b.result().failure == "deadline"
+    assert f_a.result().failure is None and f_c.result().failure is None
+    assert counting.prefix_calls == 2    # A and C only; B never prefilled
+    assert engine.stats["sched_expired_pending"] == 1
+    engine.kv_pool.check_invariants()

@@ -2,8 +2,8 @@
 ``max_prefixes`` (refcount-safe against live sharers), the
 ``kv_pages_peak`` high-water mark that sizes pools for speculative
 bursts, speculative grow/rollback, and a property test that random
-alloc/retain/release/put_prefix/release_operator interleavings never
-leak or double-free pages."""
+alloc/retain/release/put_prefix/release_operator/park/resume
+interleavings never leak or double-free pages."""
 import numpy as np
 import pytest
 
@@ -180,12 +180,13 @@ def test_pool_ops_never_leak_or_double_free(seed, n_ops):
     pool = _pool(page_size=4,
                  max_prefixes=rng.choice([None, 1, 2, 3]))
     held = []                 # [(ids, kind)] request-held references
-    slots = []                # [(prefix_ids, run)] admitted "slots"
+    slots = []                # [(key, prefix_ids, run)] admitted "slots"
+    parked = []               # preempted requests: page-free, key only
     n_prefix = 0
     for _ in range(n_ops):
         op = rng.choice(["alloc", "release", "retain", "put_prefix",
                          "release_operator", "lookup", "grow",
-                         "rollback", "admit", "cancel"])
+                         "rollback", "admit", "cancel", "park", "resume"])
         if op == "alloc":
             held.append((pool.alloc(rng.randint(1, 3)), "plain"))
         elif op == "release" and held:
@@ -222,10 +223,15 @@ def test_pool_ops_never_leak_or_double_free(seed, n_ops):
                 pool.rollback_to(run, keep)
                 if not run:
                     held.remove((run, "run"))
-        elif op == "admit":
+        elif op == "admit" or (op == "resume" and parked):
             # the InflightDecoder admission shape: a prefix reference
-            # (store hit retains, miss allocs + puts) plus a private run
-            key = (f"op{rng.randint(0, 2)}", f"p{rng.randint(0, 3)}")
+            # (store hit retains, miss allocs + puts) plus a private
+            # run. "resume" is the same shape driven by a parked
+            # request's key — a preempted request re-enters through
+            # ordinary admission, holding nothing in between.
+            key = (parked.pop(rng.randrange(len(parked)))
+                   if op == "resume"
+                   else (f"op{rng.randint(0, 2)}", f"p{rng.randint(0, 3)}"))
             entry = pool.lookup_prefix(key)
             if entry is None:
                 ids = pool.alloc(2)
@@ -234,16 +240,26 @@ def test_pool_ops_never_leak_or_double_free(seed, n_ops):
             else:
                 pool.retain(entry.page_ids)
             run = pool.alloc(1)
-            slots.append((list(entry.page_ids), run))
+            slots.append((key, list(entry.page_ids), run))
         elif op == "cancel" and slots:
             # the _release_slot / cancel path: prefix ref and private
             # run return together, mid-decode
-            ids, run = slots.pop(rng.randrange(len(slots)))
+            _, ids, run = slots.pop(rng.randrange(len(slots)))
             pool.release(ids)
             pool.release(run)
+        elif op == "park" and slots:
+            # the _park_slot preemption path: the private run rolls
+            # back to the prefix (token-exact resume replays from
+            # there) and the prefix reference drops; the parked
+            # request holds zero pages while it waits
+            key, ids, run = slots.pop(rng.randrange(len(slots)))
+            pool.rollback_to(run, 0)
+            pool.release(ids)
+            parked.append(key)
         _invariant(pool)
     # teardown: every request finishes, every operator leaves
-    for ids, run in slots:
+    # (parked requests hold no pages — nothing to return for them)
+    for _, ids, run in slots:
         pool.release(ids)
         pool.release(run)
     for ids, _ in held:

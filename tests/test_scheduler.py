@@ -1,0 +1,278 @@
+"""Scheduler unit contracts: QoS class mapping, weighted-fair stride
+arbitration, strict priority bands, idle catch-up, token-bucket rate
+limits, bounded-queue shed, preemption picking rules, FIFO equivalence,
+and the shared prototype/spawn telemetry surface."""
+import dataclasses
+from types import SimpleNamespace
+from typing import Optional
+
+import pytest
+
+from repro.core.intent import Intent
+from repro.engine import (QOS_LATENCY, QOS_THROUGHPUT, FifoScheduler,
+                          QoSScheduler, jain_index, qos_class)
+
+
+@dataclasses.dataclass
+class Item:
+    """The slice of ``_PendingRequest`` the scheduler contracts use."""
+    seq_id: int
+    intent: Intent
+    priority: int = 0
+    deadline: Optional[float] = None
+    t_enqueue: float = 0.0
+    queue_wait: float = 0.0
+    resumes: int = 0
+
+
+def _active(slot_specs):
+    """{slot: state} the way ``pick_preemption`` sees it: a request with
+    intent/priority/resumes plus the tokens generated so far."""
+    return {s: SimpleNamespace(
+        req=SimpleNamespace(intent=intent, priority=prio, resumes=resumes),
+        tokens=list(range(n_tokens)))
+        for s, (intent, prio, n_tokens, resumes) in slot_specs.items()}
+
+
+def _pop_all(sched, n, now=0.0):
+    out = []
+    for _ in range(n):
+        it = sched.pop_next(now)
+        if it is None:
+            break
+        out.append(it)
+    return out
+
+
+# ---- class mapping + fairness index ----
+
+
+def test_qos_class_mapping():
+    assert qos_class(Intent.CONTEXT) == QOS_LATENCY
+    assert qos_class(Intent.INSIGHT) == QOS_THROUGHPUT
+
+
+def test_jain_index_bounds():
+    assert jain_index([5, 5, 5, 5]) == pytest.approx(1.0)
+    assert jain_index([20, 0, 0, 0]) == pytest.approx(0.25)
+    assert jain_index([]) == 1.0
+
+
+# ---- FIFO scheduler: the default, behavior-preserving policy ----
+
+
+def test_fifo_is_arrival_order_and_never_rejects():
+    s = FifoScheduler()
+    items = [Item(i, Intent.INSIGHT if i % 2 else Intent.CONTEXT)
+             for i in range(6)]
+    assert all(s.enqueue(it, 0.0) is None for it in items)
+    assert [it.seq_id for it in _pop_all(s, 6)] == list(range(6))
+    assert s.admission_check("anyone", 0.0) is None
+    assert s.pick_preemption(_active({0: (Intent.INSIGHT, 0, 1, 0)}),
+                             1e9) is None
+
+
+def test_fifo_requeue_preempted_goes_to_front():
+    s = FifoScheduler()
+    s.enqueue(Item(1, Intent.INSIGHT), 0.0)
+    s.requeue_preempted(Item(9, Intent.INSIGHT), 0.0)
+    assert s.pop_next(0.0).seq_id == 9
+
+
+# ---- weighted-fair stride arbitration ----
+
+
+def test_stride_gives_weighted_share():
+    """Defaults (latency 2.0, throughput 1.0): over any backlogged
+    stretch the latency class gets 2/3 of the pops."""
+    s = QoSScheduler()
+    for i in range(30):
+        s.enqueue(Item(i, Intent.CONTEXT), 0.0)
+        s.enqueue(Item(100 + i, Intent.INSIGHT), 0.0)
+    popped = _pop_all(s, 30)
+    n_lat = sum(1 for it in popped if it.intent is Intent.CONTEXT)
+    assert n_lat == 20
+    # and the throughput class is never starved outright
+    assert any(it.intent is Intent.INSIGHT for it in popped[:3])
+
+
+def test_custom_weights_flip_the_share():
+    s = QoSScheduler(weights={QOS_LATENCY: 1.0, QOS_THROUGHPUT: 3.0})
+    for i in range(40):
+        s.enqueue(Item(i, Intent.CONTEXT), 0.0)
+        s.enqueue(Item(100 + i, Intent.INSIGHT), 0.0)
+    popped = _pop_all(s, 40)
+    n_thr = sum(1 for it in popped if it.intent is Intent.INSIGHT)
+    assert n_thr == 30
+
+
+def test_nonpositive_weight_rejected():
+    with pytest.raises(ValueError):
+        QoSScheduler(weights={QOS_LATENCY: 0.0, QOS_THROUGHPUT: 1.0})
+
+
+def test_idle_class_cannot_bank_credit():
+    """A class returning from idle is caught up to the backlog floor:
+    it must not repay its idle time with a monopolizing burst."""
+    s = QoSScheduler()
+    for i in range(20):
+        s.enqueue(Item(i, Intent.CONTEXT), 0.0)
+    _pop_all(s, 8)                      # throughput idle the whole time
+    for i in range(12):
+        s.enqueue(Item(100 + i, Intent.INSIGHT), 0.0)
+    nxt = _pop_all(s, 9)
+    n_thr = sum(1 for it in nxt if it.intent is Intent.INSIGHT)
+    assert n_thr == 3                   # its fair 1/3, not a catch-up burst
+
+
+# ---- strict priority bands ----
+
+
+def test_priority_band_pops_first_across_classes():
+    s = QoSScheduler()
+    s.enqueue(Item(1, Intent.CONTEXT, priority=0), 0.0)
+    s.enqueue(Item(2, Intent.INSIGHT, priority=2), 0.0)
+    s.enqueue(Item(3, Intent.INSIGHT, priority=0), 0.0)
+    assert s.pop_next(0.0).seq_id == 2  # the band outranks the class
+    assert s.pop_next(0.0).seq_id == 1
+
+
+def test_priority_within_class_skips_queue():
+    s = QoSScheduler()
+    s.enqueue(Item(1, Intent.INSIGHT, priority=0), 0.0)
+    s.enqueue(Item(2, Intent.INSIGHT, priority=1), 0.0)
+    assert s.pop_next(0.0).seq_id == 2
+
+
+# ---- token-bucket rate limits + bounded queue ----
+
+
+def test_token_bucket_sheds_and_refills():
+    s = QoSScheduler(rate_per_s=1.0, burst=2.0)
+    assert s.admission_check("op", 0.0) is None
+    assert s.admission_check("op", 0.0) is None
+    assert s.admission_check("op", 0.0) == "rate_limit"
+    assert s.telemetry.rejected_rate_limit == 1
+    assert s.admission_check("op", 1.0) is None   # refilled 1 token
+    assert s.admission_check("op", 1.0) == "rate_limit"
+
+
+def test_rate_override_targets_one_operator():
+    s = QoSScheduler(rate_overrides={"spam": (1.0, 1.0)})
+    for _ in range(5):
+        assert s.admission_check("polite", 0.0) is None
+    assert s.admission_check("spam", 0.0) is None
+    assert s.admission_check("spam", 0.0) == "rate_limit"
+
+
+def test_bounded_queue_sheds_per_class():
+    s = QoSScheduler(max_queue=2)
+    assert s.enqueue(Item(1, Intent.INSIGHT), 0.0) is None
+    assert s.enqueue(Item(2, Intent.INSIGHT), 0.0) is None
+    assert s.enqueue(Item(3, Intent.INSIGHT), 0.0) == "queue_full"
+    # the other class has its own bound
+    assert s.enqueue(Item(4, Intent.CONTEXT), 0.0) is None
+    assert s.telemetry.rejected_queue_full == 1
+
+
+# ---- preemption picking ----
+
+
+def test_urgent_latency_item_preempts_lowest_ranked_victim():
+    s = QoSScheduler(latency_patience_s=0.5)
+    s.enqueue(Item(7, Intent.CONTEXT, t_enqueue=0.0), 0.0)
+    active = _active({0: (Intent.INSIGHT, 0, 4, 0),
+                      1: (Intent.INSIGHT, 0, 1, 0),
+                      2: (Intent.CONTEXT, 0, 0, 0)})
+    pick = s.pick_preemption(active, now=1.0)
+    assert pick is not None
+    item, victim = pick
+    assert item.seq_id == 7
+    assert victim == 1                  # lowest rank, fewest tokens lost
+    assert len(s) == 0                  # the pick popped it
+
+
+def test_patient_item_does_not_preempt():
+    s = QoSScheduler(latency_patience_s=0.5)
+    s.enqueue(Item(7, Intent.CONTEXT, t_enqueue=0.9), 0.0)
+    active = _active({0: (Intent.INSIGHT, 0, 2, 0)})
+    assert s.pick_preemption(active, now=1.0) is None
+    assert len(s) == 1
+
+
+def test_deadline_at_risk_is_urgent_even_for_throughput():
+    s = QoSScheduler(preempt_slack_s=0.25, latency_patience_s=99.0)
+    s.enqueue(Item(7, Intent.INSIGHT, priority=1, deadline=1.1,
+                   t_enqueue=1.0), 1.0)
+    active = _active({0: (Intent.INSIGHT, 0, 2, 0)})
+    assert s.pick_preemption(active, now=1.0) is not None
+
+
+def test_victim_must_rank_strictly_below():
+    s = QoSScheduler(latency_patience_s=0.0)
+    s.enqueue(Item(7, Intent.CONTEXT, t_enqueue=0.0), 0.0)
+    # same rank (latency, prio 0) and higher rank (prio 1): no victim
+    active = _active({0: (Intent.CONTEXT, 0, 2, 0),
+                      1: (Intent.INSIGHT, 1, 2, 0)})
+    assert s.pick_preemption(active, now=10.0) is None
+
+
+def test_max_resumes_protects_thrashed_victim():
+    s = QoSScheduler(latency_patience_s=0.0, max_resumes=2)
+    s.enqueue(Item(7, Intent.CONTEXT, t_enqueue=0.0), 0.0)
+    active = _active({0: (Intent.INSIGHT, 0, 2, 2)})  # parked twice already
+    assert s.pick_preemption(active, now=10.0) is None
+
+
+def test_preempt_false_disables_picking():
+    s = QoSScheduler(preempt=False, latency_patience_s=0.0)
+    s.enqueue(Item(7, Intent.CONTEXT, t_enqueue=0.0), 0.0)
+    active = _active({0: (Intent.INSIGHT, 0, 2, 0)})
+    assert s.pick_preemption(active, now=10.0) is None
+
+
+def test_requeue_preempted_resumes_before_class_peers():
+    s = QoSScheduler()
+    s.enqueue(Item(1, Intent.INSIGHT), 0.0)
+    s.requeue_preempted(Item(9, Intent.INSIGHT, resumes=1), 0.0)
+    assert s.pop_next(0.0).seq_id == 9
+
+
+# ---- prototype/spawn split, telemetry, load surface ----
+
+
+def test_spawned_children_share_telemetry_and_buckets():
+    proto = QoSScheduler(rate_per_s=1.0, burst=1.0)
+    child = proto.spawn()
+    assert child.telemetry is proto.telemetry
+    # one fleet-wide bucket: the child's take drains the proto's view
+    assert proto.admission_check("op", 0.0) is None
+    assert child.admission_check("op", 0.0) == "rate_limit"
+    child.enqueue(Item(1, Intent.CONTEXT, t_enqueue=0.0), 0.0)
+    # prototype-level depth aggregates over children
+    assert proto.load()["queue_depth_latency"] == 1
+    it = child.pop_next(0.5)
+    child.note_admitted(it, 0.5)
+    assert it.queue_wait == pytest.approx(0.5)
+    assert proto.stats()["sched_admitted_latency"] == 1
+    assert proto.stats()["sched_wait_latency_p50_s"] == pytest.approx(0.5)
+
+
+def test_stats_surface_keys():
+    s = QoSScheduler()
+    st = s.stats()
+    for key in ("sched_preemptions", "sched_resumed_served",
+                "sched_tokens_replayed", "sched_rejected_rate_limit",
+                "sched_rejected_queue_full", "sched_expired_pending",
+                "sched_queue_depth_latency", "sched_queue_depth_throughput",
+                "sched_admitted_latency", "sched_wait_throughput_p95_s"):
+        assert key in st
+
+
+def test_remove_pulls_from_any_class_queue():
+    s = QoSScheduler()
+    s.enqueue(Item(1, Intent.CONTEXT), 0.0)
+    s.enqueue(Item(2, Intent.INSIGHT), 0.0)
+    assert s.remove(2)
+    assert not s.remove(2)
+    assert [it.seq_id for it in _pop_all(s, 2)] == [1]
