@@ -8,6 +8,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+echo "[ci_fast] averylint (static invariants + runtime sanitizer smoke)"
+# repo-aware lints first: recompile/host-sync/future/refcount/determinism
+# findings fail fast before the test suite spends minutes compiling, then
+# a short serve under the recompile + transfer sanitizers proves the
+# steady-state decode pump stays churn-free (see docs/analysis.md)
+python -m repro.analysis.lint src/
+python -m repro.analysis.sanitizers --smoke
 python -m pytest -q -m "not slow" "$@"
 echo "[ci_fast] engine smoke (microbatch + inflight)"
 python -m repro.launch.serve --duration 2 --smoke --max-batch 4

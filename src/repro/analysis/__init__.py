@@ -1,0 +1,24 @@
+"""averylint: repo-aware static analysis + runtime sanitizers.
+
+The static half (``python -m repro.analysis.lint src/``) runs five
+AST checkers over the tree — no imports, no jax required:
+
+  recompile    AV101/AV102  jit/pallas_call built in per-call paths
+  hostsync     AV201-AV203  host/device boundary discipline
+  futures      AV301/AV302  every RequestFuture resolves
+  refcount     AV401        PagePool acquire/release pairing
+  determinism  AV501-AV504  seeded paths stay replayable
+
+The runtime half (``repro.analysis.sanitizers``) complements it with
+hard budgets the static pass can't prove: a recompile sanitizer that
+counts jit cache growth across a steady-state decode window, and a
+transfer sanitizer wrapping ``jax.transfer_guard("disallow")`` around
+the pump. Both are engine knobs:
+``AveryEngine(debug_recompiles=True, debug_transfers=True)``.
+
+``sanitizers`` imports jax, so it is *not* re-exported here — the lint
+driver must stay importable on a box without the serving deps.
+"""
+from repro.analysis.model import Finding, ModuleInfo, RepoModel
+
+__all__ = ["Finding", "ModuleInfo", "RepoModel"]

@@ -1,0 +1,85 @@
+"""Baseline (grandfather) file for averylint.
+
+A baseline entry suppresses one finding by fingerprint —
+``code:path:symbol:message-hash`` — which survives line drift but not a
+rename or a message change, so a suppressed site that moves files or
+mutates resurfaces as *new*. Every entry must carry a ``reason``: the
+baseline is a list of debts with justifications, not a mute button.
+
+File format (checked in at the repo root as
+``.averylint-baseline.json``)::
+
+    {
+      "version": 1,
+      "entries": [
+        {"fingerprint": "AV501:...", "reason": "why this is OK"}
+      ]
+    }
+
+``repro.analysis.lint`` searches upward from the lint target for the
+file, reports baselined findings separately, exits nonzero only on new
+ones, and ``--write-baseline`` regenerates the file from the current
+findings (stamping ``reason: "TODO: justify"`` on new entries so the
+review catches them).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+from repro.analysis.model import Finding
+
+BASELINE_NAME = ".averylint-baseline.json"
+VERSION = 1
+
+
+def find_baseline(start: Path) -> Optional[Path]:
+    """Nearest ``.averylint-baseline.json`` at or above ``start``."""
+    node = start.resolve()
+    if node.is_file():
+        node = node.parent
+    for parent in [node, *node.parents]:
+        cand = parent / BASELINE_NAME
+        if cand.is_file():
+            return cand
+    return None
+
+
+def load(path: Path) -> Dict[str, str]:
+    """fingerprint -> reason."""
+    data = json.loads(path.read_text())
+    if data.get("version") != VERSION:
+        raise ValueError(f"{path}: unsupported baseline version "
+                         f"{data.get('version')!r}")
+    out: Dict[str, str] = {}
+    for entry in data.get("entries", []):
+        out[entry["fingerprint"]] = entry.get("reason", "")
+    return out
+
+
+def write(path: Path, findings: Iterable[Finding],
+          reasons: Optional[Dict[str, str]] = None) -> None:
+    """Regenerate the baseline from current findings, keeping reasons
+    for fingerprints that already had one."""
+    reasons = reasons or {}
+    entries: List[Dict[str, str]] = []
+    seen = set()
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+        if f.fingerprint in seen:
+            continue
+        seen.add(f.fingerprint)
+        entries.append({
+            "fingerprint": f.fingerprint,
+            "reason": reasons.get(f.fingerprint, "TODO: justify"),
+        })
+    path.write_text(json.dumps({"version": VERSION, "entries": entries},
+                               indent=2) + "\n")
+
+
+def split(findings: List[Finding], baselined: Dict[str, str]
+          ) -> "tuple[List[Finding], List[Finding]]":
+    """(new, grandfathered) partition of ``findings``."""
+    new = [f for f in findings if f.fingerprint not in baselined]
+    old = [f for f in findings if f.fingerprint in baselined]
+    return new, old

@@ -1,0 +1,157 @@
+"""Determinism lint (AV5xx): the simulation must replay bit-identically.
+
+Every bench in this repo compares policies on the *same* seeded mission
+(fault schedules from ``RandomState(seed)``, bandwidth traces, request
+streams). One wall-clock read or global-RNG draw in those paths and the
+A/B comparison is comparing different worlds. Scope: the engine,
+runtime, network, and data packages (``DETERMINISM_FRAGMENTS``) — the
+launch scripts may time themselves all they like.
+
+  * **AV501** — unseeded RNG: global-state draws (``np.random.rand``,
+    stdlib ``random.random``), or a ``RandomState()`` /
+    ``default_rng()`` constructed without a seed.
+  * **AV502** — wall clock: ``time.time/monotonic/perf_counter``,
+    ``datetime.now`` — mission time is the simulation's clock.
+  * **AV503** — iterating a set: Python sets hash-order their elements,
+    so ``for x in {…}`` visits them in an order that varies with
+    PYTHONHASHSEED for str/bytes contents. Order-independent reductions
+    (``min``/``max``/``sum``/``sorted`` over a set) are fine and not
+    flagged.
+  * **AV504** — ambient entropy: ``uuid.uuid1/4``, ``os.urandom``,
+    ``secrets.*``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.model import Finding, ModuleInfo, RepoModel, dotted
+
+CHECKER = "determinism"
+
+# rel-path fragments that define the seeded deterministic core
+DETERMINISM_FRAGMENTS = ("repro/engine/", "repro/runtime/",
+                         "repro/network/", "repro/data/",
+                         "repro/core/paging")
+
+_GLOBAL_NP_OK = {"RandomState", "default_rng", "Generator",
+                 "SeedSequence", "PRNGKey"}
+_CLOCK_CALLS = {"time.time", "time.monotonic", "time.perf_counter",
+                "time.process_time", "datetime.now", "datetime.utcnow",
+                "datetime.datetime.now", "datetime.datetime.utcnow"}
+_ENTROPY_CALLS = {"uuid.uuid1", "uuid.uuid4", "os.urandom"}
+_STDLIB_RANDOM_FNS = {"random", "randint", "randrange", "choice",
+                      "choices", "shuffle", "sample", "uniform",
+                      "gauss", "normalvariate", "seed"}
+
+
+def in_scope(rel: str) -> bool:
+    return any(f in rel for f in DETERMINISM_FRAGMENTS)
+
+
+def _symbol_for(mod: ModuleInfo, node: ast.AST) -> str:
+    best = "<module>"
+    best_span = None
+    for qual, fn in mod.functions.items():
+        n = fn.node
+        end = getattr(n, "end_lineno", n.lineno)
+        if n.lineno <= node.lineno <= end:
+            span = end - n.lineno
+            if best_span is None or span < best_span:
+                best, best_span = qual, span
+    return best
+
+
+def check(mod: ModuleInfo, repo: RepoModel) -> List[Finding]:
+    if not in_scope(mod.rel):
+        return []
+    findings: List[Finding] = []
+    stdlib_random = {a for a, m in mod.import_alias.items()
+                     if m == "random"}
+    stdlib_random |= {a for a, (m, n) in mod.from_imports.items()
+                      if m == "random" and n in _STDLIB_RANDOM_FNS}
+    secrets_aliases = {a for a, m in mod.import_alias.items()
+                       if m == "secrets"}
+    np_aliases = mod.numpy_aliases()
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            f = _check_call(mod, node, stdlib_random, secrets_aliases,
+                            np_aliases)
+            if f is not None:
+                findings.append(f)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            f = _check_set_iter(mod, node.iter, node)
+            if f is not None:
+                findings.append(f)
+        elif isinstance(node, ast.comprehension):
+            f = _check_set_iter(mod, node.iter, node.iter)
+            if f is not None:
+                findings.append(f)
+    return findings
+
+
+def _check_call(mod: ModuleInfo, node: ast.Call, stdlib_random,
+                secrets_aliases, np_aliases) -> Optional[Finding]:
+    name = dotted(node.func)
+    if name is None:
+        return None
+    parts = name.split(".")
+    head, tail = parts[0], parts[-1]
+
+    # np.random.<draw> on the global RNG
+    if (len(parts) >= 3 and head in np_aliases
+            and parts[1] == "random" and tail not in _GLOBAL_NP_OK):
+        return _f(mod, node, "AV501",
+                  f"{name}() draws from numpy's global RNG; thread a "
+                  "seeded RandomState through instead")
+    # RandomState() / default_rng() without a seed argument
+    if tail in ("RandomState", "default_rng") and not node.args \
+            and not node.keywords:
+        return _f(mod, node, "AV501",
+                  f"{tail}() without a seed is entropy-seeded; pass the "
+                  "mission seed")
+    # stdlib random
+    if head in stdlib_random and (len(parts) > 1
+                                  or tail in _STDLIB_RANDOM_FNS):
+        return _f(mod, node, "AV501",
+                  f"stdlib {name}() uses the global unseeded RNG")
+    # wall clock
+    if name in _CLOCK_CALLS or (len(parts) > 1
+                                and f"{parts[-2]}.{tail}"
+                                in _CLOCK_CALLS):
+        return _f(mod, node, "AV502",
+                  f"{name}() reads the wall clock; the simulation's "
+                  "clock is mission time (Request.time_s)")
+    # ambient entropy
+    if name in _ENTROPY_CALLS or head in secrets_aliases:
+        return _f(mod, node, "AV504",
+                  f"{name}() draws ambient entropy; derive ids from the "
+                  "seeded stream (request_id counters, prefix_digest)")
+    return None
+
+
+def _check_set_iter(mod: ModuleInfo, it: ast.AST,
+                    where: ast.AST) -> Optional[Finding]:
+    is_set = (isinstance(it, (ast.Set, ast.SetComp))
+              or (isinstance(it, ast.Call)
+                  and isinstance(it.func, ast.Name)
+                  and it.func.id in ("set", "frozenset"))
+              or (isinstance(it, ast.BinOp)
+                  and isinstance(it.op, (ast.Sub, ast.BitAnd, ast.BitOr))
+                  and any(isinstance(s, ast.Call)
+                          and isinstance(s.func, ast.Name)
+                          and s.func.id in ("set", "frozenset")
+                          for s in (it.left, it.right))))
+    if not is_set:
+        return None
+    return _f(mod, where, "AV503",
+              "iterating a set: hash order varies with PYTHONHASHSEED; "
+              "sort it (or reduce with min/max) before iterating")
+
+
+def _f(mod: ModuleInfo, node: ast.AST, code: str,
+       message: str) -> Finding:
+    return Finding(code=code, checker=CHECKER, path=mod.rel,
+                   line=node.lineno, col=node.col_offset,
+                   symbol=_symbol_for(mod, node), message=message)

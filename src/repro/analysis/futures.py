@@ -1,0 +1,192 @@
+"""Future-resolution checker (AV3xx): every ``RequestFuture`` resolves.
+
+The engine's hardest liveness contract — the one ``--chaos`` asserts
+dynamically — is that a submitted request always terminates: every
+``RequestFuture`` eventually sees ``set_result``, on the served path,
+the failure-taxonomy paths, *and* exception unwinds. Two static rules
+approximate it:
+
+  * **AV301** — a function constructs a ``RequestFuture`` but the
+    handle neither escapes (stored into an attribute/subscript table
+    like ``self._futures[rid] = fut``, returned, or passed onward) nor
+    is resolved locally. A future nobody holds is a request nobody can
+    finish.
+  * **AV302** — a ``try`` whose body works on a held future has an
+    ``except`` handler that neither resolves the future, re-raises, nor
+    delegates to a fail helper (``_fail*`` / ``_cloud_failed`` /
+    ``_send_failed`` / ``_reject*`` / ``_cancel*`` / ``_finish*``).
+    Swallowing the exception leaks the request: the caller's
+    ``result()`` drains forever.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.model import (Finding, FunctionInfo, ModuleInfo,
+                                  RepoModel, dotted)
+
+CHECKER = "futures"
+
+FUTURE_TYPES = {"RequestFuture"}
+RESOLVER_METHODS = {"set_result", "set_exception", "resolve", "cancel"}
+FAIL_HELPER_PREFIXES = ("_fail", "_cloud_failed", "_send_failed",
+                        "_reject", "_cancel", "_finish", "_park")
+
+
+def _constructs_future(node: ast.AST) -> bool:
+    """Is this expression a ``RequestFuture(...)`` construction?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted(sub.func)
+            if name and name.split(".")[-1] in FUTURE_TYPES:
+                return True
+    return False
+
+
+def _future_names(fn: FunctionInfo) -> Set[str]:
+    """Local names bound to a future: constructed, annotated as
+    ``RequestFuture``, or fetched from a ``*futures*`` table."""
+    names: Set[str] = set()
+    node = fn.node
+    if not isinstance(node, ast.Lambda):
+        for arg in (node.args.posonlyargs + node.args.args
+                    + node.args.kwonlyargs):
+            ann = arg.annotation
+            if ann is not None:
+                d = dotted(ann) or (ann.value if isinstance(
+                    ann, ast.Constant) else None)
+                if d and str(d).split(".")[-1] in FUTURE_TYPES:
+                    names.add(arg.arg)
+    for stmt in fn.body_nodes():
+        if not isinstance(stmt, ast.Assign):
+            continue
+        targets = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+        if not targets:
+            continue
+        if _constructs_future(stmt.value):
+            names.update(targets)
+        elif isinstance(stmt.value, ast.Subscript):
+            base = dotted(stmt.value.value)
+            if base and "futures" in base.split(".")[-1]:
+                names.update(targets)
+    return names
+
+
+def _touches(node: ast.AST, names: Set[str]) -> bool:
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(node))
+
+
+def _resolves(node: ast.AST, names: Set[str]) -> bool:
+    """Does this subtree call a resolver method on a held future?"""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr in RESOLVER_METHODS
+                and isinstance(sub.func.value, ast.Name)
+                and sub.func.value.id in names):
+            return True
+    return False
+
+
+def _calls_fail_helper(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted(sub.func)
+            if name and name.split(".")[-1].startswith(
+                    FAIL_HELPER_PREFIXES):
+                return True
+    return False
+
+
+def _escapes(fn: FunctionInfo, names: Set[str]) -> Set[str]:
+    """Subset of ``names`` that escape the function: stored into an
+    attribute/subscript slot, returned, or passed as a call argument."""
+    out: Set[str] = set()
+    for node in fn.body_nodes():
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, (ast.Attribute, ast.Subscript))
+                   for t in node.targets):
+                out |= {n.id for n in ast.walk(node.value)
+                        if isinstance(n, ast.Name) and n.id in names}
+        elif isinstance(node, ast.Return) and node.value is not None:
+            out |= {n.id for n in ast.walk(node.value)
+                    if isinstance(n, ast.Name) and n.id in names}
+        elif isinstance(node, ast.Call):
+            for arg in list(node.args) + [kw.value for kw in
+                                          node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in names:
+                    out.add(arg.id)
+    return out
+
+
+def check(mod: ModuleInfo, repo: RepoModel) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in sorted(mod.functions.items()):
+        if isinstance(fn.node, ast.Lambda):
+            continue
+        names = _future_names(fn)
+        if not names:
+            continue
+        findings.extend(_check_constructed(mod, fn, names))
+        findings.extend(_check_unwinds(mod, fn, names))
+    return findings
+
+
+def _check_constructed(mod: ModuleInfo, fn: FunctionInfo,
+                       names: Set[str]) -> List[Finding]:
+    """AV301 on futures this function itself constructs."""
+    constructed: Set[str] = set()
+    line_of = {}
+    for stmt in fn.body_nodes():
+        if isinstance(stmt, ast.Assign) and _constructs_future(stmt.value):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    constructed.add(t.id)
+                    line_of[t.id] = stmt.lineno
+    if not constructed:
+        return []
+    escaped = _escapes(fn, constructed)
+    resolved = {n for n in constructed
+                if _resolves(fn.node, {n})}
+    leaked = sorted(constructed - escaped - resolved)
+    return [Finding(
+        code="AV301", checker=CHECKER, path=mod.rel,
+        line=line_of[n], col=0, symbol=fn.qualname,
+        message=(f"RequestFuture '{n}' is constructed but neither stored "
+                 "in a futures table, returned, nor resolved — no path "
+                 "can ever finish this request"))
+        for n in leaked]
+
+
+def _check_unwinds(mod: ModuleInfo, fn: FunctionInfo,
+                   names: Set[str]) -> List[Finding]:
+    """AV302 on try/except blocks that touch a held future."""
+    findings: List[Finding] = []
+    for node in fn.body_nodes():
+        if not isinstance(node, ast.Try):
+            continue
+        body_touches = any(_touches(s, names) for s in node.body)
+        if not body_touches:
+            continue
+        # a finally that resolves/delegates covers every handler
+        final = ast.Module(body=node.finalbody, type_ignores=[])
+        if node.finalbody and (_resolves(final, names)
+                               or _calls_fail_helper(final)):
+            continue
+        for handler in node.handlers:
+            h = ast.Module(body=handler.body, type_ignores=[])
+            if (_resolves(h, names) or _calls_fail_helper(h)
+                    or any(isinstance(s, ast.Raise)
+                           for s in ast.walk(h))):
+                continue
+            findings.append(Finding(
+                code="AV302", checker=CHECKER, path=mod.rel,
+                line=handler.lineno, col=handler.col_offset,
+                symbol=fn.qualname,
+                message=("except handler swallows an exception on a path "
+                         "holding a RequestFuture without resolving it, "
+                         "re-raising, or calling a fail helper — the "
+                         "request can leak unresolved")))
+    return findings

@@ -1,0 +1,188 @@
+"""Host-sync lint (AV2xx): host/device boundary discipline.
+
+Two contracts from the engine arc:
+
+  * **AV201** — the host-only scheduling modules stay pure Python.
+    ``engine/scheduler.py``, ``engine/policy.py``, ``engine/faults.py``
+    run inside the pump loop between device steps; a ``jnp`` import
+    there invites device work (and implicit transfers) onto the
+    scheduling path. Any jax import or ``jnp.*`` use in those files is
+    flagged.
+  * **AV202** — host-sync primitives inside traced code:
+    ``float()/int()/bool()`` on a traced value, ``.item()``,
+    ``np.asarray()/np.array()``. Under ``jax.jit`` each of these forces
+    a device→host readback mid-trace (or a tracer error at runtime).
+    Static shapes are exempt: ``int(x.shape[0])``, ``len(x)``,
+    ``x.ndim`` and friends are Python values during tracing.
+  * **AV203** — ``if``/``while`` predicated on device values inside
+    traced code (``if jnp.any(mask):``): control flow on a tracer is a
+    concretisation error; use ``jnp.where`` / ``lax.cond``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.model import (Finding, FunctionInfo, ModuleInfo,
+                                  RepoModel, dotted)
+
+CHECKER = "hostsync"
+
+# rel-path suffixes that must stay free of jax (pure-Python host path)
+HOST_ONLY_SUFFIXES = (
+    "engine/scheduler.py",
+    "engine/policy.py",
+    "engine/faults.py",
+)
+
+_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+_SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def is_host_only(rel: str) -> bool:
+    return rel.endswith(HOST_ONLY_SUFFIXES)
+
+
+def check(mod: ModuleInfo, repo: RepoModel) -> List[Finding]:
+    findings: List[Finding] = []
+    if is_host_only(mod.rel):
+        findings.extend(_check_host_only(mod))
+    for fn in repo.traced_functions(mod):
+        findings.extend(_check_traced_fn(mod, fn))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# AV201: jax in host-only modules
+# ---------------------------------------------------------------------------
+
+
+def _check_host_only(mod: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        what: Optional[str] = None
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "jax" or alias.name.startswith("jax."):
+                    what = f"import {alias.name}"
+        elif isinstance(node, ast.ImportFrom):
+            m = node.module or ""
+            if m == "jax" or m.startswith("jax."):
+                what = f"from {m} import ..."
+        if what is not None:
+            findings.append(Finding(
+                code="AV201", checker=CHECKER, path=mod.rel,
+                line=node.lineno, col=node.col_offset, symbol="<module>",
+                message=(f"{what} in a host-only scheduling module; "
+                         "scheduler/policy/faults run on the pump's host "
+                         "path and must stay pure Python (numpy is fine)")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# AV202 / AV203: host syncs inside traced regions
+# ---------------------------------------------------------------------------
+
+
+def _shape_names(fn: FunctionInfo) -> set:
+    """Local names bound from shape tuples (``B, T, pp = x.shape``) —
+    Python-static during tracing."""
+    names: set = set()
+    for node in fn.body_nodes():
+        if not isinstance(node, ast.Assign):
+            continue
+        value = node.value
+        while isinstance(value, ast.Subscript):
+            value = value.value
+        if not (isinstance(value, ast.Attribute)
+                and value.attr in _SHAPE_ATTRS):
+            continue
+        for t in node.targets:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+    return names
+
+
+def _is_static_arg(arg: ast.AST, static_names: set = frozenset()) -> bool:
+    """Is this expression a Python-static value during tracing?"""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Name):
+        return arg.id in static_names
+    if isinstance(arg, ast.Call):
+        name = dotted(arg.func)
+        if name in ("len", "round", "min", "max", "abs"):
+            return all(_is_static_arg(a, static_names)
+                       or isinstance(a, ast.Name) for a in arg.args)
+    # x.shape / x.ndim / x.shape[i] / math.prod(x.shape) fragments
+    node = arg
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+        return True
+    if isinstance(arg, ast.BinOp):
+        return (_is_static_arg(arg.left, static_names)
+                and _is_static_arg(arg.right, static_names))
+    return False
+
+
+def _device_test(test: ast.AST, mod: ModuleInfo) -> Optional[str]:
+    """Does this predicate read a device value (``jnp.any(x)`` etc.)?"""
+    aliases = mod.jax_aliases()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name and name.split(".")[0] in aliases:
+                return name
+    return None
+
+
+def _check_traced_fn(mod: ModuleInfo, fn: FunctionInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    np_aliases = mod.numpy_aliases()
+    static_names = _shape_names(fn)
+    for node in fn.body_nodes():
+        if isinstance(node, ast.Call):
+            func = node.func
+            # .item() — the canonical blocking readback
+            if isinstance(func, ast.Attribute) and func.attr == "item":
+                findings.append(_f(mod, fn, node, (
+                    ".item() inside a traced region forces a device→host "
+                    "sync; keep the value on device or move the readback "
+                    "outside jit")))
+                continue
+            # float(x)/int(x)/bool(x) on a non-static value
+            if (isinstance(func, ast.Name)
+                    and func.id in _SYNC_BUILTINS and node.args
+                    and not _is_static_arg(node.args[0], static_names)):
+                findings.append(_f(mod, fn, node, (
+                    f"{func.id}() on a traced value concretises the "
+                    "tracer (host sync); shape-derived ints are fine, "
+                    "array values are not")))
+                continue
+            # np.asarray / np.array pulls the tracer to host
+            name = dotted(func)
+            if name and "." in name:
+                base, attr = name.rsplit(".", 1)
+                if base in np_aliases and attr in ("asarray", "array"):
+                    findings.append(_f(mod, fn, node, (
+                        f"{name}() inside a traced region copies device "
+                        "data to host; use jnp equivalents under jit")))
+        elif isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            hit = _device_test(node.test, mod)
+            if hit is not None:
+                findings.append(Finding(
+                    code="AV203", checker=CHECKER, path=mod.rel,
+                    line=node.lineno, col=node.col_offset,
+                    symbol=fn.qualname,
+                    message=(f"branching on a device value ({hit}) inside "
+                             "a traced region; use jnp.where or lax.cond")))
+    return findings
+
+
+def _f(mod: ModuleInfo, fn: FunctionInfo, node: ast.AST,
+       message: str) -> Finding:
+    return Finding(code="AV202", checker=CHECKER, path=mod.rel,
+                   line=node.lineno, col=node.col_offset,
+                   symbol=fn.qualname, message=message)

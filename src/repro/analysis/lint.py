@@ -1,0 +1,154 @@
+"""averylint driver: ``python -m repro.analysis.lint src/``.
+
+Parses every ``.py`` under the targets (no imports, no execution —
+``jax`` need not be installed), builds the shared :class:`RepoModel`,
+runs the five checkers, filters through the checked-in baseline, and
+exits nonzero on any *new* finding.
+
+Usage::
+
+    python -m repro.analysis.lint src/                 # human output
+    python -m repro.analysis.lint --json src/          # machine output
+    python -m repro.analysis.lint --write-baseline src/
+    python -m repro.analysis.lint --no-baseline src/   # everything
+
+The baseline is discovered by walking upward from the first target to
+the nearest ``.averylint-baseline.json`` (``--baseline PATH``
+overrides); finding paths/fingerprints are relative to that file's
+directory so the same baseline works from any CWD.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import (baseline as baseline_mod, determinism,
+                            futures, hostsync, recompile, refcount)
+from repro.analysis.model import (Finding, ModuleInfo, RepoModel,
+                                  parse_module)
+
+CHECKERS: List[Tuple[str, Callable[..., List[Finding]]]] = [
+    ("recompile", recompile.check),
+    ("hostsync", hostsync.check),
+    ("futures", futures.check),
+    ("refcount", refcount.check),
+    ("determinism", determinism.check),
+]
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+def collect_files(targets: Sequence[Path]) -> List[Path]:
+    files: List[Path] = []
+    for target in targets:
+        if target.is_file() and target.suffix == ".py":
+            files.append(target)
+        elif target.is_dir():
+            for p in sorted(target.rglob("*.py")):
+                if not any(part in _SKIP_DIRS or part.startswith(".")
+                           for part in p.parts):
+                    files.append(p)
+    return files
+
+
+def build_model(files: Sequence[Path], root: Path) -> RepoModel:
+    modules: List[ModuleInfo] = []
+    for path in files:
+        try:
+            rel = path.resolve().relative_to(root).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        mod = parse_module(path, rel)
+        if mod is not None:
+            modules.append(mod)
+    return RepoModel(modules)
+
+
+def run_checkers(repo: RepoModel,
+                 only: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for name, check in CHECKERS:
+        if only and name not in only:
+            continue
+        for rel in sorted(repo.modules):
+            findings.extend(check(repo.modules[rel], repo))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings
+
+
+def lint_paths(targets: Sequence[Path], root: Path,
+               only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Library entry point (the self-run test uses this)."""
+    return run_checkers(build_model(collect_files(targets), root),
+                        only=only)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-aware static analysis for the AVERY engine")
+    ap.add_argument("targets", nargs="+", type=Path)
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="explicit baseline file (default: search "
+                         "upward from the first target)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline; report everything as new")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings")
+    ap.add_argument("--checker", action="append", default=None,
+                    choices=[name for name, _ in CHECKERS],
+                    help="run only this checker (repeatable)")
+    args = ap.parse_args(argv)
+
+    for t in args.targets:
+        if not t.exists():
+            print(f"averylint: no such path: {t}", file=sys.stderr)
+            return 2
+
+    bl_path = args.baseline
+    if bl_path is None and not args.no_baseline:
+        bl_path = baseline_mod.find_baseline(args.targets[0])
+    root = (bl_path.resolve().parent if bl_path is not None
+            else Path.cwd())
+    baselined: Dict[str, str] = {}
+    if bl_path is not None and bl_path.is_file() and not args.no_baseline:
+        baselined = baseline_mod.load(bl_path)
+
+    findings = lint_paths(args.targets, root, only=args.checker)
+
+    if args.write_baseline:
+        out = bl_path or (root / baseline_mod.BASELINE_NAME)
+        baseline_mod.write(out, findings, reasons=baselined)
+        print(f"averylint: wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} to {out}")
+        return 0
+
+    new, old = baseline_mod.split(findings, baselined)
+
+    if args.as_json:
+        print(json.dumps({
+            "new": [f.as_dict() for f in new],
+            "baselined": [f.as_dict() for f in old],
+            "counts": {"new": len(new), "baselined": len(old)},
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        if old:
+            print(f"averylint: {len(old)} baselined finding"
+                  f"{'' if len(old) == 1 else 's'} suppressed")
+        if new:
+            print(f"averylint: {len(new)} new finding"
+                  f"{'' if len(new) == 1 else 's'}")
+        else:
+            print("averylint: clean")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""Refcount-discipline checker (AV4xx): paged-KV ownership.
+
+``PagePool`` pages are manually refcounted: ``alloc`` hands out pages at
+refcount 1, ``retain`` bumps a shared prefix's count, and exactly one
+``release`` per acquisition keeps ``check_invariants()`` true. The
+decoder's discipline (PR 3/6) is that every acquisition is either
+
+  * guarded — a ``try`` on the same function whose handler or
+    ``finally`` releases the pages (or delegates to one of the
+    decoder's unwind helpers, which release as part of failing/parking
+    the slot), or
+  * transferred — the page list escapes into an owner that carries the
+    release obligation (``_SlotState(private_ids=...)``, an attribute /
+    table store, a return).
+
+**AV401** flags a ``pool.alloc(...)`` / ``pool.retain(...)`` that is
+neither: a bare acquisition where the first exception between it and
+the slot hand-off leaks pages until the pool's invariant check trips in
+some later test. ``PagePool``'s own internals (eviction, prefix
+insertion) and the unwind helpers themselves are exempt — they *are*
+the discipline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.model import (Finding, FunctionInfo, ModuleInfo,
+                                  RepoModel, dotted)
+
+CHECKER = "refcount"
+
+ACQUIRE_METHODS = {"alloc", "retain"}
+RELEASE_METHODS = {"release", "release_operator"}
+# functions that release as their contract — acquisitions and releases
+# inside them are the unwind mechanism, not a leak
+UNWIND_HELPERS = ("_fail_step", "_park_slot", "_release_slot",
+                  "_finish_slot", "release", "release_operator", "close")
+POOL_CLASSES = {"PagePool"}
+
+
+def _pool_call(node: ast.AST) -> Optional[str]:
+    """'alloc'/'retain' if this is a pool acquisition call, else None."""
+    if (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in ACQUIRE_METHODS):
+        base = dotted(node.func.value)
+        if base and "pool" in base.split(".")[-1].lower():
+            return node.func.attr
+    return None
+
+
+def _releases_or_unwinds(stmts: List[ast.stmt]) -> bool:
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in RELEASE_METHODS):
+                return True
+            name = dotted(node.func)
+            if name and name.split(".")[-1] in UNWIND_HELPERS:
+                return True
+    return False
+
+
+def _guarded(fn: FunctionInfo) -> bool:
+    """Does any try in this function release/unwind on its exception or
+    finally path? (The decoder's idiom: acquire, then a try whose
+    ``except … release … raise`` unwinds everything acquired so far.)"""
+    for node in fn.body_nodes():
+        if isinstance(node, ast.Try):
+            if _releases_or_unwinds(node.finalbody):
+                return True
+            for handler in node.handlers:
+                if _releases_or_unwinds(handler.body):
+                    return True
+    return False
+
+
+def _escaping_names(fn: FunctionInfo) -> Set[str]:
+    """Names handed to a new owner: attribute/subscript stores
+    (``self.active[slot] = _SlotState(private_ids=private)``) or
+    returns. A plain call argument is NOT an escape — passing pages to
+    a helper doesn't transfer the release obligation."""
+    out: Set[str] = set()
+    for node in fn.body_nodes():
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, (ast.Attribute, ast.Subscript))
+                   for t in node.targets):
+                out |= {n.id for n in ast.walk(node.value)
+                        if isinstance(n, ast.Name)}
+        elif isinstance(node, ast.Return) and node.value is not None:
+            out |= {n.id for n in ast.walk(node.value)
+                    if isinstance(n, ast.Name)}
+    return out
+
+
+def check(mod: ModuleInfo, repo: RepoModel) -> List[Finding]:
+    findings: List[Finding] = []
+    for qual, fn in sorted(mod.functions.items()):
+        if fn.class_name in POOL_CLASSES:
+            continue                     # the pool's own bookkeeping
+        if fn.name in UNWIND_HELPERS:
+            continue                     # the unwind mechanism itself
+        acquisitions = [(node, kind) for node in fn.body_nodes()
+                        if (kind := _pool_call(node)) is not None]
+        if not acquisitions:
+            continue
+        if _guarded(fn):
+            continue
+        escaping = _escaping_names(fn)
+        for node, kind in acquisitions:
+            if kind == "alloc" and _result_escapes(fn, node, escaping):
+                continue
+            findings.append(Finding(
+                code="AV401", checker=CHECKER, path=mod.rel,
+                line=node.lineno, col=node.col_offset, symbol=fn.qualname,
+                message=(f"pool.{kind}() without an unwind-safe release: "
+                         "no try/finally-or-except release, no unwind "
+                         "helper, and the pages don't escape to an owner "
+                         "— an exception here leaks refcounts")))
+    return findings
+
+
+def _result_escapes(fn: FunctionInfo, call: ast.Call,
+                    escaping: Set[str]) -> bool:
+    """Is the alloc's result bound to a name that escapes to an owner?"""
+    for node in fn.body_nodes():
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(n is call for n in ast.walk(node.value)):
+            continue
+        names = {t.id for t in node.targets if isinstance(t, ast.Name)}
+        if names & escaping:
+            return True
+    return False

@@ -119,13 +119,16 @@ def evaluate_insight(pcfg: LISAPipelineConfig, params: dict,
     rng = np.random.RandomState(seed)
     fwd = jax.jit(lambda p, bp, img, q: vlm.insight_forward(
         p, pcfg, img, q, bn_params=bp))
+    # built once outside the loop: a fresh jit(lambda) per iteration is
+    # a new function identity, i.e. a recompile every batch (AV101)
+    fwd_raw = jax.jit(lambda p, img, q: vlm.insight_forward(
+        p, pcfg, img, q))
     inters, unions, gious = [], [], []
     for _ in range(batches):
         b = _to_jnp(floodseg.make_batch(rng, batch_size, "segment",
                                         augment=False))
         if bn_params is None:
-            ml, _ = jax.jit(lambda p, img, q: vlm.insight_forward(
-                p, pcfg, img, q))(params, b["images"], b["query"])
+            ml, _ = fwd_raw(params, b["images"], b["query"])
         else:
             ml, _ = fwd(params, bn_params, b["images"], b["query"])
         pred = (np.asarray(ml) > 0).astype(np.float64)

@@ -115,7 +115,9 @@ class AveryEngine:
                  mesh: Any = None,
                  retry: Optional[RetryPolicy] = None,
                  scheduler: Any = None,
-                 debug_invariants: bool = False):
+                 debug_invariants: bool = False,
+                 debug_recompiles: bool = False,
+                 debug_transfers: bool = False):
         """``speculative`` (in-flight batching only): ``True`` enables
         Context-stream draft + paged multi-token verify with defaults,
         an int sets ``draft_tokens``, a ``SpeculativeConfig`` sets
@@ -140,7 +142,15 @@ class AveryEngine:
         fleet-wide, each in-flight decoder gets a ``spawn()``.
         ``debug_invariants`` audits the KV pool
         (``PagePool.check_invariants``) after every pump/drain/
-        cancellation — cheap, but meant for tests and chaos runs."""
+        cancellation — cheap, but meant for tests and chaos runs.
+        ``debug_recompiles`` attaches a
+        :class:`repro.analysis.sanitizers.RecompileSanitizer`: call
+        ``arm_sanitizers()`` after warmup and every later pump/drain
+        raises ``RecompileBudgetError`` if steady state compiled a new
+        trace. ``debug_transfers`` wraps each in-flight decode
+        pump/drain in ``jax.transfer_guard("disallow")`` — any implicit
+        device↔host transfer on the decode path raises (explicit
+        ``jnp.asarray`` stays allowed). See docs/analysis.md."""
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
         self.lut = lut
@@ -201,6 +211,11 @@ class AveryEngine:
         self.scheduler_proto = scheduler if scheduler is not None \
             else FifoScheduler()
         self.debug_invariants = debug_invariants
+        self.debug_transfers = debug_transfers
+        self._recompile_sanitizer = None
+        if debug_recompiles:
+            from repro.analysis.sanitizers import RecompileSanitizer
+            self._recompile_sanitizer = RecompileSanitizer(self)
         # mission-clock watermark: the latest time the engine has seen
         # (submissions, deliveries, retry backoffs). Deadline sweeps
         # cancel in-flight requests the watermark has passed.
@@ -685,10 +700,12 @@ class AveryEngine:
         if self._scheduler is not None:
             for res in self._scheduler.step_ready():
                 self._resolve_scheduled(res)
-        for dec in self._inflight.values():
-            dec.pump(1)
+        with self._transfer_guard():
+            for dec in self._inflight.values():
+                dec.pump(1)
         if self.debug_invariants:
             self.kv_pool.check_invariants()
+        self.check_sanitizers()
 
     def drain(self, release_operator: Optional[str] = None
               ) -> List[Response]:
@@ -707,7 +724,8 @@ class AveryEngine:
             for res in self._scheduler.drain():
                 self._resolve_scheduled(res)
         for qlen, dec in list(self._inflight.items()):
-            dec.drain()
+            with self._transfer_guard():
+                dec.drain()
             # retire the idle decoder: fold its counters into the engine
             # and drop it so per-qlen decoders don't accumulate forever
             steps, slots = self._retired_inflight
@@ -731,7 +749,33 @@ class AveryEngine:
             self.release_prefixes(release_operator)
         if self.debug_invariants:
             self.kv_pool.check_invariants()
+        self.check_sanitizers()
         return out
+
+    # ---- runtime sanitizers (repro.analysis.sanitizers) ----
+
+    def _transfer_guard(self):
+        """``jax.transfer_guard('disallow')`` around the decode pump
+        when ``debug_transfers`` is on; a no-op context otherwise."""
+        from repro.analysis.sanitizers import transfer_guard_ctx
+        return transfer_guard_ctx(self.debug_transfers)
+
+    def arm_sanitizers(self) -> Optional[int]:
+        """Snapshot the compile-cache census after warmup. From here on
+        every pump/drain asserts a zero-recompile budget (requires
+        ``debug_recompiles=True``; returns the trace count at arm, or
+        None when the sanitizer is off)."""
+        if self._recompile_sanitizer is None:
+            return None
+        return self._recompile_sanitizer.arm()
+
+    def check_sanitizers(self, budget: int = 0) -> None:
+        """Raise ``RecompileBudgetError`` if steady state compiled more
+        than ``budget`` new traces since ``arm_sanitizers()``. No-op
+        until armed."""
+        san = self._recompile_sanitizer
+        if san is not None and san.armed_at is not None:
+            san.check(budget)
 
     def release_prefixes(self, operator_id: str) -> int:
         """Free one operator's cached prefix pages (their store pin —
@@ -909,6 +953,12 @@ class AveryEngine:
                 out.update(self._merged_spec_stats().as_dict())
         if self.executor is not None:
             out["compiled_stages"] = self.executor.num_compiled_stages
+        if self._recompile_sanitizer is not None:
+            out["compiled_traces"] = \
+                self._recompile_sanitizer.compile_count()
+            if self._recompile_sanitizer.armed_at is not None:
+                out["new_compiles_since_arm"] = \
+                    self._recompile_sanitizer.new_compiles()
         if self.mesh is not None:
             out["mesh_devices"] = self.mesh.size
             out["model_shards"] = getattr(self.executor, "model_shards", 1)

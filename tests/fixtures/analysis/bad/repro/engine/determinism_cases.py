@@ -1,0 +1,31 @@
+"""averylint fixture: determinism positives (AV501-AV504)."""
+import os
+import random
+import time
+import uuid
+
+import numpy as np
+
+
+def jitter():
+    return np.random.rand() * random.random()    # AV501 x2: global RNGs
+
+
+def unseeded():
+    rng = np.random.RandomState()                # AV501: entropy-seeded
+    return rng.rand()
+
+
+def stamp():
+    return time.time()                           # AV502: wall clock
+
+
+def walk_slots(slots):
+    out = []
+    for s in set(slots):                         # AV503: hash order
+        out.append(s)
+    return out
+
+
+def fresh_id():
+    return uuid.uuid4().hex + os.urandom(4).hex()  # AV504 x2: entropy

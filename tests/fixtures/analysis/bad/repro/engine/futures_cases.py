@@ -1,0 +1,23 @@
+"""averylint fixture: future-resolution positives (AV301/AV302)."""
+from repro.engine.api import RequestFuture, Response
+
+
+class LeakyEngine:
+    def __init__(self):
+        self._futures = {}
+
+    def submit_dropped(self, request):
+        fut = RequestFuture(request, self)   # AV301: never stored,
+        fut.emit("queued")                   # returned, or resolved
+        return request.request_id
+
+    def pump_swallows(self, rid):
+        fut = self._futures[rid]
+        try:
+            fut.emit("serving")
+            self._serve(fut)
+        except RuntimeError:                 # AV302: swallowed — the
+            pass                             # request leaks unresolved
+
+    def _serve(self, fut):
+        fut.set_result(Response(request_id=0, operator_id="", intent=None))

@@ -1,0 +1,26 @@
+"""averylint fixture: recompile checker positives (AV101/AV102)."""
+import jax
+import jax.numpy as jnp
+
+
+def per_request_jit(x):              # AV101: fresh traced wrapper per call
+    fn = jax.jit(lambda v: v * 2)
+    return fn(x)
+
+
+def immediate_invoke_in_loop(xs):    # AV101: new lambda identity per iter
+    out = []
+    for x in xs:
+        out.append(jax.jit(lambda v: jnp.tanh(v))(x))
+    return out
+
+
+def bare_expression(x):              # AV101: result not even bound
+    jax.jit(lambda v: v + 1)
+    return x
+
+
+class Churner:
+    def pump(self, qlen):            # AV102: captures per-call qlen in an
+        self._fn = jax.jit(lambda v: v[:qlen])   # unkeyed attribute slot
+        return self._fn

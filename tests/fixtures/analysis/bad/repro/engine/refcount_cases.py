@@ -1,0 +1,17 @@
+"""averylint fixture: refcount-discipline positives (AV401)."""
+
+
+class LeakyDecoder:
+    def __init__(self, pool):
+        self.pool = pool
+
+    def admit_bare_alloc(self, n, entry):
+        ids = self.pool.alloc(n)             # AV401: an exception in
+        self._prefill(entry, ids)            # _prefill leaks the pages
+
+    def hit_bare_retain(self, entry):
+        self.pool.retain(entry.page_ids)     # AV401: no unwind release
+        self._prefill(entry, entry.page_ids)
+
+    def _prefill(self, entry, ids):
+        raise RuntimeError("stage fault")

@@ -1,0 +1,7 @@
+"""averylint fixture: host-only module importing jax (AV201)."""
+import jax.numpy as jnp
+from jax import jit
+
+
+def pick(scores):
+    return jnp.argmax(jnp.asarray(scores))

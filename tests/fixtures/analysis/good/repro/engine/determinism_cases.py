@@ -1,0 +1,23 @@
+"""averylint fixture: determinism negatives — seeded and ordered, none
+should be flagged."""
+import numpy as np
+
+
+def seeded_draw(seed):
+    rng = np.random.RandomState(seed)            # mission-seeded: fine
+    return rng.rand()
+
+
+def mission_stamp(request):
+    return request.time_s                        # mission clock: fine
+
+
+def pick_slot(slots, active):
+    return min(set(slots) - set(active))         # order-free reduce: fine
+
+
+def walk_sorted(slots):
+    out = []
+    for s in sorted(set(slots)):                 # sorted first: fine
+        out.append(s)
+    return out

@@ -1,0 +1,46 @@
+"""averylint fixture: future-resolution negatives — the engine's
+actual discipline, none should be flagged."""
+from repro.engine.api import RequestFuture, Response
+
+
+class CarefulEngine:
+    def __init__(self):
+        self._futures = {}
+
+    def register(self, request):
+        fut = RequestFuture(request, self)   # stored + returned: fine
+        self._futures[request.request_id] = fut
+        return fut
+
+    def resolve_inline(self, request):
+        fut = RequestFuture(request, self)   # resolved locally: fine
+        fut.set_result(Response(request_id=0, operator_id="", intent=None))
+
+    def pump_resolves_on_error(self, rid):
+        fut = self._futures[rid]
+        try:
+            self._serve(fut)
+        except RuntimeError:                 # resolves on the unwind
+            fut.set_result(Response(request_id=rid, operator_id="",
+                                    intent=None))
+
+    def pump_delegates(self, rid):
+        fut = self._futures[rid]
+        try:
+            self._serve(fut)
+        except RuntimeError as err:          # fail helper owns the unwind
+            self._fail_request(fut, err)
+
+    def pump_reraises(self, rid):
+        fut = self._futures[rid]
+        try:
+            self._serve(fut)
+        except RuntimeError:                 # caller owns the unwind
+            raise
+
+    def _serve(self, fut):
+        fut.set_result(Response(request_id=0, operator_id="", intent=None))
+
+    def _fail_request(self, fut, err):
+        fut.set_result(Response(request_id=0, operator_id="", intent=None,
+                                failure=str(err)))

@@ -1,0 +1,52 @@
+"""averylint fixture: recompile checker negatives — every sanctioned
+jit placement in the tree, none should be flagged."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+MODULE_JIT = jax.jit(lambda v: v * 2)          # module level: built once
+
+
+@jax.jit
+def decorated(v):                              # decorator: built once
+    return v + 1
+
+
+@functools.lru_cache(maxsize=None)
+def memoised_factory(width):                   # keyed by lru_cache
+    return jax.jit(lambda v: v[:width])
+
+
+class Executor:
+    def __init__(self):
+        self._compiled = {}
+        self._fixed = jax.jit(lambda v: v - 1)  # constructor: per object
+
+    def _stage_fn(self, width):
+        def fn(v):
+            return v[:width]
+        return fn
+
+    def jitted(self, stage, width):
+        key = (stage, width)
+        if key not in self._compiled:          # the executor's keyed cache
+            fn = jax.jit(self._stage_fn(width))
+            self._compiled[key] = fn
+        return self._compiled[key]
+
+
+def training_driver(steps, batches):
+    step = jax.jit(lambda v: jnp.tanh(v))      # bound once, amortized
+    out = []
+    for b in batches:
+        out.append(step(b))
+    return out
+
+
+def factory(width):
+    return jax.jit(lambda v: v[:width])        # caller owns the cache
+
+
+def aot_compile(fn, args):
+    return jax.jit(fn).lower(*args).compile()  # deliberate AOT

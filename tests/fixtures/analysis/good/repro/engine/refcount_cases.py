@@ -1,0 +1,56 @@
+"""averylint fixture: refcount-discipline negatives — the decoder's
+actual idioms, none should be flagged."""
+
+
+class SlotState:
+    def __init__(self, private_ids):
+        self.private_ids = private_ids
+
+
+class CarefulDecoder:
+    def __init__(self, pool):
+        self.pool = pool
+        self.active = {}
+
+    def admit_guarded(self, n, entry, slot):
+        ids = self.pool.alloc(n)             # released on the unwind
+        try:
+            self._prefill(entry, ids)
+        except RuntimeError:
+            self.pool.release(ids)
+            raise
+        self.pool.retain(entry.page_ids)     # same guard discipline
+        try:
+            private = self.pool.alloc(2)     # escapes into the slot owner
+            self.active[slot] = SlotState(private_ids=private)
+        except RuntimeError:
+            self.pool.release(entry.page_ids)
+            raise
+
+    def _park_slot(self, slot):
+        st = self.active.pop(slot)
+        self.pool.release(st.private_ids)    # unwind helper: exempt
+        self.pool.retain(st.private_ids)
+
+    def _finally_guarded(self, n):
+        ids = self.pool.alloc(n)
+        try:
+            return self._prefill(None, ids)
+        finally:
+            self.pool.release(ids)
+
+    def _prefill(self, entry, ids):
+        raise RuntimeError("stage fault")
+
+
+class PagePool:
+    """The pool's own bookkeeping is exempt wholesale."""
+
+    def put_prefix(self, key, entry):
+        self.retain(entry.page_ids)
+
+    def retain(self, ids):
+        pass
+
+    def release(self, ids):
+        pass
