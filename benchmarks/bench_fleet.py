@@ -9,12 +9,18 @@ trading fidelity for fleet-wide liveness.
 The fleet loop drives the engine's real admission path (arrival-ordered
 merge across UAVs — see ``runtime/fleet.py``); the final row additionally
 puts N=4 behind a ``QoSScheduler`` with a per-operator rate limit, so the
-shed fraction under admission control is measured on the same trace."""
+shed fraction under admission control is measured on the same trace. That
+run also records per-frame lifecycle spans (``engine_trace=True``) and
+leaves a validated Perfetto trace under ``benchmarks/artifacts/``."""
 from __future__ import annotations
 
-from benchmarks.common import Timer, emit, ensure_lut
+import json
+import os
+
+from benchmarks.common import ART, Timer, emit, ensure_lut
 from repro.engine import (AdaptivePolicy, BestEffortPolicy, QoSScheduler,
                           StaticTierPolicy)
+from repro.engine.observability import validate_chrome_trace
 from repro.network import paper_trace
 from repro.runtime.fleet import run_fleet
 from repro.runtime.mission import MissionSpec
@@ -50,14 +56,25 @@ def run(log=print):
     with Timer() as t_rl:
         fleet_rl = run_fleet(
             lut, trace, 4, MissionSpec(policy=AdaptivePolicy()),
-            scheduler=QoSScheduler(rate_per_s=0.4, burst=2.0))
+            scheduler=QoSScheduler(rate_per_s=0.4, burst=2.0),
+            engine_trace=True)
     rejected = int(fleet_rl.stats.get("rejected", 0))
     served = sum(len(l.frames) for l in fleet_rl.logs)
+    # the traced pass leaves a Perfetto artifact; an export that fails
+    # schema validation fails the bench
+    path = fleet_rl.tracer.dump(os.path.join(ART, "trace_fleet.json"))
+    with open(path) as f:
+        problems = validate_chrome_trace(json.load(f))
+    if problems:
+        raise AssertionError(
+            f"fleet trace artifact failed validation: {problems[:3]}")
     rows.append(emit(
         "fleet/N4_ratelimited", t_rl.us,
         f"agg_pps={fleet_rl.aggregate_pps:.2f};"
         f"rejected={rejected};served={served};"
-        f"shed_frac={rejected / max(1, rejected + served):.3f}"))
+        f"shed_frac={rejected / max(1, rejected + served):.3f};"
+        f"traced_frames={len(fleet_rl.tracer)};"
+        f"trace_evicted={fleet_rl.tracer.n_evicted}"))
     return rows
 
 

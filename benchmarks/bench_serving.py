@@ -24,11 +24,14 @@ depends only on the geometry, not on the weight values.
 """
 from __future__ import annotations
 
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, init_serving_system, make_engine, \
+from benchmarks.common import ART, emit, init_serving_system, make_engine, \
     make_executor, time_best, write_bench_json
 from repro.configs.lisa_mini import CONFIG as PCFG
 from repro.core import vlm
@@ -355,8 +358,23 @@ def sharded_rows(executor, n_uavs=N_UAVS, frames=FRAMES_PER_UAV,
     return rows
 
 
+def _dump_trace_artifact(engine, tag):
+    """Write the run's Perfetto trace under ``benchmarks/artifacts/`` and
+    hard-fail the bench if the export violates the trace schema — an
+    artifact nobody can open is worse than no artifact."""
+    from repro.engine.observability import validate_chrome_trace
+
+    path = engine.dump_trace(os.path.join(ART, f"trace_{tag}.json"))
+    with open(path) as f:
+        problems = validate_chrome_trace(json.load(f))
+    if problems:
+        raise AssertionError(
+            f"trace artifact {path} failed validation: {problems[:3]}")
+    return path
+
+
 def chaos_rows(executor, n_uavs=CHAOS_UAVS, frames=CHAOS_FRAMES,
-               emit_row=None, seed=0):
+               emit_row=None, seed=0, artifact_tag="chaos"):
     """Chaos storm mode: a repeat-prefix fleet burst (one Insight frame
     per mission second, UAVs round-robin) served through the in-flight
     engine under a seeded fault schedule — an uplink blackout window
@@ -405,7 +423,8 @@ def chaos_rows(executor, n_uavs=CHAOS_UAVS, frames=CHAOS_FRAMES,
         engine = make_engine(
             chaotic, transport=faults, batching="inflight", max_batch=8,
             retry=RetryPolicy(max_attempts=3, backoff_base_s=0.25),
-            debug_invariants=True)
+            debug_invariants=True, trace=True,
+            flight_dir=os.path.join(ART, f"flight_{artifact_tag}"))
         sessions = {op: engine.session(op, requirements=dict(reqs))
                     for op, _, _ in fleet}
         futs = []
@@ -444,16 +463,25 @@ def chaos_rows(executor, n_uavs=CHAOS_UAVS, frames=CHAOS_FRAMES,
         raise AssertionError("spiked straggler was not deadline-cancelled")
     if leaks != 0:
         raise AssertionError(f"chaos run leaked {leaks} KV pages")
+    # observability contract: the run leaves a valid Perfetto trace and
+    # the injected faults left a flight-recorder dump on disk
+    _dump_trace_artifact(engine, artifact_tag)
+    if st["flight_dumps"] < 1 or engine.flight.last_dump is None:
+        raise AssertionError(
+            "chaos faults produced no flight-recorder autodump")
     slo = sum(1 for r in resps if r.failure is None) / len(resps)
     return [emit_row(
         "serving/chaos", chaos_s * 1e6,
         f"req_s={n / chaos_s:.1f};delivered_under_slo={slo:.2f};"
+        f"ttft_p50_s={st['ttft_throughput_p50_s']:.3f};"
+        f"ttft_p99_s={st['ttft_throughput_p99_s']:.3f};"
         f"retries={int(st['retries'])};downshifts={int(st['downshifts'])};"
         f"deadline_cancelled={int(st['deadline_cancelled'])};"
         f"inflight_cancelled={int(st['inflight_cancelled'])};"
         f"stage_faults={int(st['stage_faults'])};"
         f"blackouts_terminal={int(st['blackouts'])};"
         f"cloud_errors_terminal={int(st['cloud_errors'])};"
+        f"flight_dumps={int(st['flight_dumps'])};"
         f"page_leaks={leaks};slo_s={CHAOS_SLO_S};seed={seed};"
         f"uavs={n_uavs};frames_per_uav={frames}")]
 
@@ -507,7 +535,7 @@ def _storm_trace(executor, duration_s, seed):
 
 
 def fleet_storm_rows(executor, duration_s=STORM_DURATION_S, emit_row=None,
-                     seed=STORM_SEED):
+                     seed=STORM_SEED, artifact_tag="fleet_storm"):
     """Fleet storm mode: the multi-tenant scheduling contract, measured.
 
     The same seeded trace — 7 operators, both QoS classes, Pareto
@@ -553,7 +581,7 @@ def fleet_storm_rows(executor, duration_s=STORM_DURATION_S, emit_row=None,
             executor, transport=faults, batching="inflight",
             max_batch=STORM_SLOTS, scheduler=make_sched(),
             retry=RetryPolicy(max_attempts=3, backoff_base_s=0.25),
-            debug_invariants=True)
+            debug_invariants=True, trace=True)
         sessions, futs, closed = {}, [], False
         t_pump = 0.0
         for t, op in events:
@@ -634,6 +662,7 @@ def fleet_storm_rows(executor, duration_s=STORM_DURATION_S, emit_row=None,
             raise AssertionError(
                 f"storm leaked {eng.kv_pool.pages_in_use} KV pages")
         eng.kv_pool.check_invariants()
+    _dump_trace_artifact(eng_q, artifact_tag)
 
     rows = []
     for name, st, ctx, resps, eng in (
@@ -646,6 +675,10 @@ def fleet_storm_rows(executor, duration_s=STORM_DURATION_S, emit_row=None,
             f"served={n_served};offered={len(resps)};"
             f"ctx_p50_s={ctx[0]:.2f};ctx_p99_s={ctx[1]:.2f};"
             f"thr_p50_s={thr[0]:.2f};thr_p99_s={thr[1]:.2f};"
+            f"ttft_latency_p50_s={st['ttft_latency_p50_s']:.3f};"
+            f"ttft_latency_p99_s={st['ttft_latency_p99_s']:.3f};"
+            f"ttft_throughput_p50_s={st['ttft_throughput_p50_s']:.3f};"
+            f"ttft_throughput_p99_s={st['ttft_throughput_p99_s']:.3f};"
             f"jain={jain_index(eng.served_by_operator.values()):.3f};"
             f"preemptions={int(st['sched_preemptions'])};"
             f"resumed_served={int(st['sched_resumed_served'])};"
@@ -820,7 +853,7 @@ def run_chaos_smoke():
     the same hard asserts (>=1 successful downshifted retry, >=1
     deadline cancel, zero leaked pages) as the full run."""
     rows = chaos_rows(_smoke_executor(), n_uavs=2, frames=3,
-                      emit_row=_smoke_emit)
+                      emit_row=_smoke_emit, artifact_tag="chaos_smoke")
     write_bench_json(rows)
     return rows
 
@@ -841,7 +874,8 @@ def run_fleet_storm_smoke():
     rate limiting, and page-rollback preemption end to end in minutes,
     with the same hard asserts as the full run."""
     rows = fleet_storm_rows(_smoke_executor(STORM_TOKENS),
-                            duration_s=16.0, emit_row=_smoke_emit)
+                            duration_s=16.0, emit_row=_smoke_emit,
+                            artifact_tag="fleet_storm_smoke")
     write_bench_json(rows)
     return rows
 

@@ -41,3 +41,36 @@ echo "[ci_fast] fleet storm smoke (QoS scheduling vs FIFO)"
 # with token-exact resume, >=1 rate-limit rejection, zero leaked pages
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_serving --fleet-storm-smoke
+echo "[ci_fast] trace smoke (span tracer + flight recorder)"
+# a traced profiled-path serve through a blackout window: the retry spans
+# must pass the lifecycle validator, the Perfetto export must round-trip,
+# and the flight-recorder ring must dump the journey — all on the
+# LUT-profiled engine, no executor/model (observability itself stays
+# jax-free: averylint AV201 + test_host_only_modules_have_no_jax_imports)
+python - <<'EOF'
+import glob, json, os
+from repro.core.lut import paper_lut
+from repro.engine import (AveryEngine, FaultInjector, LoopbackTransport,
+                          RetryPolicy)
+from repro.engine.observability import validate_chrome_trace, validate_traces
+art = os.path.join("benchmarks", "artifacts")
+engine = AveryEngine(
+    lut=paper_lut(), trace=True,
+    flight_dir=os.path.join(art, "flight_ci_smoke"),
+    transport=FaultInjector(LoopbackTransport(20.0), blackouts=[(0.0, 30.0)]),
+    retry=RetryPolicy(max_attempts=3, backoff_base_s=1.0))
+sess = engine.session("uav-ci")
+res = sess.submit_frame(0.0)
+assert res.feasible and res.attempts == 2, res
+problems = validate_traces(engine.tracer)
+assert not problems, problems
+path = engine.dump_trace(os.path.join(art, "trace_ci_smoke.json"))
+problems = validate_chrome_trace(json.load(open(path)))
+assert not problems, problems
+dump = engine.dump_flight(os.path.join(art, "flight_ci_smoke", "manual.json"))
+assert dump and json.load(open(dump))["events"], dump
+for f in glob.glob(os.path.join(art, "flight_ci_smoke", "*.json")):
+    os.remove(f)
+os.rmdir(os.path.join(art, "flight_ci_smoke"))
+print("trace smoke ok:", path)
+EOF

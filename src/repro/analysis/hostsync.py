@@ -3,11 +3,11 @@
 Two contracts from the engine arc:
 
   * **AV201** — the host-only scheduling modules stay pure Python.
-    ``engine/scheduler.py``, ``engine/policy.py``, ``engine/faults.py``
-    run inside the pump loop between device steps; a ``jnp`` import
-    there invites device work (and implicit transfers) onto the
-    scheduling path. Any jax import or ``jnp.*`` use in those files is
-    flagged.
+    ``engine/scheduler.py``, ``engine/policy.py``, ``engine/faults.py``,
+    and ``engine/observability.py`` run inside the pump loop between
+    device steps; a ``jnp`` import there invites device work (and
+    implicit transfers) onto the scheduling path. Any jax import or
+    ``jnp.*`` use in those files is flagged.
   * **AV202** — host-sync primitives inside traced code:
     ``float()/int()/bool()`` on a traced value, ``.item()``,
     ``np.asarray()/np.array()``. Under ``jax.jit`` each of these forces
@@ -33,6 +33,7 @@ HOST_ONLY_SUFFIXES = (
     "engine/scheduler.py",
     "engine/policy.py",
     "engine/faults.py",
+    "engine/observability.py",
 )
 
 _SYNC_BUILTINS = {"float", "int", "bool", "complex"}

@@ -2,7 +2,7 @@
 
 Parses every ``.py`` under the targets (no imports, no execution —
 ``jax`` need not be installed), builds the shared :class:`RepoModel`,
-runs the five checkers, filters through the checked-in baseline, and
+runs the six checkers, filters through the checked-in baseline, and
 exits nonzero on any *new* finding.
 
 Usage::
@@ -26,7 +26,8 @@ from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis import (baseline as baseline_mod, determinism,
-                            futures, hostsync, recompile, refcount)
+                            futures, hostsync, observability, recompile,
+                            refcount)
 from repro.analysis.model import (Finding, ModuleInfo, RepoModel,
                                   parse_module)
 
@@ -36,6 +37,7 @@ CHECKERS: List[Tuple[str, Callable[..., List[Finding]]]] = [
     ("futures", futures.check),
     ("refcount", refcount.check),
     ("determinism", determinism.check),
+    ("observability", observability.check),
 ]
 
 _SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}

@@ -1,0 +1,222 @@
+"""Observability lint (AV6xx): engine telemetry goes through the
+sanctioned instruments, not ad-hoc side effects.
+
+The engine's observability layer (``engine/observability.py``) exists
+so that telemetry is bounded and machine-readable: the ``Tracer`` caps
+events per trace, the ``FlightRecorder`` is a fixed ring, histograms
+are fixed log buckets. Two anti-patterns defeat it, both scoped to
+``src/repro/engine/``:
+
+  * **AV601** — ``print()`` on the serving path: engine modules run
+    inside benchmarks and missions whose stdout IS the report;
+    diagnostics belong in stream events, the flight recorder, or a
+    trace span, never interleaved prints.
+  * **AV602** — unbounded event accumulation: ``self.<attr>.append(x)``
+    on a plain list that nothing ever bounds. A request future or
+    decoder that lives a whole mission must not grow per-event lists
+    without a cap. Sanctioned shapes are recognised and not flagged:
+
+      - the attribute is a ``deque`` (``maxlen`` rings);
+      - the class bounds it elsewhere — ``pop``/``popleft``/``clear``/
+        ``remove``, a ``del self.attr[...]`` slice, or reassignment
+        outside ``__init__`` (drain/reset paths);
+      - the appending function checks ``len(self.attr)`` first (the
+        cap-and-count idiom — see ``RequestFuture.emit``);
+      - the appended value escapes the class (returned, or also stored
+        under a key), i.e. the list is an index of caller-owned
+        objects, not an event log.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.model import Finding, ModuleInfo, RepoModel, dotted
+
+CHECKER = "observability"
+
+# rel-path fragment that defines the serving-engine scope
+ENGINE_FRAGMENT = "repro/engine/"
+
+_BOUNDING_METHODS = {"pop", "popleft", "clear", "remove"}
+
+
+def in_scope(rel: str) -> bool:
+    return ENGINE_FRAGMENT in rel
+
+
+def check(mod: ModuleInfo, repo: RepoModel) -> List[Finding]:
+    if not in_scope(mod.rel):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            findings.append(_f(mod, node, "AV601",
+                               "print() on the serving path; emit a "
+                               "stream event, a trace point, or a "
+                               "flight-recorder entry instead"))
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef):
+            findings.extend(_check_class(mod, node))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# AV602: unbounded self.<attr>.append on a plain list
+# ---------------------------------------------------------------------------
+
+
+def _check_class(mod: ModuleInfo, cls: ast.ClassDef) -> List[Finding]:
+    deque_attrs = _deque_attrs(cls)
+    bounded_attrs = _bounded_attrs(cls)
+    findings: List[Finding] = []
+    for fn in (n for n in ast.walk(cls)
+               if isinstance(n, (ast.FunctionDef,
+                                 ast.AsyncFunctionDef))):
+        for call in ast.walk(fn):
+            attr = _self_append_attr(call)
+            if attr is None:
+                continue
+            if attr in deque_attrs or attr in bounded_attrs:
+                continue
+            if _len_guarded(fn, attr):
+                continue
+            if _value_escapes(fn, call):
+                continue
+            findings.append(_f(
+                mod, call, "AV602",
+                f"self.{attr}.append() with no bound in "
+                f"{cls.name}: a mission-lifetime object must cap its "
+                "event lists (deque(maxlen=...), a len() guard, or a "
+                "drain path)"))
+    return findings
+
+
+def _self_append_attr(node: ast.AST) -> Optional[str]:
+    """``self.<attr>.append(x)`` -> attr name; None otherwise.
+    Subscripted (``self.q[k].append``) and local-alias appends are out
+    of scope — the direct-attribute event-log shape is the target."""
+    if not (isinstance(node, ast.Call) and node.args
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "append"):
+        return None
+    owner = node.func.value
+    d = dotted(owner)
+    if d is None or not d.startswith("self."):
+        return None
+    parts = d.split(".")
+    return parts[1] if len(parts) == 2 else None
+
+
+def _deque_attrs(cls: ast.ClassDef) -> Set[str]:
+    """Attrs assigned a ``deque(...)`` anywhere in the class."""
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        target, value = _self_assign(node)
+        if target is None:
+            continue
+        if (isinstance(value, ast.Call)
+                and _callee_name(value.func) == "deque"):
+            out.add(target)
+    return out
+
+
+def _bounded_attrs(cls: ast.ClassDef) -> Set[str]:
+    """Attrs the class bounds somewhere: a shrinking method call, a
+    ``del self.attr[...]``, or reassignment outside the constructor
+    (the drain/reset idiom)."""
+    out: Set[str] = set()
+    for fn in (n for n in ast.walk(cls)
+               if isinstance(n, (ast.FunctionDef,
+                                 ast.AsyncFunctionDef))):
+        in_ctor = fn.name in ("__init__", "__post_init__", "__new__")
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _BOUNDING_METHODS:
+                d = dotted(node.func.value)
+                if d and d.startswith("self.") and d.count(".") == 1:
+                    out.add(d.split(".")[1])
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    d = dotted(base)
+                    if d and d.startswith("self.") and d.count(".") == 1:
+                        out.add(d.split(".")[1])
+            elif not in_ctor:
+                target, _ = _self_assign(node)
+                if target is not None:
+                    out.add(target)
+    return out
+
+
+def _self_assign(node: ast.AST):
+    """``self.<attr> = value`` / annotated form -> (attr, value)."""
+    if isinstance(node, ast.Assign) and len(node.targets) == 1:
+        target, value = node.targets[0], node.value
+    elif isinstance(node, ast.AnnAssign) and node.value is not None:
+        target, value = node.target, node.value
+    else:
+        return None, None
+    if isinstance(target, ast.Attribute) \
+            and isinstance(target.value, ast.Name) \
+            and target.value.id == "self":
+        return target.attr, value
+    return None, None
+
+
+def _callee_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _len_guarded(fn: ast.AST, attr: str) -> bool:
+    """Does the function read ``len(self.<attr>)`` anywhere? (the
+    cap-and-count idiom: append under a size check)."""
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "len" and node.args
+                and dotted(node.args[0]) == f"self.{attr}"):
+            return True
+    return False
+
+
+def _value_escapes(fn: ast.AST, call: ast.Call) -> bool:
+    """Is the appended value handed back to the caller (``return x``
+    after ``self.xs.append(x)``)? Then the list is an index of caller-
+    owned objects, not an event log."""
+    arg = call.args[0]
+    if not isinstance(arg, ast.Name):
+        return False
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Return)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == arg.id):
+            return True
+    return False
+
+
+def _symbol_for(mod: ModuleInfo, node: ast.AST) -> str:
+    best = "<module>"
+    best_span = None
+    for qual, fn in mod.functions.items():
+        n = fn.node
+        end = getattr(n, "end_lineno", n.lineno)
+        if n.lineno <= node.lineno <= end:
+            span = end - n.lineno
+            if best_span is None or span < best_span:
+                best, best_span = qual, span
+    return best
+
+
+def _f(mod: ModuleInfo, node: ast.AST, code: str,
+       message: str) -> Finding:
+    return Finding(code=code, checker=CHECKER, path=mod.rel,
+                   line=node.lineno, col=node.col_offset,
+                   symbol=_symbol_for(mod, node), message=message)

@@ -10,6 +10,9 @@
   faults      — chaos injection: FaultInjector (transport), FaultyExecutor
   inflight    — token-level continuous batching (join a running decode)
   speculative — Context-stream DraftModel + paged multi-token verify
+  observability — Tracer (per-request spans -> Perfetto JSON),
+                MetricsRegistry (counters/gauges/log-bucket histograms),
+                FlightRecorder (bounded ring, crash dumps)
   engine      — AveryEngine + OperatorSession
 
 All entry points (serving launcher, mission simulator, fleet runtime,
@@ -20,6 +23,11 @@ from repro.engine.engine import AveryEngine, OperatorSession
 from repro.engine.faults import (CloudStageError, FaultInjector,
                                  FaultyExecutor)
 from repro.engine.inflight import InflightDecoder
+from repro.engine.observability import (Counter, FlightRecorder, Gauge,
+                                        Histogram, MetricsRegistry,
+                                        RequestTrace, Span, Tracer,
+                                        validate_chrome_trace,
+                                        validate_trace, validate_traces)
 from repro.engine.policy import (AdaptivePolicy, BestEffortPolicy,
                                  ControlPolicy, RetryPolicy,
                                  StaticTierPolicy, TierDecision,
@@ -42,4 +50,7 @@ __all__ = [
     "CloudStageError", "FaultInjector", "FaultyExecutor",
     "DraftModel", "SpecStats", "SpeculativeConfig",
     "Transport", "ChannelTransport", "LoopbackTransport",
+    "Tracer", "Span", "RequestTrace", "MetricsRegistry",
+    "Counter", "Gauge", "Histogram", "FlightRecorder",
+    "validate_trace", "validate_traces", "validate_chrome_trace",
 ]

@@ -42,10 +42,18 @@ class Request:
 class StreamEvent:
     """Lifecycle marker: queued, tier_selected, transmitted, blackout,
     prefilled, joined_batch, served, infeasible, retry, cloud_error,
-    cancelled, rejected."""
+    cancelled, rejected. ``t`` is mission time: emit sites that pass no
+    timestamp get the engine's mission-clock watermark stamped in, so a
+    response's event stream is always orderable."""
     kind: str
     t: float = 0.0
     data: Dict[str, Any] = field(default_factory=dict)
+
+
+# cap on a single request's event stream: retries and preemption round-
+# trips multiply events, and a future that lives a whole mission must
+# not accumulate them without bound (averylint AV602's contract)
+MAX_STREAM_EVENTS = 256
 
 
 @dataclass
@@ -95,6 +103,10 @@ class Response:
     queue_wait_s: Optional[float] = None
     preemptions: int = 0
     t_finished: Optional[float] = None
+    # in-flight path: time-to-first-token — admission (prefill or prefix
+    # hit, when token 0 exists) minus submission, on the mission clock;
+    # preemption round-trips don't move it (the first token stands)
+    ttft_s: Optional[float] = None
     events: List[StreamEvent] = field(default_factory=list)
 
     @property
@@ -113,13 +125,26 @@ class RequestFuture:
         self._engine = engine
         self._response: Optional[Response] = None
         self.events: List[StreamEvent] = []
+        self.events_dropped = 0
         # engine-side bookkeeping: decision/rec of the latest attempt,
         # owning session, absolute deadline (None = no SLO)
         self.meta: Dict[str, Any] = {}
         self.attempts = 0
 
-    def emit(self, kind: str, t: float = 0.0, **data: Any) -> None:
-        self.events.append(StreamEvent(kind=kind, t=t, data=data))
+    def emit(self, kind: str, t: Optional[float] = None,
+             **data: Any) -> None:
+        """Record one lifecycle event. ``t=None`` stamps the engine's
+        mission-clock watermark; every emit also feeds the engine's
+        observability hook (flight recorder + tracer point events)."""
+        if t is None:
+            t = getattr(self._engine, "_now", 0.0)
+        if len(self.events) < MAX_STREAM_EVENTS:
+            self.events.append(StreamEvent(kind=kind, t=t, data=data))
+        else:
+            self.events_dropped += 1
+        observe = getattr(self._engine, "_observe_event", None)
+        if observe is not None:
+            observe(self.request, kind, t, data)
 
     def done(self) -> bool:
         return self._response is not None

@@ -31,7 +31,7 @@ this way), and the fidelity oracle for profiled missions.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -43,14 +43,23 @@ from repro.core.lut import SystemLUT
 from repro.core.paging import PagePool
 from repro.engine.api import Request, RequestFuture, Response
 from repro.engine.inflight import InflightDecoder
+from repro.engine.observability import (FlightRecorder, MetricsRegistry,
+                                        Tracer)
 from repro.engine.policy import (AdaptivePolicy, ControlPolicy, RetryPolicy,
                                  TierDecision)
-from repro.engine.scheduler import FifoScheduler
+from repro.engine.scheduler import QOS_CLASSES, FifoScheduler, qos_class
 from repro.engine.speculative import SpecStats, SpeculativeConfig
 from repro.engine.transport import LoopbackTransport, Transport
 from repro.network.energy import EdgeDevice, edge_insight_flops
 
 BATCHING_MODES = ("microbatch", "generate", "inflight")
+
+# registry keys of the engine's terminal/telemetry counters; the
+# ``stats()`` names and the legacy ``n_*`` attribute surface both read
+# through these (see the properties on AveryEngine)
+_COUNTER_KEYS = ("submitted", "completed", "infeasible", "blackouts",
+                 "deadline_cancelled", "cloud_errors", "rejected",
+                 "starved", "retries", "downshifts", "load_downshifts")
 
 
 @dataclass
@@ -117,7 +126,11 @@ class AveryEngine:
                  scheduler: Any = None,
                  debug_invariants: bool = False,
                  debug_recompiles: bool = False,
-                 debug_transfers: bool = False):
+                 debug_transfers: bool = False,
+                 trace: Any = False,
+                 flight_events: int = 256,
+                 flight_dir: Optional[str] = None,
+                 wallclock: Optional[Callable[[], float]] = None):
         """``speculative`` (in-flight batching only): ``True`` enables
         Context-stream draft + paged multi-token verify with defaults,
         an int sets ``draft_tokens``, a ``SpeculativeConfig`` sets
@@ -150,7 +163,23 @@ class AveryEngine:
         trace. ``debug_transfers`` wraps each in-flight decode
         pump/drain in ``jax.transfer_guard("disallow")`` — any implicit
         device↔host transfer on the decode path raises (explicit
-        ``jnp.asarray`` stays allowed). See docs/analysis.md."""
+        ``jnp.asarray`` stays allowed). See docs/analysis.md.
+
+        Observability (docs/observability.md): ``trace`` (``True`` or a
+        configured :class:`~repro.engine.observability.Tracer`) records
+        per-request mission-clock spans across the whole lifecycle,
+        exportable with :meth:`dump_trace`; disabled (the default)
+        every hook is a single branch. The metrics registry
+        (``engine.metrics``) is always on — it backs the ``stats()``
+        counters and the TTFT/queue-wait/transmit histograms. The
+        flight recorder keeps the last ``flight_events`` engine events
+        and, with ``flight_dir`` set, auto-dumps JSON when a request
+        dies hard (terminal cloud error, deadline cancel) or an
+        invariant trips (page-pool audit, recompile budget).
+        ``wallclock`` injects a wall-time source (pass
+        ``time.perf_counter``; engine code must not read the wall
+        clock itself — averylint AV502) to fill the wall decode/verify
+        step histograms."""
         if batching not in BATCHING_MODES:
             raise ValueError(f"batching must be one of {BATCHING_MODES}")
         self.lut = lut
@@ -220,23 +249,76 @@ class AveryEngine:
         # (submissions, deliveries, retry backoffs). Deadline sweeps
         # cancel in-flight requests the watermark has passed.
         self._now = 0.0
-        # telemetry — terminal outcomes are mutually exclusive: every
-        # submitted request lands in exactly one of {completed,
-        # infeasible, blackouts, deadline_cancelled, cloud_errors,
-        # rejected}; n_starved separately counts *served* best-effort
-        # responses with feasible=False (those also count as completed)
-        self.n_submitted = 0
-        self.n_completed = 0
-        self.n_infeasible = 0
-        self.n_blackouts = 0
-        self.n_deadline = 0
-        self.n_cloud_errors = 0
-        self.n_rejected = 0           # shed by admission control
-        self.n_starved = 0
-        self.n_retries = 0
-        self.n_downshifts = 0
-        self.n_load_downshifts = 0    # policy adapted tier to queue load
+        # observability: tracer (off by default — one branch per hook),
+        # metrics registry (always on; backs the terminal counters and
+        # the latency histograms), flight recorder (bounded event ring,
+        # auto-dumps into flight_dir on hard failures). Terminal
+        # outcomes are mutually exclusive: every submitted request
+        # lands in exactly one of {completed, infeasible, blackouts,
+        # deadline_cancelled, cloud_errors, rejected}; "starved"
+        # separately counts *served* best-effort responses with
+        # feasible=False (those also count as completed).
+        self.tracer = trace if isinstance(trace, Tracer) \
+            else Tracer(enabled=bool(trace))
+        self.metrics = MetricsRegistry()
+        self.flight = FlightRecorder(capacity=flight_events,
+                                     autodump_dir=flight_dir)
+        self._wallclock = wallclock
+        self._counters = {key: self.metrics.counter(key)
+                          for key in _COUNTER_KEYS}
         self.served_by_operator: Dict[str, int] = {}
+        bind = getattr(self.scheduler_proto, "bind_metrics", None)
+        if bind is not None:
+            bind(self.metrics)
+
+    # ---- counters (registry-backed; n_* is the legacy read surface) ----
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self._counters[key].inc(n)
+
+    @property
+    def n_submitted(self) -> int:
+        return self._counters["submitted"].value
+
+    @property
+    def n_completed(self) -> int:
+        return self._counters["completed"].value
+
+    @property
+    def n_infeasible(self) -> int:
+        return self._counters["infeasible"].value
+
+    @property
+    def n_blackouts(self) -> int:
+        return self._counters["blackouts"].value
+
+    @property
+    def n_deadline(self) -> int:
+        return self._counters["deadline_cancelled"].value
+
+    @property
+    def n_cloud_errors(self) -> int:
+        return self._counters["cloud_errors"].value
+
+    @property
+    def n_rejected(self) -> int:
+        return self._counters["rejected"].value
+
+    @property
+    def n_starved(self) -> int:
+        return self._counters["starved"].value
+
+    @property
+    def n_retries(self) -> int:
+        return self._counters["retries"].value
+
+    @property
+    def n_downshifts(self) -> int:
+        return self._counters["downshifts"].value
+
+    @property
+    def n_load_downshifts(self) -> int:
+        return self._counters["load_downshifts"].value
 
     def _resolve_speculative(self, speculative: Any
                              ) -> Optional[SpeculativeConfig]:
@@ -336,7 +418,12 @@ class AveryEngine:
         fut = RequestFuture(request, self)
         self._futures[request.request_id] = fut
         self._order.append(request.request_id)
-        self.n_submitted += 1
+        self._bump("submitted")
+        if self.tracer.enabled:
+            self.tracer.begin(
+                request.request_id, request.operator_id,
+                intent=request.intent.name if request.intent else "",
+                t=request.time_s)
         return fut
 
     def _deadline_for(self, session: OperatorSession, intent: Intent,
@@ -375,7 +462,7 @@ class AveryEngine:
             session.operator_id, t)
         if reason is None:
             return False
-        self.n_rejected += 1
+        self._bump("rejected")
         fut.emit("rejected", t, reason=reason)
         fut.set_result(Response(
             request_id=fut.request.request_id,
@@ -403,13 +490,13 @@ class AveryEngine:
                                               bw)
             if (decision.tier is not None
                     and decision.tier.payload_mb < prev_tier.payload_mb):
-                self.n_downshifts += 1
+                self._bump("downshifts")
         fut.attempts += 1
         fut.emit("tier_selected", t, bandwidth_mbps=bw,
                  tier=decision.tier.name if decision.tier else None,
                  feasible=decision.feasible, attempt=fut.attempts)
         if decision.stream == "insight" and decision.tier is None:
-            self.n_infeasible += 1
+            self._bump("infeasible")
             fut.emit("infeasible", t)
             fut.set_result(Response(
                 request_id=request.request_id,
@@ -424,12 +511,16 @@ class AveryEngine:
         else:
             packet = self.executor.edge_insight(
                 request.images, decision.tier, request.request_id, t)
+        if self.tracer.enabled:
+            self.tracer.span(request.request_id, "edge_encode", t, t,
+                             tier=decision.tier.name if decision.tier
+                             else None)
         rec = transport.send(packet, t)
         self._advance(rec.end_s)
         if not rec.delivered:            # uplink blackout / drop
             self._send_failed(fut, decision, rec)
             return
-        fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
+        self._note_transmit(fut, packet, decision, rec)
         self._enqueue_cloud(fut, packet, request.query, decision, rec)
 
     def _adapt_to_load(self, session: OperatorSession,
@@ -447,8 +538,33 @@ class AveryEngine:
         adapted = hook(decision, self.scheduler_proto.load(), self.lut, bw)
         if (adapted.tier is not None and decision.tier is not None
                 and adapted.tier.payload_mb < decision.tier.payload_mb):
-            self.n_load_downshifts += 1
+            self._bump("load_downshifts")
         return adapted
+
+    def _note_transmit(self, fut: RequestFuture, packet: pk.Packet,
+                       decision: TierDecision, rec: Any) -> None:
+        """Delivered-packet telemetry shared by both attempt paths: the
+        ``transmitted`` stream event, the transmit-latency histograms
+        (global + per tier), and the trace's transmit span."""
+        fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
+        dt = max(0.0, rec.end_s - rec.start_s)
+        tier = decision.tier.name if decision.tier else "context"
+        self.metrics.histogram("transmit_s").observe(dt)
+        self.metrics.histogram(f"transmit_s:tier={tier}").observe(dt)
+        if self.tracer.enabled:
+            self.tracer.span(fut.request.request_id, "transmit",
+                             rec.start_s, rec.end_s,
+                             payload_mb=packet.payload_mb, tier=tier)
+
+    def _observe_event(self, request: Request, kind: str, t: float,
+                       data: Dict[str, Any]) -> None:
+        """Every ``RequestFuture.emit`` lands here: the flight recorder
+        sees all lifecycle events; the tracer records the ones that are
+        not already covered by a span (transmit/queue)."""
+        self.flight.record(kind, t, request_id=request.request_id,
+                           data=data)
+        if self.tracer.enabled and kind not in ("transmitted", "queued"):
+            self.tracer.point(request.request_id, kind, t, **data)
 
     def _attempt_packet(self, fut: RequestFuture, t: float) -> None:
         """Retry path for pre-encoded submissions: re-send the same
@@ -463,7 +579,7 @@ class AveryEngine:
         if not rec.delivered:
             self._send_failed(fut, decision, rec)
             return
-        fut.emit("transmitted", rec.end_s, payload_mb=packet.payload_mb)
+        self._note_transmit(fut, packet, decision, rec)
         self._enqueue_cloud(fut, packet, fut.request.query, decision, rec)
 
     def _send_failed(self, fut: RequestFuture, decision: TierDecision,
@@ -479,7 +595,7 @@ class AveryEngine:
         if self._can_retry(fut, rec.end_s):
             self._retry(fut, rec.end_s, decision.tier)
             return
-        self.n_blackouts += 1
+        self._bump("blackouts")
         fut.set_result(self._base_response(fut, feasible=False,
                                            failure="blackout"))
 
@@ -493,9 +609,10 @@ class AveryEngine:
         if self._can_retry(fut, t_fail):
             self._retry(fut, t_fail, decision.tier)
             return
-        self.n_cloud_errors += 1
+        self._bump("cloud_errors")
         fut.set_result(self._base_response(fut, feasible=False,
                                            failure="cloud_error"))
+        self.flight.dump("cloud_error", stats=self.stats)
 
     def _can_retry(self, fut: RequestFuture, t_fail: float) -> bool:
         if self.retry is None or fut.attempts >= self.retry.max_attempts:
@@ -507,7 +624,7 @@ class AveryEngine:
     def _retry(self, fut: RequestFuture, t_fail: float,
                prev_tier: Any) -> None:
         t = t_fail + self.retry.backoff_s(fut.attempts)
-        self.n_retries += 1
+        self._bump("retries")
         fut.emit("retry", t, attempt=fut.attempts + 1)
         self._advance(t)
         if fut.meta.get("fixed_packet") is not None:
@@ -539,12 +656,13 @@ class AveryEngine:
         for dec in self._inflight.values():
             if dec.cancel(rid):
                 break
-        self.n_deadline += 1
+        self._bump("deadline_cancelled")
         fut.emit("cancelled", deadline, reason="deadline")
         fut.set_result(self._base_response(fut, feasible=False,
                                            failure="deadline"))
+        self.flight.dump("deadline_cancel", stats=self.stats)
         if self.debug_invariants:
-            self.kv_pool.check_invariants()
+            self._audit_pool()
 
     def submit_packet(self, packet: pk.Packet, query, intent: Intent,
                       time_s: float = 0.0,
@@ -592,7 +710,9 @@ class AveryEngine:
                     spec=self.spec_config, spec_gate=self._spec_gate,
                     spec_prefix_rows=self._draft_prefix_rows,
                     scheduler=self.scheduler_proto.spawn(),
-                    clock=lambda: self._now)
+                    clock=lambda: self._now,
+                    tracer=self.tracer, metrics=self.metrics,
+                    wallclock=self._wallclock)
             dec.submit(rid, fut.request.intent, packet, query,
                        on_done=self._resolve_inflight,
                        operator_id=fut.request.operator_id,
@@ -638,10 +758,10 @@ class AveryEngine:
             batch_size=res.batch_size)
         resp.t_finished = self._now
         fut.set_result(resp)
-        self.n_completed += 1
+        self._bump("completed")
         self._note_served(fut.request.operator_id)
         if not resp.feasible:
-            self.n_starved += 1        # served best-effort, F_I unmet
+            self._bump("starved")        # served best-effort, F_I unmet
 
     def _resolve_inflight(self, out: Dict[str, Any]) -> None:
         fut = self._futures[out["seq_id"]]
@@ -654,15 +774,16 @@ class AveryEngine:
         if failure == "deadline":
             # the decoder's pre-admission sweep: expired while pending,
             # resolved without paying the prefill
-            self.n_deadline += 1
+            self._bump("deadline_cancelled")
             fut.emit("cancelled", self._now, reason="deadline")
             fut.set_result(self._base_response(
                 fut, feasible=False, failure="deadline",
                 t_finished=self._now))
+            self.flight.dump("deadline_cancel", stats=self.stats)
             return
         if failure == "rejected":
             # shed at enqueue: the scheduler's bounded queue is full
-            self.n_rejected += 1
+            self._bump("rejected")
             fut.emit("rejected", self._now, reason=out.get("reason", ""))
             fut.set_result(self._base_response(
                 fut, feasible=False, failure="rejected",
@@ -681,11 +802,31 @@ class AveryEngine:
         resp.preemptions = out.get("preemptions", 0)
         resp.queue_wait_s = out.get("queue_wait")
         resp.t_finished = self._now
+        tft = out.get("t_first_token")
+        if tft is not None:
+            resp.ttft_s = max(0.0, tft - fut.request.time_s)
+        self._observe_served(fut, resp)
         fut.set_result(resp)
-        self.n_completed += 1
+        self._bump("completed")
         self._note_served(fut.request.operator_id)
         if not resp.feasible:
-            self.n_starved += 1        # served best-effort, F_I unmet
+            self._bump("starved")        # served best-effort, F_I unmet
+
+    def _observe_served(self, fut: RequestFuture, resp: Response) -> None:
+        """Per-QoS-class serving histograms (in-flight path): TTFT,
+        queue wait, and end-to-end token throughput."""
+        cls = qos_class(fut.request.intent)
+        if resp.ttft_s is not None:
+            self.metrics.histogram(f"ttft_s:{cls}").observe(resp.ttft_s)
+        if resp.queue_wait_s is not None:
+            self.metrics.histogram(f"queue_wait_s:{cls}").observe(
+                resp.queue_wait_s)
+        if resp.tokens is not None and resp.t_finished is not None:
+            dur = resp.t_finished - fut.request.time_s
+            if dur > 0.0:
+                n_tok = int(np.asarray(resp.tokens).shape[-1])
+                self.metrics.histogram(f"tokens_per_s:{cls}",
+                                       hi=1e6).observe(n_tok / dur)
 
     def _note_served(self, operator_id: str) -> None:
         self.served_by_operator[operator_id] = \
@@ -703,8 +844,12 @@ class AveryEngine:
         with self._transfer_guard():
             for dec in self._inflight.values():
                 dec.pump(1)
+        if self.tracer.enabled:
+            load = self.scheduler_proto.load()
+            for key in sorted(load):
+                self.metrics.gauge(key).set(load[key])
         if self.debug_invariants:
-            self.kv_pool.check_invariants()
+            self._audit_pool()
         self.check_sanitizers()
 
     def drain(self, release_operator: Optional[str] = None
@@ -748,7 +893,7 @@ class AveryEngine:
         if release_operator is not None:
             self.release_prefixes(release_operator)
         if self.debug_invariants:
-            self.kv_pool.check_invariants()
+            self._audit_pool()
         self.check_sanitizers()
         return out
 
@@ -772,10 +917,39 @@ class AveryEngine:
     def check_sanitizers(self, budget: int = 0) -> None:
         """Raise ``RecompileBudgetError`` if steady state compiled more
         than ``budget`` new traces since ``arm_sanitizers()``. No-op
-        until armed."""
+        until armed. A trip dumps the flight ring first so the failing
+        run leaves a diagnosable artifact."""
         san = self._recompile_sanitizer
         if san is not None and san.armed_at is not None:
-            san.check(budget)
+            try:
+                san.check(budget)
+            except Exception:
+                self.flight.dump("recompile_budget")
+                raise
+
+    def _audit_pool(self) -> None:
+        """``PagePool.check_invariants`` with a flight dump on failure:
+        a tripped page-pool invariant in a chaos run becomes a JSON
+        artifact instead of a bare assert."""
+        try:
+            self.kv_pool.check_invariants()
+        except Exception:
+            self.flight.dump("pool_invariant")
+            raise
+
+    # ---- observability exports (docs/observability.md) ----
+
+    def dump_trace(self, path: str) -> str:
+        """Write every recorded request trace as Chrome/Perfetto
+        ``trace_event`` JSON (open at https://ui.perfetto.dev). Tracks:
+        one per operator (pid 1) and one per decode slot (pid 2)."""
+        return self.tracer.dump(path)
+
+    def dump_flight(self, path: str, reason: str = "manual"
+                    ) -> Optional[str]:
+        """Write the flight-recorder ring (last N engine events plus a
+        ``stats()`` snapshot) as JSON to ``path``."""
+        return self.flight.dump(reason, path=path, stats=self.stats)
 
     def release_prefixes(self, operator_id: str) -> int:
         """Free one operator's cached prefix pages (their store pin —
@@ -792,12 +966,18 @@ class AveryEngine:
     def submit_frame(self, session: OperatorSession, t: float,
                      intent: Intent = Intent.INSIGHT) -> Response:
         rid, self._seq = self._seq, self._seq + 1
-        self.n_submitted += 1
+        self._bump("submitted")
         self._advance(t)
+        if self.tracer.enabled:
+            self.tracer.begin(rid, session.operator_id,
+                              intent=intent.name, t=t)
         reason = self.scheduler_proto.admission_check(session.operator_id,
                                                       t)
         if reason is not None:       # rate-limited: shed pre-edge-compute
-            self.n_rejected += 1
+            self._bump("rejected")
+            self.flight.record("rejected", t, request_id=rid)
+            if self.tracer.enabled:
+                self.tracer.point(rid, "rejected", t, reason=reason)
             return Response(request_id=rid,
                             operator_id=session.operator_id,
                             intent=intent, feasible=False,
@@ -812,7 +992,10 @@ class AveryEngine:
         while True:
             attempts += 1
             if decision.tier is None:
-                self.n_infeasible += 1
+                self._bump("infeasible")
+                self.flight.record("infeasible", t_try, request_id=rid)
+                if self.tracer.enabled:
+                    self.tracer.point(rid, "infeasible", t_try)
                 return Response(request_id=rid,
                                 operator_id=session.operator_id,
                                 intent=intent, feasible=False,
@@ -832,6 +1015,16 @@ class AveryEngine:
                                payload_bytes=int(tier.payload_mb * 1e6))
             rec = transport.send(packet, t_try + compute_s)
             self._advance(rec.end_s)
+            if not rec.delivered:
+                self.flight.record("blackout", rec.end_s, request_id=rid)
+            if self.tracer.enabled:
+                self.tracer.span(rid, "edge_encode", t_try,
+                                 t_try + compute_s, tier=tier.name)
+                if rec.delivered:
+                    self.tracer.span(rid, "transmit", rec.start_s,
+                                     rec.end_s, tier=tier.name)
+                else:
+                    self.tracer.point(rid, "blackout", rec.end_s)
             if rec.delivered:
                 break
             # blackout: retry with backoff + downshift while the budget
@@ -840,7 +1033,7 @@ class AveryEngine:
                       if self.retry is not None else rec.end_s)
             if (self.retry is None or attempts >= self.retry.max_attempts
                     or (deadline is not None and t_next >= deadline)):
-                self.n_blackouts += 1
+                self._bump("blackouts")
                 return Response(request_id=rid,
                                 operator_id=session.operator_id,
                                 intent=intent, tier_name=tier.name,
@@ -849,7 +1042,10 @@ class AveryEngine:
                                 t_delivered=rec.end_s,
                                 edge_compute_s=compute_total,
                                 edge_energy_j=energy_total)
-            self.n_retries += 1
+            self._bump("retries")
+            self.flight.record("retry", t_next, request_id=rid)
+            if self.tracer.enabled:
+                self.tracer.point(rid, "retry", t_next)
             prev_tier, t_try = tier, t_next
             self._advance(t_try)
             transport, decision, bw = self._decide(session, intent, t_try)
@@ -857,9 +1053,14 @@ class AveryEngine:
                                               bw)
             if (decision.tier is not None
                     and decision.tier.payload_mb < prev_tier.payload_mb):
-                self.n_downshifts += 1
+                self._bump("downshifts")
         if deadline is not None and rec.end_s >= deadline:
-            self.n_deadline += 1
+            self._bump("deadline_cancelled")
+            self.flight.record("cancelled", rec.end_s, request_id=rid)
+            if self.tracer.enabled:
+                self.tracer.point(rid, "cancelled", rec.end_s,
+                                  reason="deadline")
+            self.flight.dump("deadline_cancel", stats=self.stats)
             return Response(request_id=rid, operator_id=session.operator_id,
                             intent=intent, tier_name=tier.name,
                             feasible=False, failure="deadline",
@@ -869,10 +1070,13 @@ class AveryEngine:
                             edge_energy_j=energy_total)
         iou = (session.oracle.measure(tier)
                if session.oracle is not None else None)
-        self.n_completed += 1
+        self.flight.record("served", rec.end_s, request_id=rid)
+        if self.tracer.enabled:
+            self.tracer.point(rid, "served", rec.end_s)
+        self._bump("completed")
         self._note_served(session.operator_id)
         if not decision.feasible:
-            self.n_starved += 1        # served best-effort, F_I unmet
+            self._bump("starved")        # served best-effort, F_I unmet
         return Response(request_id=rid, operator_id=session.operator_id,
                         intent=intent, tier_name=tier.name,
                         feasible=decision.feasible, attempts=attempts,
@@ -899,10 +1103,19 @@ class AveryEngine:
                            payload_bytes=int(payload_mb * 1e6))
         rec = transport.send(packet, t + compute_s)
         self._advance(rec.end_s)
+        self.flight.record("served" if rec.delivered else "blackout",
+                           rec.end_s, request_id=rid)
+        if self.tracer.enabled:
+            self.tracer.span(rid, "edge_encode", t, t + compute_s)
+            if rec.delivered:
+                self.tracer.span(rid, "transmit", rec.start_s, rec.end_s)
+                self.tracer.point(rid, "served", rec.end_s)
+            else:
+                self.tracer.point(rid, "blackout", rec.end_s)
         if not rec.delivered:
-            self.n_blackouts += 1
+            self._bump("blackouts")
         else:
-            self.n_completed += 1
+            self._bump("completed")
             self._note_served(session.operator_id)
         return Response(request_id=rid, operator_id=session.operator_id,
                         intent=Intent.CONTEXT, tier_name=None,
@@ -962,4 +1175,25 @@ class AveryEngine:
         if self.mesh is not None:
             out["mesh_devices"] = self.mesh.size
             out["model_shards"] = getattr(self.executor, "model_shards", 1)
+        # observability summary (docs/observability.md): fixed keys read
+        # off the registry's latency histograms — present whether or not
+        # the tracer is on, so traced and untraced runs report the same
+        # surface. The full labelled registry is engine.metrics.as_dict().
+        for cls in QOS_CLASSES:
+            ttft = self.metrics.histogram(f"ttft_s:{cls}")
+            out[f"ttft_{cls}_p50_s"] = ttft.p50
+            out[f"ttft_{cls}_p99_s"] = ttft.p99
+            out[f"ttft_{cls}_n"] = ttft.count
+            out[f"queue_wait_{cls}_p95_s"] = self.metrics.histogram(
+                f"queue_wait_s:{cls}").p95
+            out[f"tokens_per_s_{cls}_p50"] = self.metrics.histogram(
+                f"tokens_per_s:{cls}", hi=1e6).p50
+        transmit = self.metrics.histogram("transmit_s")
+        out["transmit_p50_s"] = transmit.p50
+        out["transmit_p99_s"] = transmit.p99
+        decode = self.metrics.histogram("decode_step_s")
+        out["decode_step_p50_s"] = decode.p50
+        out["decode_step_p99_s"] = decode.p99
+        out["flight_events"] = len(self.flight)
+        out["flight_dumps"] = self.flight.n_dumps
         return out

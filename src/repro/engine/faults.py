@@ -68,6 +68,10 @@ class FaultInjector:
     ``sense_lies``  — ``(start, end, mbps)`` windows where ``bandwidth``
                       reports ``mbps`` instead of the truth, so the
                       controller Selects on bad telemetry.
+    ``recorder``    — optional ``FlightRecorder``-compatible sink: every
+                      injected fault is recorded as an engine event, so
+                      a post-mortem flight dump shows the faults
+                      interleaved with the lifecycle they broke.
     """
     inner: Transport
     seed: int = 0
@@ -75,6 +79,7 @@ class FaultInjector:
     spikes: Sequence[Tuple[float, float, float]] = ()
     drop_rate: float = 0.0
     sense_lies: Sequence[Tuple[float, float, float]] = ()
+    recorder: Optional[Any] = None
     n_sends: int = 0
     n_blackout_failures: int = 0
     n_drops: int = 0
@@ -98,12 +103,14 @@ class FaultInjector:
         end = self._blackout_end(t)
         if end is not None:
             self.n_blackout_failures += 1
+            self._note("fault_blackout", t, packet, until=end)
             return TransmitRecord(packet=packet, start_s=t, end_s=end,
                                   delivered=False)
         # one draw per non-blackout send keeps the stream aligned with
         # the send sequence whatever the drop rate is
         if self._rng.rand() < self.drop_rate:
             self.n_drops += 1
+            self._note("fault_drop", t, packet)
             return TransmitRecord(packet=packet, start_s=t, end_s=t,
                                   delivered=False)
         rec = self.inner.send(packet, t)
@@ -111,10 +118,17 @@ class FaultInjector:
             extra = sum(e for lo, hi, e in self.spikes if lo <= t < hi)
             if extra:
                 self.n_spiked += 1
+                self._note("fault_spike", t, packet, extra_s=extra)
                 rec = TransmitRecord(packet=rec.packet, start_s=rec.start_s,
                                      end_s=rec.end_s + extra,
                                      delivered=True)
         return rec
+
+    def _note(self, kind: str, t: float, packet: Packet,
+              **data: Any) -> None:
+        if self.recorder is not None:
+            self.recorder.record(kind, t, request_id=packet.seq_id,
+                                 data=data)
 
     # ---- schedule / telemetry ----
 

@@ -68,6 +68,7 @@ from repro.core.intent import Intent
 from repro.core.paging import (TRASH_PAGE, PagePool, pages_for,
                                prefix_digest, prefix_positions)
 from repro.engine.faults import CloudStageError
+from repro.engine.observability import Tracer
 from repro.engine.scheduler import FifoScheduler, qos_class
 from repro.engine.speculative import (DraftModel, SpecStats,
                                       SpeculativeConfig, greedy_accept)
@@ -89,6 +90,7 @@ class _PendingRequest:
     queue_wait: float = 0.0           # total time queued (all segments)
     resumes: int = 0                  # times parked by preemption
     resume_tokens: Optional[List[int]] = None  # generated-so-far tokens
+    t_first_token: Optional[float] = None  # first admission (TTFT anchor)
 
 
 @dataclass
@@ -107,6 +109,7 @@ class _SlotState:
     steps_done: int = 0
     batch_acc: int = 0                # sum of co-active slots over steps
     replay: Optional[Deque[int]] = None  # parked tokens to re-decode
+    t_admit: float = 0.0              # this residency segment's start
 
 
 class InflightDecoder:
@@ -126,8 +129,16 @@ class InflightDecoder:
                  spec_gate: Optional[Callable[[SpecStats], bool]] = None,
                  spec_prefix_rows: Optional[Dict[Any, Any]] = None,
                  scheduler: Optional[Any] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[Any] = None,
+                 wallclock: Optional[Callable[[], float]] = None):
         self.executor = executor
+        # observability (engine.observability): the engine threads its
+        # tracer/registry through; a standalone decoder records nothing
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._metrics = metrics
+        self._wallclock = wallclock
         # admission policy (engine.scheduler): the engine passes a
         # per-decoder spawn sharing fleet-wide telemetry/rate buckets;
         # standalone decoders default to plain FIFO
@@ -306,8 +317,21 @@ class InflightDecoder:
                 "failure": "deadline"})
             return 0
         try:
-            self._admit_one(item)
+            slot, st = self._admit_one(item)
             self.scheduler.note_admitted(item, now)
+            st.t_admit = now
+            if item.t_first_token is None:
+                item.t_first_token = now   # token 0 exists from here on
+            if self.tracer.enabled:
+                rid = item.seq_id
+                self.tracer.span(rid, "queue", item.t_enqueue,
+                                 max(now, item.t_enqueue))
+                if item.resumes and item.resume_tokens is not None:
+                    self.tracer.point(rid, "resume", now, slot=slot,
+                                      replayed=len(item.resume_tokens))
+                self.tracer.span(
+                    rid, "prefix_hit" if st.prefix_hit else "prefill",
+                    now, now, slot=slot)
             return 1
         except CloudStageError as e:
             self.n_stage_faults += 1
@@ -317,12 +341,13 @@ class InflightDecoder:
                 "failure": "cloud_error", "error": str(e)})
             return 0
 
-    def _admit_one(self, item: _PendingRequest) -> None:
-        """Prefill one request into a free slot. Any stage failure
-        unwinds exactly the pages acquired so far and re-raises, so a
-        fault mid-admission never leaks a page or corrupts the prefix
-        store (a faulted miss leaves the store either without the entry
-        or with a fully written one)."""
+    def _admit_one(self, item: _PendingRequest
+                   ) -> Tuple[int, _SlotState]:
+        """Prefill one request into a free slot; returns the slot and
+        its state. Any stage failure unwinds exactly the pages acquired
+        so far and re-raises, so a fault mid-admission never leaks a
+        page or corrupts the prefix store (a faulted miss leaves the
+        store either without the entry or with a fully written one)."""
         page = self.pool.page_size
         ctx = self._prefix_ctx(item.packet)
         key = (item.operator_id, prefix_digest(ctx, item.query))
@@ -400,6 +425,7 @@ class InflightDecoder:
             # request stays token-exact with an uninterrupted one.
             st.replay = deque(item.resume_tokens[1:])
         self.active[slot] = st
+        return slot, st
 
     # ---- cancellation (deadline enforcement) ----
 
@@ -480,22 +506,30 @@ class InflightDecoder:
             toks[s, 0] = st.tokens[-1]
             pos[s] = st.pos
             write_slot[s] = base + len(st.tokens) - 1
+        wc = self._wallclock
+        w0 = wc() if wc is not None else 0.0
         try:
             logits, seg, self.pool.kv = self.executor.cloud_decode_rows(
                 self.pool.kv, self.page_tables, self.positions, toks, pos,
                 write_slot)
         except CloudStageError as e:
             return self._fail_step(e)
+        if wc is not None and self._metrics is not None:
+            self._metrics.histogram("decode_step_s").observe(wc() - w0)
         logits, seg = np.asarray(logits), np.asarray(seg)
         live = len(self.active)
         self.n_steps += 1
         self.n_slot_steps += live
+        now = self._clock()
         finished = 0
         for s, st in list(self.active.items()):
             n = len(st.tokens)
             self.positions[s, base + n - 1] = st.pos
             st.steps_done += 1
             st.batch_acc += live
+            if self.tracer.enabled:
+                self.tracer.point(st.req.seq_id, "decode_step", now,
+                                  slot=s, step=self.step_idx)
             if n < self.T:
                 if st.replay:
                     # replaying a parked run: the stored token IS the
@@ -547,16 +581,21 @@ class InflightDecoder:
                 clens[s] = 1 + j
             # cover the chunk (incl. the draft overhang) with decode pages
             self._grow_private(s, st, n - 1 + int(clens[s]))
+        wc = self._wallclock
+        w0 = wc() if wc is not None else 0.0
         try:
             logits, seg, self.pool.kv = self.executor.cloud_verify_rows(
                 self.pool.kv, self.page_tables, self.positions, toks, pos,
                 write_slot, clens)
         except CloudStageError as e:
             return self._fail_step(e)
+        if wc is not None and self._metrics is not None:
+            self._metrics.histogram("verify_step_s").observe(wc() - w0)
         logits, seg = np.asarray(logits), np.asarray(seg)
         live = len(self.active)
         self.n_steps += 1
         self.n_slot_steps += live
+        now = self._clock()
         finished = 0
         for s, st in list(self.active.items()):
             n = len(st.tokens)
@@ -581,16 +620,18 @@ class InflightDecoder:
                         self.scheduler.note_replayed()
             st.steps_done += 1
             st.batch_acc += live
+            if self.tracer.enabled:
+                self.tracer.point(st.req.seq_id, "verify_step", now,
+                                  slot=s, step=self.step_idx,
+                                  drafted=j, accepted=int(m))
             if j:
                 # accepted drafts the draft model itself fed (d_1..d_{j-1}
                 # — the j-th came off the last feed's logits) already live
                 # in its cache at their committed positions: skip their
                 # catch-up feed next round
                 self.draft.commit(s, n + min(m, j - 1))
-                self.spec_stats.drafted += j
-                self.spec_stats.accepted += m
-                self.spec_stats.emitted += len(new)
-                self.spec_stats.row_steps += 1
+                self.spec_stats.note_chunk(j, m, len(new),
+                                           metrics=self._metrics)
                 # rollback: free decode pages past the accepted length
                 dropped = self.pool.rollback_to(st.private_ids, n + m)
                 if dropped:
@@ -638,6 +679,13 @@ class InflightDecoder:
         """Deliver a finished row: decode its mask from the stored SAM
         feats and the captured <SEG> state, hand the result back, and
         release its pages."""
+        if self.tracer.enabled:
+            # close this residency segment: preemption round-trips give
+            # one decode span per segment, bounded by park/resume points
+            now = self._clock()
+            self.tracer.span(st.req.seq_id, "decode", st.t_admit,
+                             max(now, st.t_admit), slot=s,
+                             tokens=len(st.tokens))
         mask = None
         if st.feats is not None:
             try:
@@ -664,6 +712,7 @@ class InflightDecoder:
             "speculative": st.speculative,
             "preemptions": st.req.resumes,
             "queue_wait": st.req.queue_wait,
+            "t_first_token": st.req.t_first_token,
         })
         if st.req.resumes:
             self.scheduler.note_resumed_served()
@@ -689,6 +738,12 @@ class InflightDecoder:
         reference, and requeue the request at the front of its class
         carrying its generated-so-far tokens. Re-admission replays them
         from the (usually still cached) prefix, token-exactly."""
+        if self.tracer.enabled:
+            now = self._clock()
+            self.tracer.span(st.req.seq_id, "decode", st.t_admit,
+                             max(now, st.t_admit), slot=slot,
+                             tokens=len(st.tokens))
+            self.tracer.point(st.req.seq_id, "park", now, slot=slot)
         self.pool.rollback_to(st.private_ids, 0)
         self.pool.release(st.prefix_ids)
         self.page_tables[slot] = TRASH_PAGE

@@ -141,6 +141,7 @@ class _SchedulerBase:
         self.telemetry = SchedTelemetry()
         self._buckets: Dict[str, _TokenBucket] = {}
         self._children: List[Any] = []
+        self._metrics: Optional[Any] = None
 
     # -- prototype side --
 
@@ -148,8 +149,18 @@ class _SchedulerBase:
         child = self._fresh()
         child.telemetry = self.telemetry
         child._buckets = self._buckets
+        child._metrics = self._metrics
         self._children.append(child)
         return child
+
+    def bind_metrics(self, registry: Any) -> None:
+        """Attach the engine's :class:`MetricsRegistry`: admissions then
+        also feed the per-class ``sched_wait_s:<cls>`` histograms (the
+        bounded-deque percentiles in ``stats()`` stay authoritative for
+        back-compat; the registry adds p99 and the full surface)."""
+        self._metrics = registry
+        for child in self._children:
+            child._metrics = registry
 
     def _fresh(self):                          # pragma: no cover
         raise NotImplementedError
@@ -205,7 +216,10 @@ class _SchedulerBase:
         (summed across preemption round-trips) and sample it."""
         wait = max(0.0, now - item.t_enqueue)
         item.queue_wait += wait
-        self.telemetry.note_admitted(qos_class(item.intent), wait)
+        cls = qos_class(item.intent)
+        self.telemetry.note_admitted(cls, wait)
+        if self._metrics is not None:
+            self._metrics.histogram(f"sched_wait_s:{cls}").observe(wait)
 
     def note_expired(self) -> None:
         self.telemetry.expired_pending += 1

@@ -103,6 +103,20 @@ class SpecStats:
         the plain-decode floor; k+1 the full-acceptance ceiling."""
         return self.emitted / self.row_steps if self.row_steps else 0.0
 
+    def note_chunk(self, drafted: int, accepted: int, emitted: int,
+                   metrics: Optional[Any] = None) -> None:
+        """Fold one drafting row's verify-chunk outcome in; with a
+        ``MetricsRegistry`` attached the per-chunk acceptance fraction
+        also feeds the ``spec_accept_rate`` histogram (the registry's
+        view of the same self-awareness signal the policy gates on)."""
+        self.drafted += drafted
+        self.accepted += accepted
+        self.emitted += emitted
+        self.row_steps += 1
+        if metrics is not None and drafted:
+            metrics.histogram("spec_accept_rate").observe(
+                accepted / drafted)
+
     def merge(self, other: "SpecStats") -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name,

@@ -43,6 +43,10 @@ class FleetResult:
     # shared-engine telemetry snapshot at drain (scheduler counters,
     # per-operator served counts, rejections) — empty for old callers
     stats: Dict[str, Any] = field(default_factory=dict)
+    # the shared engine's Tracer when the fleet ran with trace= (one
+    # lifecycle trace per frame; ``tracer.dump(path)`` writes Perfetto
+    # JSON) — None for untraced runs
+    tracer: Any = None
 
     @property
     def aggregate_pps(self) -> float:
@@ -61,7 +65,7 @@ class FleetResult:
 
 def run_fleet(lut: SystemLUT, trace: BandwidthTrace, n_uavs: int,
               spec: MissionSpec, executor=None, deploy=None,
-              scheduler=None) -> FleetResult:
+              scheduler=None, engine_trace: bool = False) -> FleetResult:
     """Equal-share scheduler: each UAV sees trace/N.
 
     All N UAV sessions ride one ``AveryEngine``; pass ``scheduler=``
@@ -76,7 +80,7 @@ def run_fleet(lut: SystemLUT, trace: BandwidthTrace, n_uavs: int,
     share = BandwidthTrace(trace.samples / n_uavs,
                            name=f"{trace.name}/share{n_uavs}")
     engine = AveryEngine(lut=lut, executor=executor, deploy=deploy,
-                         scheduler=scheduler)
+                         scheduler=scheduler, trace=engine_trace)
     shared_oracle = (FidelityOracle(lut, spec, executor=executor)
                      if executor is not None else None)
     sessions = []
@@ -102,4 +106,5 @@ def run_fleet(lut: SystemLUT, trace: BandwidthTrace, n_uavs: int,
         if steps[i] > 100_000:
             continue
         heapq.heappush(heap, (t_next, i))
-    return FleetResult(n_uavs=n_uavs, logs=logs, stats=dict(engine.stats))
+    return FleetResult(n_uavs=n_uavs, logs=logs, stats=dict(engine.stats),
+                       tracer=engine.tracer if engine_trace else None)

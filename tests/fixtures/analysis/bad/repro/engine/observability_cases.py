@@ -1,0 +1,24 @@
+"""AV6xx positives: prints on the serving path, unbounded event lists."""
+
+
+def debug_print(response):
+    # AV601: stdout is the bench report, not a log sink
+    print("served", response.request_id)
+
+
+class LeakyDecoder:
+    """Accumulates per-event state forever: a mission-lifetime decoder
+    whose lists nothing bounds."""
+
+    def __init__(self):
+        self.events = []
+        self.step_log = []
+
+    def on_event(self, ev):
+        # AV602: plain list, no deque, no len() guard, no drain path
+        self.events.append(ev)
+
+    def step(self, result):
+        # AV602: same shape, second attribute
+        self.step_log.append(result)
+        print("step", result)               # AV601 inside a class too

@@ -1,0 +1,76 @@
+"""AV6xx negatives: every sanctioned bounding idiom, exercised."""
+from collections import deque
+
+MAX_EVENTS = 16
+
+
+class RingDecoder:
+    """deque(maxlen=...) is the sanctioned ring idiom."""
+
+    def __init__(self):
+        self.events = deque(maxlen=MAX_EVENTS)
+
+    def on_event(self, ev):
+        self.events.append(ev)          # bounded by the ring
+
+
+class GuardedFuture:
+    """The cap-and-count idiom (RequestFuture.emit)."""
+
+    def __init__(self):
+        self.events = []
+        self.dropped = 0
+
+    def emit(self, ev):
+        if len(self.events) < MAX_EVENTS:
+            self.events.append(ev)
+        else:
+            self.dropped += 1
+
+
+class DrainingEngine:
+    """Reassignment outside __init__ is a drain path (engine._order)."""
+
+    def __init__(self):
+        self.order = []
+        self.records = []
+
+    def submit(self, rid):
+        self.order.append(rid)
+
+    def drain(self):
+        done, remaining = [], []
+        for rid in self.order:
+            (done if rid < 0 else remaining).append(rid)
+        self.order = remaining
+        return done
+
+    def send(self, rec):
+        self.records.append(rec)
+        del self.records[:-MAX_EVENTS]   # del-slice bound (transport)
+
+
+class SessionIndex:
+    """The appended value escapes: an index of caller-owned objects
+    (engine.session), not an event log."""
+
+    def __init__(self):
+        self.sessions = []
+
+    def session(self, operator_id):
+        sess = {"operator_id": operator_id}
+        self.sessions.append(sess)
+        return sess
+
+
+class PoppingQueue:
+    """A shrinking method anywhere in the class counts as a bound."""
+
+    def __init__(self):
+        self.queue = []
+
+    def push(self, item):
+        self.queue.append(item)
+
+    def pop_next(self):
+        return self.queue.pop(0) if self.queue else None

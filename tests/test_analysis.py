@@ -33,6 +33,7 @@ def _codes(tree, checker=None):
     ("futures", {"AV301", "AV302"}),
     ("refcount", {"AV401"}),
     ("determinism", {"AV501", "AV502", "AV503", "AV504"}),
+    ("observability", {"AV601", "AV602"}),
 ])
 def test_checker_catches_bad_and_passes_good(checker, codes):
     assert _codes(BAD, checker) == codes
@@ -142,10 +143,24 @@ def test_committed_baseline_is_near_empty():
 
 
 def test_host_only_modules_have_no_jax_imports():
-    """Belt and braces for AV201: the three host-only modules really
-    import no jax today (the checker test proves detection; this pins
-    the current tree)."""
+    """Belt and braces for AV201: the host-only modules really import
+    no jax today (the checker test proves detection; this pins the
+    current tree)."""
     for rel in ("engine/scheduler.py", "engine/policy.py",
-                "engine/faults.py"):
+                "engine/faults.py", "engine/observability.py"):
         text = (REPO / "src" / "repro" / rel).read_text()
         assert "import jax" not in text, rel
+
+
+def test_observability_checker_granularity():
+    """Both AV602 idioms in the bad fixture are caught per attribute,
+    and every sanctioned bounding idiom appears in the good fixture."""
+    hits = [f for f in _findings(BAD, "observability")
+            if f.code == "AV602"]
+    assert {f.symbol for f in hits} == {"LeakyDecoder.on_event",
+                                        "LeakyDecoder.step"}
+    good_src = (GOOD / "repro/engine/observability_cases.py").read_text()
+    for idiom in ("deque(maxlen", "len(self.events)", "del self.records",
+                  "self.order = remaining", "return sess",
+                  "self.queue.pop"):
+        assert idiom in good_src

@@ -1,0 +1,436 @@
+"""Engine observability: the span tracer (lifecycle invariants,
+Perfetto export, zero-residue when disabled), the metrics registry
+(log-bucket histograms, get-or-create instruments), the flight
+recorder (bounded ring, autodump on hard failures), the ``stats()``
+key-stability snapshot, and the <5% tracing-overhead budget."""
+import json
+import time
+
+import dataclasses
+import numpy as np
+import pytest
+
+from repro.core.intent import Intent
+from repro.engine import (AveryEngine, FaultyExecutor, QoSScheduler,
+                          RetryPolicy)
+from repro.engine.observability import (FlightRecorder, Histogram,
+                                        MetricsRegistry, RequestTrace,
+                                        Span, Tracer, validate_chrome_trace,
+                                        validate_trace, validate_traces)
+
+from test_engine import LUT, StubExecutor, _edge_requests, _insight_images
+
+REQUIRED_SNAPSHOT = "tests/fixtures/engine_stats_keys.json"
+
+
+# ---- Histogram: log buckets, percentiles, O(1) memory ----
+
+
+def test_histogram_empty_and_single_value():
+    h = Histogram("ttft_s")
+    assert h.p50 == 0.0 and h.mean == 0.0
+    assert h.as_dict()["count"] == 0 and h.as_dict()["min"] == 0.0
+    for _ in range(5):
+        h.observe(0.5)
+    # vmin == vmax clamps every percentile to the exact value
+    assert h.count == 5 and h.mean == 0.5
+    assert h.p50 == 0.5 and h.p95 == 0.5 and h.p99 == 0.5
+
+
+def test_histogram_percentiles_ordered_and_bounded():
+    h = Histogram("queue_wait_s", lo=1e-3, hi=1e3, per_decade=8)
+    rng = np.random.RandomState(0)
+    vals = rng.lognormal(mean=0.0, sigma=1.5, size=500)
+    for v in vals:
+        h.observe(float(v))
+    assert h.count == 500
+    assert h.vmin <= h.p50 <= h.p95 <= h.p99 <= h.vmax
+    # one-bucket resolution: the p50 estimate brackets the true median
+    true = float(np.median(vals))
+    assert h.p50 <= true * 10 ** (1 / 8) + 1e-12
+    assert h.p50 >= true * 10 ** (-1 / 8) - 1e-12
+
+
+def test_histogram_underflow_overflow_and_validation():
+    h = Histogram("x", lo=0.1, hi=10.0, per_decade=4)
+    h.observe(0.001)                      # underflow bucket
+    h.observe(1e5)                        # overflow bucket
+    assert h.counts[0] == 1 and h.counts[-1] == 1
+    assert h.p99 == 1e5                   # overflow reads the true max
+    assert h.vmin == 0.001
+    with pytest.raises(ValueError):
+        Histogram("bad", lo=0.0, hi=1.0)
+    with pytest.raises(ValueError):
+        Histogram("bad", lo=1.0, hi=1.0)
+
+
+def test_histogram_memory_is_fixed():
+    h = Histogram("x", lo=1e-4, hi=1e4, per_decade=8)
+    n_buckets = len(h.counts)
+    for i in range(10_000):
+        h.observe(1e-5 + i)
+    assert len(h.counts) == n_buckets     # no unbounded sample list
+    assert h.count == 10_000
+
+
+def test_metrics_registry_get_or_create():
+    r = MetricsRegistry()
+    assert r.counter("served") is r.counter("served")
+    r.counter("served").inc(3)
+    assert r.counter("served").value == 3
+    r.gauge("depth").set(7)
+    assert r.gauge("depth").value == 7.0
+    # histogram params bind on first touch only
+    h = r.histogram("tok_s", hi=1e6)
+    assert r.histogram("tok_s") is h
+    h.observe(2.0)
+    flat = r.as_dict()
+    assert flat["served"] == 3 and flat["depth"] == 7.0
+    assert flat["tok_s/count"] == 1 and flat["tok_s/p50"] == 2.0
+
+
+# ---- Tracer: caps, disabled residue, Chrome export ----
+
+
+def test_tracer_disabled_records_nothing():
+    t = Tracer()                          # disabled by default
+    t.begin(1, "op", intent="INSIGHT", t=0.0)
+    t.span(1, "transmit", 0.0, 1.0)
+    t.point(1, "retry", 2.0)
+    assert len(t) == 0 and t.trace(1) is None
+    assert t.to_chrome()["traceEvents"][0]["ph"] == "M"   # meta only
+
+
+def test_tracer_event_and_request_caps():
+    t = Tracer(enabled=True, max_requests=2, max_events=4)
+    for i in range(6):
+        t.span(7, "decode", float(i), float(i) + 0.5)
+    tr = t.trace(7)
+    assert len(tr.spans) == 4 and tr.dropped == 2
+    t.begin(8, "a")
+    t.begin(9, "b")                       # rid 7 evicted (oldest)
+    assert len(t) == 2 and t.trace(7) is None and t.n_evicted == 1
+    t.clear()
+    assert len(t) == 0 and t.n_evicted == 0
+
+
+def test_validate_trace_catches_each_violation():
+    def one(spans=(), points=()):
+        tr = RequestTrace(request_id=1)
+        tr.spans = list(spans)
+        tr.points = list(points)
+        return validate_trace(tr)
+
+    assert one() == []
+    assert "unknown phase" in one([Span("bogus", 0, 0)])[0]
+    assert "ends before" in one([Span("decode", 2.0, 1.0)])[0]
+    assert "overlaps" in one([Span("transmit", 0, 1),
+                              Span("queue", 0.5, 2)])[0]
+    assert "resumes" in one(points=[Span("resume", 1, 1)])[0]
+    assert "served with" in one(points=[Span("park", 1, 1),
+                                        Span("served", 2, 2)])[0]
+    assert "after the cancel" in one(points=[Span("cancelled", 1, 1),
+                                             Span("retry", 2, 2)])[0]
+    # the paired forms pass
+    assert one(points=[Span("park", 1, 1), Span("resume", 2, 2),
+                       Span("served", 3, 3)]) == []
+
+
+def test_chrome_export_tracks_and_validation(tmp_path):
+    t = Tracer(enabled=True)
+    t.begin(0, "uav-A", intent="INSIGHT", t=0.0)
+    t.span(0, "transmit", 0.0, 1.0)
+    t.span(0, "decode", 1.0, 2.0, slot=3)
+    t.point(0, "served", 2.0)
+    doc = t.to_chrome()
+    evs = doc["traceEvents"]
+    names = {(e["ph"], e.get("pid")) for e in evs}
+    assert ("X", 1) in names and ("X", 2) in names    # both track families
+    slot_meta = [e for e in evs if e["ph"] == "M"
+                 and e["args"].get("name") == "slot 3"]
+    assert slot_meta and slot_meta[0]["pid"] == 2
+    span = next(e for e in evs if e["ph"] == "X" and e["pid"] == 1
+                and e["name"] == "transmit")
+    assert span["ts"] == 0.0 and span["dur"] == pytest.approx(1e6)
+    assert validate_chrome_trace(doc) == []
+    path = t.dump(str(tmp_path / "sub" / "trace.json"))
+    assert validate_chrome_trace(json.loads(
+        (tmp_path / "sub" / "trace.json").read_text())) == []
+    assert path.endswith("trace.json")
+    assert validate_chrome_trace({"nope": 1}) != []
+    assert validate_chrome_trace({"traceEvents": []}) != []
+
+
+# ---- FlightRecorder: bounded ring, dumps ----
+
+
+def test_flight_recorder_ring_and_dump(tmp_path):
+    fr = FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.record("tick", float(i), request_id=i)
+    assert len(fr) == 4 and fr.n_recorded == 10
+    assert [e["rid"] for e in fr.snapshot()] == [6, 7, 8, 9]
+    # no autodump dir, no explicit path: a no-op
+    assert fr.dump("oops") is None and fr.n_dumps == 0
+    p = fr.dump("oops", path=str(tmp_path / "f.json"),
+                stats={"completed": 2, "pool": object()})
+    doc = json.loads((tmp_path / "f.json").read_text())
+    assert doc["reason"] == "oops" and doc["n_recorded"] == 10
+    assert len(doc["events"]) == 4
+    assert doc["stats"]["completed"] == 2
+    assert isinstance(doc["stats"]["pool"], str)     # stringified, not lost
+    assert fr.n_dumps == 1 and fr.last_dump == p
+
+
+def test_flight_recorder_autodump_naming(tmp_path):
+    fr = FlightRecorder(capacity=2, autodump_dir=str(tmp_path))
+    fr.record("boom", 1.0)
+    a = fr.dump("pool_invariant")
+    b = fr.dump("pool_invariant")
+    assert a.endswith("flight_000_pool_invariant.json")
+    assert b.endswith("flight_001_pool_invariant.json")
+    assert (tmp_path / "flight_000_pool_invariant.json").is_file()
+
+
+# ---- engine integration: the microbatch path (host-only) ----
+
+
+def _stub_serve(trace):
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(), trace=trace)
+    sess = engine.session("uav-0")
+    rng = np.random.RandomState(0)
+    q = np.zeros((1, 4), np.int32)
+    sess.submit(prompt="is there anyone in the sector?",
+                images=_insight_images(rng), query=q, time_s=0.0)
+    sess.submit(prompt="segment the stranded person",
+                images=_insight_images(rng), query=q, time_s=1.0)
+    engine.drain()
+    return engine
+
+
+def test_traced_microbatch_serve_validates(tmp_path):
+    engine = _stub_serve(trace=True)
+    assert len(engine.tracer) == 2
+    for tr in engine.tracer.traces():
+        assert tr.operator_id == "uav-0"
+        names = [sp.name for sp in tr.spans]
+        assert "edge_encode" in names and "transmit" in names
+        kinds = [pt.name for pt in tr.points]
+        assert "tier_selected" in kinds and "served" in kinds
+    assert validate_traces(engine.tracer) == []
+    path = engine.dump_trace(str(tmp_path / "trace.json"))
+    assert validate_chrome_trace(json.loads(open(path).read())) == []
+
+
+def test_disabled_tracer_zero_residue_and_identical_stats():
+    traced = _stub_serve(trace=True)
+    plain = _stub_serve(trace=False)
+    assert len(plain.tracer) == 0
+    assert plain.stats == traced.stats    # tracing never skews telemetry
+
+
+def test_engine_accepts_configured_tracer_instance():
+    t = Tracer(enabled=True, max_events=8)
+    engine = AveryEngine(lut=LUT, executor=StubExecutor(), trace=t)
+    assert engine.tracer is t
+
+
+def test_profiled_frame_tracing_validates(tmp_path):
+    """submit_frame (the LUT-profiled mission path run_fleet drives)
+    records the same lifecycle spans as submit(): edge_encode + transmit
+    per attempt, retry/blackout points across a fault window, a
+    zero-length transmit-less record for Context frames."""
+    from repro.engine import FaultInjector, LoopbackTransport
+    engine = AveryEngine(
+        lut=LUT, trace=True,
+        transport=FaultInjector(LoopbackTransport(20.0),
+                                blackouts=[(0.0, 30.0)]),
+        retry=RetryPolicy(max_attempts=3, backoff_base_s=1.0))
+    sess = engine.session("uav-7")
+    ins = sess.submit_frame(0.0)
+    ctx = sess.submit_frame(40.0, intent=Intent.CONTEXT)
+    assert ins.feasible and ins.attempts == 2 and ctx.feasible
+    assert len(engine.tracer) == 2
+    assert validate_traces(engine.tracer) == []
+    ins_tr, ctx_tr = engine.tracer.traces()
+    # blackout attempt: edge_encode + blackout point, then retry,
+    # then a full edge_encode + transmit + served
+    names = [sp.name for sp in ins_tr.spans]
+    assert names.count("edge_encode") == 2
+    assert names.count("transmit") == 1
+    kinds = [pt.name for pt in ins_tr.points]
+    assert "blackout" in kinds and "retry" in kinds
+    assert ins_tr.points[-1].name == "served"
+    assert [sp.name for sp in ctx_tr.spans] == ["edge_encode", "transmit"]
+    assert ctx_tr.points[-1].name == "served"
+    path = engine.dump_trace(str(tmp_path / "fleet_trace.json"))
+    assert validate_chrome_trace(json.loads(open(path).read())) == []
+
+
+# ---- engine integration: the in-flight path (real executor) ----
+
+
+@pytest.fixture(scope="module")
+def executor():
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import DualStreamExecutor, profile as prof
+    params, bns, _ = prof.random_init_system(PCFG, lut=LUT)
+    return DualStreamExecutor(pcfg=PCFG, params=params, bottlenecks=bns,
+                              lut=LUT, max_new_tokens=3, flash_decode=False)
+
+
+def test_inflight_trace_full_lifecycle(executor, tmp_path):
+    reqs = _edge_requests(executor, 3, seed=11)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, trace=True)
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    assert validate_traces(engine.tracer) == []
+    for fut in futs:
+        res = fut.result()
+        assert res.failure is None
+        assert res.ttft_s is not None and res.ttft_s >= 0.0
+        tr = engine.tracer.trace(res.request_id)
+        names = [sp.name for sp in tr.spans]
+        assert "transmit" in names and "queue" in names
+        assert "decode" in names
+        assert ("prefill" in names) or ("prefix_hit" in names)
+        assert any(pt.name == "decode_step" for pt in tr.points)
+        assert tr.points[-1].name == "served" or "served" in \
+            [pt.name for pt in tr.points]
+    st = engine.stats
+    # i%3==2 is the CONTEXT request -> latency class; the rest throughput
+    assert st["ttft_latency_n"] == 1 and st["ttft_throughput_n"] == 2
+    assert st["ttft_throughput_p50_s"] >= 0.0
+    assert st["transmit_p50_s"] >= 0.0
+    path = engine.dump_trace(str(tmp_path / "inflight.json"))
+    doc = json.loads(open(path).read())
+    assert validate_chrome_trace(doc) == []
+    # decode-slot tracks really exist in the export
+    assert any(e.get("pid") == 2 and e.get("ph") == "X"
+               for e in doc["traceEvents"])
+
+
+def test_preempted_trace_parks_and_resumes(executor):
+    reqs = _edge_requests(executor, 3, seed=61)
+    bulk, _, urgent = reqs               # i%3==2 is the CONTEXT request
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=1, debug_invariants=True, trace=True,
+                         scheduler=QoSScheduler(latency_patience_s=0.0))
+    f_a = engine.submit_packet(*bulk, time_s=0.0)
+    f_c = engine.submit_packet(*urgent, time_s=1.0)
+    engine.drain()
+    assert f_a.result().preemptions == 1
+    assert validate_traces(engine.tracer) == []
+    tr = engine.tracer.trace(f_a.result().request_id)
+    kinds = [pt.name for pt in tr.points]
+    assert kinds.count("park") == 1 and kinds.count("resume") == 1
+    # one decode span per residency segment, two queue waits
+    names = [sp.name for sp in tr.spans]
+    assert names.count("decode") == 2 and names.count("queue") == 2
+    # the urgent request never parked
+    tr_c = engine.tracer.trace(f_c.result().request_id)
+    assert "park" not in [pt.name for pt in tr_c.points]
+
+
+def test_deadline_cancel_trace_and_flight_dump(executor, tmp_path):
+    reqs = _edge_requests(executor, 2, seed=17)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2, debug_invariants=True, trace=True,
+                         flight_dir=str(tmp_path))
+    sess = engine.session("op")
+    sess.requirements[Intent.INSIGHT] = dataclasses.replace(
+        sess.requirements[Intent.INSIGHT], max_latency_s=5.0)
+    (p1, q1, _), (p2, q2, i2) = reqs
+    late = engine.submit_packet(p1, q1, Intent.INSIGHT, time_s=0.0,
+                                session=sess)
+    # decoding has started (one pump per submit); the second submission
+    # moves the mission clock past the deadline -> mid-decode cancel
+    ok = engine.submit_packet(p2, q2, i2, time_s=12.0, session=sess)
+    engine.drain()
+    assert late.result().failure == "deadline"
+    assert ok.result().failure is None
+    tr = engine.tracer.trace(late.result().request_id)
+    assert tr.points[-1].name == "cancelled"          # terminal event
+    assert validate_traces(engine.tracer) == []
+    dump = tmp_path / "flight_000_deadline_cancel.json"
+    assert dump.is_file()
+    doc = json.loads(dump.read_text())
+    assert doc["reason"] == "deadline_cancel"
+    assert any(e["kind"] == "cancelled" for e in doc["events"])
+    assert doc["stats"]["deadline_cancelled"] == 1
+    assert engine.stats["flight_dumps"] == 1
+
+
+def test_terminal_cloud_error_autodumps_flight(executor, tmp_path):
+    reqs = _edge_requests(executor, 1, seed=37)
+    pkt, q, it = reqs[0]
+    faulty = FaultyExecutor(executor,
+                            fail_at={"cloud_decode_rows": range(32)})
+    engine = AveryEngine(lut=LUT, executor=faulty, batching="inflight",
+                         max_batch=2, debug_invariants=True,
+                         flight_dir=str(tmp_path),
+                         retry=RetryPolicy(max_attempts=2,
+                                           backoff_base_s=0.1))
+    fut = engine.submit_packet(pkt, q, it, time_s=0.0)
+    engine.drain()
+    assert fut.result().failure == "cloud_error"
+    dump = tmp_path / "flight_000_cloud_error.json"
+    assert dump.is_file()
+    doc = json.loads(dump.read_text())
+    assert doc["reason"] == "cloud_error"
+    kinds = {e["kind"] for e in doc["events"]}
+    assert "cloud_error" in kinds and "retry" in kinds
+    assert doc["stats"]["cloud_errors"] == 1
+
+
+# ---- stats() key stability ----
+
+
+def test_stats_key_snapshot(executor):
+    """The engine's stats() surface is load-bearing (benchmarks, fleet
+    reports, the serving docs): its key set for the canonical in-flight
+    scenario is pinned to a checked-in list. A diff here must be a
+    deliberate choice — update tests/fixtures/engine_stats_keys.json in
+    the same change that alters the surface."""
+    from pathlib import Path
+    reqs = _edge_requests(executor, 3, seed=11)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2)
+    for i, (p, q, it) in enumerate(reqs):
+        engine.submit_packet(p, q, it, time_s=float(i))
+    engine.drain()
+    keys = sorted(engine.stats)
+    fixture = Path(__file__).resolve().parent / "fixtures" / \
+        "engine_stats_keys.json"
+    expected = json.loads(fixture.read_text())
+    assert keys == expected, (
+        "engine.stats() keys changed; if intentional, update "
+        f"{REQUIRED_SNAPSHOT} in the same commit")
+
+
+# ---- tracing overhead budget ----
+
+
+def test_tracing_overhead_under_five_percent(executor):
+    """The tracer must be cheap enough to leave on in benchmarks: a
+    traced serve of the canonical burst stays within 5% of untraced
+    wall time (plus a small absolute epsilon against timer noise)."""
+    reqs = _edge_requests(executor, 4, seed=5)
+
+    def run(trace):
+        t0 = time.perf_counter()
+        engine = AveryEngine(lut=LUT, executor=executor,
+                             batching="inflight", max_batch=4, trace=trace)
+        for i, (p, q, it) in enumerate(reqs):
+            engine.submit_packet(p, q, it, time_s=float(i))
+        engine.drain()
+        return time.perf_counter() - t0
+
+    run(False)                            # warm the compiled stages
+    untraced = min(run(False) for _ in range(3))
+    traced = min(run(True) for _ in range(3))
+    assert traced <= untraced * 1.05 + 0.02, (
+        f"tracing overhead too high: {traced:.4f}s traced vs "
+        f"{untraced:.4f}s untraced")
