@@ -74,3 +74,14 @@ for f in glob.glob(os.path.join(art, "flight_ci_smoke", "*.json")):
 os.rmdir(os.path.join(art, "flight_ci_smoke"))
 print("trace smoke ok:", path)
 EOF
+echo "[ci_fast] profiled frame smoke (stage profiler + device track)"
+# profiled_rows asserts the device-observability contract: the profiled
+# serve is token-exact with the bare one, every served response carries
+# a positive FLOPs/energy ledger, and the validated Perfetto artifact
+# contains the pid-3 device track (docs/observability.md section Profiler)
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_serving --profiled-smoke
+echo "[ci_fast] perf gate (bench rows vs committed baseline)"
+# the smoke budgets tolerate shared-runner wall noise; quality metrics,
+# zero-tolerance page leaks, and missing rows still gate hard
+python scripts/perf_gate.py --smoke --append-history BENCH_history.jsonl

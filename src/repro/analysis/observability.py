@@ -25,6 +25,17 @@ are fixed log buckets. Two anti-patterns defeat it, both scoped to
       - the appended value escapes the class (returned, or also stored
         under a key), i.e. the list is an index of caller-owned
         objects, not an event log.
+  * **AV603** — direct wall-clock reads: ``time.time()`` /
+    ``time.perf_counter()`` / ``time.monotonic()`` (and their ``_ns`` /
+    ``process_time`` siblings) called inside engine modules. The engine
+    runs on the *mission* clock; real wall time is injected once, at
+    construction, through the ``wallclock`` hook
+    (``AveryEngine(wallclock=time.perf_counter)``) so that replays and
+    deterministic tests stay deterministic. A direct clock read is the
+    AV502 loophole: host time leaking into serving logic where no test
+    can pin it. Both spellings are caught — ``import time`` (plain or
+    aliased) attribute calls and ``from time import perf_counter``
+    name calls.
 """
 from __future__ import annotations
 
@@ -39,6 +50,13 @@ CHECKER = "observability"
 ENGINE_FRAGMENT = "repro/engine/"
 
 _BOUNDING_METHODS = {"pop", "popleft", "clear", "remove"}
+
+# the stdlib ``time`` functions that read a host clock (AV603); sleep
+# and conversion helpers (strftime, gmtime, ...) are deliberately not
+# listed — they don't smuggle a timestamp into serving state
+_CLOCK_FNS = {"time", "monotonic", "perf_counter", "process_time",
+              "time_ns", "monotonic_ns", "perf_counter_ns",
+              "process_time_ns"}
 
 
 def in_scope(rel: str) -> bool:
@@ -57,10 +75,44 @@ def check(mod: ModuleInfo, repo: RepoModel) -> List[Finding]:
                                "print() on the serving path; emit a "
                                "stream event, a trace point, or a "
                                "flight-recorder entry instead"))
+        clock = _clock_call(mod, node)
+        if clock is not None:
+            findings.append(_f(mod, node, "AV603",
+                               f"{clock}() in engine code; wall time "
+                               "enters the engine once, through the "
+                               "injected wallclock hook (AveryEngine("
+                               "wallclock=...)) — a direct clock read "
+                               "breaks mission-clock determinism"))
     for node in ast.walk(mod.tree):
         if isinstance(node, ast.ClassDef):
             findings.extend(_check_class(mod, node))
     return findings
+
+
+# ---------------------------------------------------------------------------
+# AV603: direct host-clock reads in engine code
+# ---------------------------------------------------------------------------
+
+
+def _clock_call(mod: ModuleInfo, node: ast.AST) -> Optional[str]:
+    """A call that reads a host clock -> its dotted name; None
+    otherwise. Resolves through the module's import maps so both
+    ``import time as _t; _t.perf_counter()`` and
+    ``from time import perf_counter; perf_counter()`` are caught,
+    while a user-defined ``perf_counter`` shadowing the name is not."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Name):
+        src = mod.from_imports.get(f.id)
+        if src is not None and src[0] == "time" \
+                and src[1] in _CLOCK_FNS:
+            return f"time.{src[1]}"
+    elif isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        if mod.import_alias.get(f.value.id) == "time" \
+                and f.attr in _CLOCK_FNS:
+            return f"time.{f.attr}"
+    return None
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,7 @@ real in-flight engine (CI's averylint step).
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Iterable, List
+from typing import Any, Dict, Iterable, List
 
 
 class RecompileBudgetError(AssertionError):
@@ -49,36 +49,46 @@ def _is_jitted(obj: Any) -> bool:
     return callable(getattr(obj, "_cache_size", None))
 
 
-def jit_roots(engine: Any) -> List[Any]:
-    """Every jitted callable reachable from the engine: executor
-    attributes, keyed compile caches (dict values), and each live
-    decoder's draft-model jits. Re-discovered on every count so jits
-    that appear *after* arming (a new cache entry, a new decoder's
-    draft) are counted — that is the point."""
-    objs: List[Any] = [_unwrap(engine.executor)]
-    for dec in getattr(engine, "_inflight", {}).values():
-        objs.append(dec)
-        draft = getattr(dec, "draft", None)
+def named_jit_roots(engine: Any) -> "Dict[str, Any]":
+    """Every jitted callable reachable from the engine, labelled by
+    where it hangs: ``executor.<attr>`` for the executor's fixed jits,
+    ``executor.<attr>[<key>]`` for keyed compile-cache entries, and
+    ``decoder[<qlen>].<attr>`` / ``draft[<qlen>].<attr>`` for each live
+    decoder's jits. Re-discovered on every count so jits that appear
+    *after* arming (a new cache entry, a new decoder's draft) are
+    counted — that is the point. The labels are what the compile
+    observatory attributes compile events to."""
+    objs: List[Any] = [("executor", _unwrap(engine.executor))]
+    for qlen, dec in getattr(engine, "_inflight", {}).items():
+        objs.append((f"decoder[{qlen}]", dec))
+        draft = _unwrap(getattr(dec, "draft", None))
         if draft is not None:
-            objs.append(draft)
-    roots: List[Any] = []
+            objs.append((f"draft[{qlen}]", draft))
+    roots: "Dict[str, Any]" = {}
     seen = set()
 
-    def add(val: Any) -> None:
+    def add(label: str, val: Any) -> None:
         if _is_jitted(val) and id(val) not in seen:
             seen.add(id(val))
-            roots.append(val)
+            roots[label] = val
 
-    for obj in objs:
-        for val in vars(obj).values():
-            add(val)
+    for prefix, obj in objs:
+        if obj is None:
+            continue
+        for name, val in vars(obj).items():
+            add(f"{prefix}.{name}", val)
             if isinstance(val, dict):
-                for v in val.values():
-                    add(v)
+                for k, v in val.items():
+                    add(f"{prefix}.{name}[{k}]", v)
             elif isinstance(val, (list, tuple)):
-                for v in val:
-                    add(v)
+                for i, v in enumerate(val):
+                    add(f"{prefix}.{name}[{i}]", v)
     return roots
+
+
+def jit_roots(engine: Any) -> List[Any]:
+    """The engine's jit roots, unlabelled (see :func:`named_jit_roots`)."""
+    return list(named_jit_roots(engine).values())
 
 
 class RecompileSanitizer:

@@ -110,6 +110,8 @@ class _SlotState:
     batch_acc: int = 0                # sum of co-active slots over steps
     replay: Optional[Deque[int]] = None  # parked tokens to re-decode
     t_admit: float = 0.0              # this residency segment's start
+    flops: float = 0.0                # attributed cloud FLOPs (cost ledger)
+    hbm_bytes: float = 0.0            # attributed HBM traffic (cost ledger)
 
 
 class InflightDecoder:
@@ -132,8 +134,15 @@ class InflightDecoder:
                  clock: Optional[Callable[[], float]] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[Any] = None,
-                 wallclock: Optional[Callable[[], float]] = None):
+                 wallclock: Optional[Callable[[], float]] = None,
+                 profiler: Optional[Any] = None,
+                 cost: Optional[Any] = None):
         self.executor = executor
+        # device-level observability (engine.profiler): the profiler
+        # wraps lazily built draft models; the cost model attributes
+        # analytic FLOPs/HBM bytes to each request as it decodes
+        self._profiler = profiler
+        self._cost = cost
         # observability (engine.observability): the engine threads its
         # tracer/registry through; a standalone decoder records nothing
         self.tracer = tracer if tracer is not None else Tracer()
@@ -417,6 +426,10 @@ class InflightDecoder:
             joined_step=self.step_idx, prefix_ids=entry.page_ids,
             private_ids=private, prefix_hit=hit,
             speculative=speculative)
+        if self._cost is not None and not hit:
+            # a prefix hit rides cached pages: only the miss pays (and is
+            # charged for) the full-sequence prefill
+            st.flops = self._cost.prefill_flops(self.prefix_len)
         if item.resume_tokens:
             # a parked victim resumes from its prefix: token 0 re-emerges
             # from the (cached or re-prefilled) prefix logits, the rest
@@ -448,7 +461,7 @@ class InflightDecoder:
 
     def _make_draft(self) -> DraftModel:
         cfg = self.spec
-        return DraftModel(
+        draft = DraftModel(
             cfg.draft_params or self.executor.params,
             cfg.draft_pcfg or self.executor.pcfg,
             slots=self.slots, prefix_len=self.prefix_len,
@@ -459,6 +472,9 @@ class InflightDecoder:
             # sharded serving context: draft stages jitted with mesh
             # shardings so the draft rides the same tensor parallelism
             fns_factory=getattr(self.executor, "draft_fns", None))
+        if self._profiler is not None:
+            draft = self._profiler.wrap_draft(draft)
+        return draft
 
     # ---- the lockstep decode step ----
 
@@ -527,6 +543,10 @@ class InflightDecoder:
             self.positions[s, base + n - 1] = st.pos
             st.steps_done += 1
             st.batch_acc += live
+            if self._cost is not None:
+                # one fed token attending st.pos + 1 cached positions
+                st.flops += self._cost.token_flops(st.pos + 1)
+                st.hbm_bytes += self._cost.token_hbm_bytes(st.pos + 1)
             if self.tracer.enabled:
                 self.tracer.point(st.req.seq_id, "decode_step", now,
                                   slot=s, step=self.step_idx)
@@ -600,6 +620,14 @@ class InflightDecoder:
         for s, st in list(self.active.items()):
             n = len(st.tokens)
             j = n_drafted.get(s, 0)
+            if self._cost is not None:
+                # every fed chunk token costs device compute whether or
+                # not its draft is accepted — rejected drafts are real
+                # FLOPs, which is exactly what the ledger should show
+                for i in range(int(clens[s])):
+                    st.flops += self._cost.token_flops(st.pos + i + 1)
+                    st.hbm_bytes += self._cost.token_hbm_bytes(
+                        st.pos + i + 1)
             # greedy[i]: the serving model's own pick after chunk token i
             greedy = np.argmax(logits[s, :1 + j], axis=-1)
             m = greedy_accept(toks[s, 1:1 + j], greedy) if j else 0
@@ -713,6 +741,9 @@ class InflightDecoder:
             "preemptions": st.req.resumes,
             "queue_wait": st.req.queue_wait,
             "t_first_token": st.req.t_first_token,
+            "cloud_flops": st.flops if self._cost is not None else None,
+            "cloud_hbm_bytes": st.hbm_bytes
+            if self._cost is not None else None,
         })
         if st.req.resumes:
             self.scheduler.note_resumed_served()

@@ -45,6 +45,9 @@ from typing import Any, Dict, List, Optional
 # vocabulary; point events are open-ended)
 PHASE_SPANS = ("edge_encode", "transmit", "queue", "prefill",
                "prefix_hit", "decode")
+# Chrome-export track families: pid 1 = operators, pid 2 = decode
+# slots, pid 3 = device stages (the StageProfiler's wall-clock view)
+DEVICE_TRACK_PID = 3
 _EPS = 1e-9
 
 
@@ -282,6 +285,16 @@ def validate_chrome_trace(doc: Dict[str, Any]) -> List[str]:
     rebuilt: Dict[int, RequestTrace] = {}
     for ev in events:
         ph = ev.get("ph")
+        if ph in ("X", "i") and ev.get("pid") == DEVICE_TRACK_PID:
+            # device-stage events are batch-level (no rid); check the
+            # timeline shape instead of the request lifecycle
+            if not isinstance(ev.get("ts"), (int, float)):
+                return [f"device event {ev.get('name')!r} has no "
+                        f"numeric ts"]
+            if ph == "X" and float(ev.get("dur", 0.0)) < 0.0:
+                return [f"device span {ev.get('name')!r} has negative "
+                        f"dur"]
+            continue
         if ph not in ("X", "i") or ev.get("pid") != 1:
             continue
         rid = ev.get("args", {}).get("rid")
@@ -413,6 +426,27 @@ class Histogram:
                 "p50": self.p50, "p95": self.p95, "p99": self.p99,
                 "min": self.vmin if self.count else 0.0,
                 "max": self.vmax if self.count else 0.0}
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other``'s observations into this histogram (bucket
+        counts add; min/max widen). Both must share the same bucket
+        geometry — merging is what aggregates per-shard or per-decoder
+        histograms, and mismatched edges would silently misbin."""
+        if (self.lo != other.lo or self.per_decade != other.per_decade
+                or len(self.edges) != len(other.edges)):
+            raise ValueError(
+                f"histogram geometry mismatch: {self.name} "
+                f"[lo={self.lo}, n={len(self.edges)}, "
+                f"per_decade={self.per_decade}] vs {other.name} "
+                f"[lo={other.lo}, n={len(other.edges)}, "
+                f"per_decade={other.per_decade}]")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        return self
 
 
 class MetricsRegistry:

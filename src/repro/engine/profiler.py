@@ -1,0 +1,398 @@
+"""Device-level performance observability: the stage profiler, compile
+observatory, and cost/energy ledger.
+
+PR 9's instruments observe the *mission-clock request lifecycle*; this
+module observes the *device*: where wall time, compiles, FLOPs, and
+joules actually go, per executor stage. AVERY's controller is embodied
+self-awareness — it adapts because it can measure itself — and these
+are the measurements the adaptive policy (and the perf-regression gate
+in ``scripts/perf_gate.py``) stand on.
+
+Three instruments, one opt-in knob (``AveryEngine(profile=...)``, off
+by default, zero residue when off):
+
+  * :class:`StageProfiler` — wraps every jitted executor stage entry
+    point (:class:`ProfiledExecutor`) and the draft model
+    (:class:`ProfiledDraft`) with block-until-ready-bounded per-call
+    wall timing into per-(stage, tier, bucket) log-bucket
+    :class:`~repro.engine.observability.Histogram`\\ s, keeps a bounded
+    span ring, and exports the spans as a **device track** (pid 3) into
+    the engine's Perfetto ``dump_trace`` document so operator spans and
+    device stages line up on one timeline. Wall time comes from the
+    engine's injectable ``wallclock`` (AV502/AV603: engine code never
+    reads the wall clock itself), span placement from the mission clock.
+  * :class:`CompileObservatory` — diffs a per-call census of the
+    engine's labelled jit roots (``analysis.sanitizers.named_jit_roots``
+    — executor fixed jits, keyed ``_compiled`` cache entries, draft
+    jits) and records every compile event: stage name, root label,
+    compile wall time, cumulative count. Surfaced in ``engine.stats()``
+    and the flight recorder, it turns PR 8's fatal recompile budget
+    into graded visibility — pool-growth churn becomes a visible spike,
+    not just an exception.
+  * :class:`CloudCostModel` — joins measured stage timings with the
+    analytic FLOPs/HBM-bytes/energy models in ``network/energy.py`` to
+    attribute per-request compute cost (``Response``-level
+    FLOPs/bytes/joules via the in-flight decoder's per-slot ledger) and
+    an achieved-vs-roofline fraction for the paged decode stages.
+
+The ledger covers the paged LLM serving stages (prefill on a prefix
+miss, plus every decode/verify token at its attended context length);
+edge/SAM/mask costs already have analytic models in
+``network/energy.py`` and stay out of the per-request ledger.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.engine.observability import (DEVICE_TRACK_PID, FlightRecorder,
+                                        MetricsRegistry)
+
+# the fixed stage vocabulary: stats() keys derive from this tuple so the
+# profiled stats surface is deterministic whether or not a stage ran
+PROFILED_STAGES = ("edge_context", "edge_insight", "cloud_sam_feats",
+                   "cloud_prefix", "pool_write", "cloud_decode_rows",
+                   "cloud_verify_rows", "cloud_mask", "draft_admit",
+                   "draft")
+# the stages whose ledger FLOPs/bytes the roofline fraction compares
+# against measured wall time (the paged LLM path the cost model covers)
+_LEDGER_STAGES = ("cloud_prefix", "cloud_decode_rows", "cloud_verify_rows")
+
+
+def _block(out: Any) -> None:
+    """Block until every jax leaf of ``out`` is ready, so the wall-time
+    delta bounds the stage's device work instead of its dispatch."""
+    import jax
+    jax.block_until_ready(out)
+
+
+class CloudCostModel:
+    """Analytic per-stage cost of the paged LLM serving path on the
+    cloud device: prefill FLOPs per admitted prefix, per-token decode
+    FLOPs and HBM bytes at the row's attended context length, joules
+    from the device's power envelope."""
+
+    def __init__(self, pcfg: Any, device: Optional[Any] = None):
+        from repro.network.energy import CloudDevice
+        self.llm = pcfg.llm
+        self.device = device if device is not None else CloudDevice()
+
+    def prefill_flops(self, prefix_len: int) -> float:
+        from repro.network.energy import encoder_flops
+        return encoder_flops(self.llm, int(prefix_len))
+
+    def token_flops(self, ctx_len: int) -> float:
+        from repro.network.energy import decode_token_flops
+        return decode_token_flops(self.llm, int(ctx_len))
+
+    def token_hbm_bytes(self, ctx_len: int) -> float:
+        from repro.network.energy import decode_token_hbm_bytes
+        return decode_token_hbm_bytes(self.llm, int(ctx_len))
+
+    def energy_j(self, flops: float) -> float:
+        return self.device.compute_energy_j(flops)
+
+
+class CompileObservatory:
+    """Records every compile event by diffing a census of the engine's
+    labelled jit roots around each profiled stage call. The census is
+    re-discovered each time (``named_jit_roots``), so roots that appear
+    mid-flight — a new ``_compiled`` cache entry, a fresh decoder's
+    draft — are observed the first time they run."""
+
+    def __init__(self, max_events: int = 256,
+                 flight: Optional[FlightRecorder] = None):
+        self._roots_fn: Optional[Callable[[], Dict[str, Any]]] = None
+        self._flight = flight
+        self._last: Dict[str, int] = {}
+        self.events: deque = deque(maxlen=int(max_events))
+        self.n_compiles = 0
+        self.n_events = 0
+        self.compile_wall_s = 0.0
+
+    def bind(self, roots_fn: Callable[[], Dict[str, Any]],
+             flight: Optional[FlightRecorder] = None) -> None:
+        self._roots_fn = roots_fn
+        if flight is not None:
+            self._flight = flight
+
+    def census(self) -> Dict[str, int]:
+        if self._roots_fn is None:
+            return {}
+        out = {}
+        for label, fn in self._roots_fn().items():
+            try:
+                out[label] = int(fn._cache_size())
+            except Exception:
+                continue
+        return out
+
+    def prime(self) -> None:
+        """Take the baseline census without recording events (existing
+        traces are not *new* compiles)."""
+        self._last = self.census()
+
+    def note(self, stage: str, wall_s: float, t: float) -> None:
+        """Diff the census after one profiled ``stage`` call; any cache
+        growth is a compile event whose wall time is (conservatively)
+        the whole call's wall time — compilation dominates a compiling
+        call by orders of magnitude."""
+        for label, n in self.census().items():
+            prev = self._last.get(label, 0)
+            if n <= prev:
+                self._last[label] = n
+                continue
+            delta = n - prev
+            self._last[label] = n
+            self.n_compiles += delta
+            self.n_events += 1
+            self.compile_wall_s += wall_s
+            self.events.append({"stage": stage, "root": label,
+                                "delta": delta, "wall_s": wall_s, "t": t})
+            if self._flight is not None:
+                self._flight.record("compile", t, data={
+                    "stage": stage, "root": label, "delta": delta,
+                    "wall_s": wall_s})
+
+    @property
+    def n_roots(self) -> int:
+        return len(self._last)
+
+
+class StageProfiler:
+    """Per-stage device timing + compile observatory + cost ledger.
+
+    Construct with the same injectable ``wallclock`` the engine uses
+    (``AveryEngine(profile=True, wallclock=time.perf_counter)`` builds
+    one for you), then the engine wraps its executor via :meth:`wrap`
+    and binds the mission clock / jit-root census via :meth:`attach`.
+    Every profiled call costs two wallclock reads, one
+    ``block_until_ready``, a histogram bump, and a census diff — the
+    overhead budget (<5% on a profiled serve) is pinned in tests.
+    """
+
+    def __init__(self, wallclock: Callable[[], float],
+                 max_spans: int = 2048, max_compile_events: int = 256,
+                 device: Optional[Any] = None):
+        if wallclock is None:
+            raise ValueError(
+                "StageProfiler needs an injected wallclock (engine code "
+                "never reads the wall clock itself — AV502/AV603)")
+        self._wallclock = wallclock
+        self._clock: Callable[[], float] = lambda: 0.0
+        self._device = device
+        self.registry = MetricsRegistry()
+        self.spans: deque = deque(maxlen=int(max_spans))
+        self.observatory = CompileObservatory(
+            max_events=max_compile_events)
+        self.n_calls = 0
+        self.wall_s = 0.0
+        # the cost ledger: totals attributed to finished responses
+        self.ledger_flops = 0.0
+        self.ledger_hbm_bytes = 0.0
+        self.ledger_energy_j = 0.0
+
+    # -- engine binding --
+
+    def attach(self, engine: Any) -> None:
+        """Bind the mission clock, the labelled jit-root census, and
+        the flight recorder. Called by the engine at construction; safe
+        to call again (rebinds)."""
+        self._clock = lambda: engine._now
+        if self._device is None:
+            cost = getattr(engine, "cost_model", None)
+            if cost is not None:
+                self._device = cost.device
+
+        def roots() -> Dict[str, Any]:
+            from repro.analysis.sanitizers import named_jit_roots
+            return named_jit_roots(engine)
+
+        self.observatory.bind(roots, flight=getattr(engine, "flight",
+                                                    None))
+        self.observatory.prime()
+
+    def wrap(self, executor: Any) -> "ProfiledExecutor":
+        return ProfiledExecutor(executor, self)
+
+    def wrap_draft(self, draft: Any) -> "ProfiledDraft":
+        return ProfiledDraft(draft, self)
+
+    # -- the timed call path --
+
+    def _call(self, stage: str, fn: Callable, args: tuple, kwargs: dict,
+              tier: Optional[str] = None,
+              bucket: Optional[int] = None) -> Any:
+        w0 = self._wallclock()
+        out = fn(*args, **kwargs)
+        _block(out)
+        dt = self._wallclock() - w0
+        t = self._clock()
+        self.n_calls += 1
+        self.wall_s += dt
+        self.registry.histogram(f"stage_s:{stage}").observe(dt)
+        if tier is not None:
+            self.registry.histogram(
+                f"stage_s:{stage}:tier={tier}").observe(dt)
+        if bucket is not None:
+            self.registry.histogram(
+                f"stage_s:{stage}:b{int(bucket)}").observe(dt)
+        self.spans.append((stage, tier, bucket, t, dt))
+        self.observatory.note(stage, dt, t)
+        return out
+
+    # -- the cost ledger --
+
+    def note_ledger(self, flops: float, hbm_bytes: float,
+                    energy_j: float) -> None:
+        self.ledger_flops += flops
+        self.ledger_hbm_bytes += hbm_bytes
+        self.ledger_energy_j += energy_j
+
+    # -- export --
+
+    def chrome_events(self) -> List[Dict[str, Any]]:
+        """The device track: pid 3, one thread per stage, one ``X`` span
+        per profiled call. The mission clock does not advance during a
+        synchronous drain, so same-stage spans are packed end to end
+        from their mission timestamp (the *durations* are the data; the
+        packing keeps the track readable and the timeline monotone)."""
+        tids: Dict[str, int] = {}
+        cursor: Dict[int, float] = {}
+        events: List[Dict[str, Any]] = []
+        for stage, tier, bucket, t, dt in self.spans:
+            tid = tids.setdefault(stage, len(tids) + 1)
+            ts = max(t * 1e6, cursor.get(tid, 0.0))
+            dur = max(0.0, dt) * 1e6
+            cursor[tid] = ts + dur
+            args: Dict[str, Any] = {"stage": stage}
+            if tier is not None:
+                args["tier"] = tier
+            if bucket is not None:
+                args["bucket"] = int(bucket)
+            events.append({"name": stage, "cat": "device", "ph": "X",
+                           "pid": DEVICE_TRACK_PID, "tid": tid,
+                           "ts": ts, "dur": dur, "args": args})
+        for ev in self.observatory.events:
+            tid = tids.setdefault(ev["stage"], len(tids) + 1)
+            events.append({"name": f"compile:{ev['root']}",
+                           "cat": "compile", "ph": "i", "s": "t",
+                           "pid": DEVICE_TRACK_PID, "tid": tid,
+                           "ts": ev["t"] * 1e6,
+                           "args": {"root": ev["root"],
+                                    "delta": ev["delta"],
+                                    "wall_s": ev["wall_s"]}})
+        meta: List[Dict[str, Any]] = [
+            {"ph": "M", "name": "process_name", "pid": DEVICE_TRACK_PID,
+             "tid": 0, "args": {"name": "device stages"}}]
+        for stage in sorted(tids):
+            meta.append({"ph": "M", "name": "thread_name",
+                         "pid": DEVICE_TRACK_PID, "tid": tids[stage],
+                         "args": {"name": stage}})
+        return meta + events
+
+    def stats_block(self) -> Dict[str, float]:
+        """The profiler's contribution to ``engine.stats`` — a fixed,
+        deterministic key set (derived from :data:`PROFILED_STAGES`)
+        regardless of which stages actually ran."""
+        out: Dict[str, float] = {}
+        measured_ledger_wall = 0.0
+        for stage in PROFILED_STAGES:
+            h = self.registry.histogram(f"stage_s:{stage}")
+            out[f"stage_{stage}_calls"] = h.count
+            out[f"stage_{stage}_p50_s"] = h.p50
+            if stage in _LEDGER_STAGES:
+                measured_ledger_wall += h.total
+        out["profiled_stage_calls"] = self.n_calls
+        out["profiled_wall_s"] = self.wall_s
+        out["compile_events"] = self.observatory.n_compiles
+        out["compile_wall_s"] = self.observatory.compile_wall_s
+        out["compiled_roots"] = self.observatory.n_roots
+        out["ledger_flops_total"] = self.ledger_flops
+        out["ledger_hbm_bytes_total"] = self.ledger_hbm_bytes
+        out["ledger_energy_j_total"] = self.ledger_energy_j
+        frac = 0.0
+        if self._device is not None and measured_ledger_wall > 0.0:
+            frac = self._device.roofline_s(
+                self.ledger_flops,
+                self.ledger_hbm_bytes) / measured_ledger_wall
+        out["decode_roofline_frac"] = frac
+        return out
+
+
+class ProfiledExecutor:
+    """Executor wrapper that times every jitted stage entry point
+    through the profiler (the same ``_inner`` + ``__getattr__`` shape as
+    ``FaultyExecutor``, so sanitizer jit-root discovery unwraps it)."""
+
+    def __init__(self, inner: Any, profiler: StageProfiler):
+        self._inner = inner
+        self._profiler = profiler
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._inner, name)
+
+    def edge_context(self, *a: Any, **kw: Any) -> Any:
+        return self._profiler._call("edge_context",
+                                    self._inner.edge_context, a, kw)
+
+    def edge_insight(self, *a: Any, **kw: Any) -> Any:
+        tier = kw.get("tier", a[1] if len(a) > 1 else None)
+        return self._profiler._call(
+            "edge_insight", self._inner.edge_insight, a, kw,
+            tier=getattr(tier, "name", None))
+
+    def cloud_sam_feats(self, *a: Any, **kw: Any) -> Any:
+        pkt = kw.get("packet", a[0] if a else None)
+        return self._profiler._call(
+            "cloud_sam_feats", self._inner.cloud_sam_feats, a, kw,
+            tier=getattr(pkt, "tier_name", None))
+
+    def cloud_prefix(self, *a: Any, **kw: Any) -> Any:
+        q = kw.get("query", a[1] if len(a) > 1 else None)
+        qlen = None if q is None else int(q.shape[-1])
+        return self._profiler._call("cloud_prefix",
+                                    self._inner.cloud_prefix, a, kw,
+                                    bucket=qlen)
+
+    def pool_write(self, *a: Any, **kw: Any) -> Any:
+        return self._profiler._call("pool_write",
+                                    self._inner.pool_write, a, kw)
+
+    def cloud_decode_rows(self, *a: Any, **kw: Any) -> Any:
+        toks = kw.get("tokens", a[3] if len(a) > 3 else None)
+        bucket = None if toks is None else int(toks.shape[0])
+        return self._profiler._call(
+            "cloud_decode_rows", self._inner.cloud_decode_rows, a, kw,
+            bucket=bucket)
+
+    def cloud_verify_rows(self, *a: Any, **kw: Any) -> Any:
+        toks = kw.get("tokens", a[3] if len(a) > 3 else None)
+        bucket = None if toks is None else int(toks.shape[0])
+        return self._profiler._call(
+            "cloud_verify_rows", self._inner.cloud_verify_rows, a, kw,
+            bucket=bucket)
+
+    def cloud_mask(self, *a: Any, **kw: Any) -> Any:
+        return self._profiler._call("cloud_mask",
+                                    self._inner.cloud_mask, a, kw)
+
+
+class ProfiledDraft:
+    """Draft-model wrapper timing ``admit`` (the draft prefill) and
+    ``draft`` (the lockstep proposal steps) as profiler stages;
+    everything else (``commit``/``release``/telemetry attrs) delegates."""
+
+    def __init__(self, inner: Any, profiler: StageProfiler):
+        self._inner = inner
+        self._profiler = profiler
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._inner, name)
+
+    def admit(self, *a: Any, **kw: Any) -> Any:
+        return self._profiler._call("draft_admit", self._inner.admit,
+                                    a, kw)
+
+    def draft(self, *a: Any, **kw: Any) -> Any:
+        return self._profiler._call("draft", self._inner.draft, a, kw)

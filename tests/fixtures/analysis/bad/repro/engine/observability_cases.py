@@ -1,9 +1,24 @@
-"""AV6xx positives: prints on the serving path, unbounded event lists."""
+"""AV6xx positives: prints on the serving path, unbounded event lists,
+direct host-clock reads."""
+import time as _t
+from time import perf_counter
 
 
 def debug_print(response):
     # AV601: stdout is the bench report, not a log sink
     print("served", response.request_id)
+
+
+def stamp_response(response):
+    # AV603: aliased-module attribute call reads the host clock
+    response.t_wall = _t.time()
+
+
+def measure_step(step):
+    # AV603: from-imported clock, both float and _ns spellings
+    w0 = perf_counter()
+    step()
+    return _t.monotonic_ns() - int(w0 * 1e9)
 
 
 class LeakyDecoder:

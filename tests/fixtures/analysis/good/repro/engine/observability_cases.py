@@ -74,3 +74,28 @@ class PoppingQueue:
 
     def pop_next(self):
         return self.queue.pop(0) if self.queue else None
+
+
+class WallclockTimer:
+    """The sanctioned wall-time idiom (AV603 negative): the clock is
+    injected once at construction — engine code only ever calls the
+    hook, never the stdlib directly."""
+
+    def __init__(self, wallclock=None):
+        self._wallclock = wallclock
+
+    def measure(self, fn):
+        wc = self._wallclock
+        w0 = wc() if wc is not None else 0.0
+        out = fn()
+        return out, (wc() - w0 if wc is not None else 0.0)
+
+
+def perf_counter():
+    """A local name shadowing the stdlib clock: AV603 resolves calls
+    through the module's import maps, so this is not a clock read."""
+    return 0.0
+
+
+def step_budget():
+    return perf_counter()

@@ -33,7 +33,7 @@ def _codes(tree, checker=None):
     ("futures", {"AV301", "AV302"}),
     ("refcount", {"AV401"}),
     ("determinism", {"AV501", "AV502", "AV503", "AV504"}),
-    ("observability", {"AV601", "AV602"}),
+    ("observability", {"AV601", "AV602", "AV603"}),
 ])
 def test_checker_catches_bad_and_passes_good(checker, codes):
     assert _codes(BAD, checker) == codes
@@ -164,3 +164,21 @@ def test_observability_checker_granularity():
                   "self.order = remaining", "return sess",
                   "self.queue.pop"):
         assert idiom in good_src
+
+
+def test_av603_catches_both_import_spellings():
+    """AV603 resolves clock calls through the import maps: the aliased
+    ``import time as _t`` attribute spelling and the ``from time
+    import perf_counter`` name spelling are both caught (exactly the
+    AV502 loopholes), while the good fixture's injected-wallclock hook
+    and a shadowing local ``perf_counter`` stay clean."""
+    hits = [f for f in _findings(BAD, "observability")
+            if f.code == "AV603"
+            and f.path.endswith("observability_cases.py")]
+    assert {f.symbol for f in hits} == {"stamp_response", "measure_step"}
+    assert len(hits) == 3          # _t.time, perf_counter, _t.monotonic_ns
+    msgs = " ".join(f.message for f in hits)
+    for name in ("time.time", "time.perf_counter", "time.monotonic_ns"):
+        assert name in msgs
+    good_src = (GOOD / "repro/engine/observability_cases.py").read_text()
+    assert "wallclock" in good_src and "def perf_counter" in good_src

@@ -64,6 +64,58 @@ def test_histogram_underflow_overflow_and_validation():
         Histogram("bad", lo=1.0, hi=1.0)
 
 
+def test_histogram_one_and_two_sample_percentiles():
+    h = Histogram("x")
+    h.observe(0.2)
+    # a single sample IS every percentile (vmin == vmax clamp)
+    assert h.p50 == h.p95 == h.p99 == 0.2
+    h2 = Histogram("y")
+    h2.observe(0.1)
+    h2.observe(10.0)
+    assert h2.count == 2 and h2.vmin == 0.1 and h2.vmax == 10.0
+    # two samples: p50 resolves to the low bucket, p99 to the high one,
+    # and the monotone-in-q contract holds
+    assert 0.1 <= h2.p50 <= h2.p99 <= 10.0
+    assert h2.p50 < 1.0 < h2.p99
+
+
+def test_histogram_underflow_only_and_overflow_only():
+    under = Histogram("u", lo=0.1, hi=10.0, per_decade=4)
+    for _ in range(3):
+        under.observe(1e-3)
+    assert under.counts[0] == 3 and sum(under.counts[1:]) == 0
+    # percentiles clamp to the true observed range, never to bucket lo
+    assert under.p50 == under.p99 == 1e-3
+    over = Histogram("o", lo=0.1, hi=10.0, per_decade=4)
+    for _ in range(3):
+        over.observe(1e4)
+    assert over.counts[-1] == 3 and sum(over.counts[:-1]) == 0
+    assert over.p50 == over.p99 == 1e4
+
+
+def test_histogram_merge_adds_and_checks_geometry():
+    a = Histogram("ttft_s")
+    b = Histogram("ttft_s")
+    for v in (0.001, 0.5, 2.0):
+        a.observe(v)
+    for v in (0.25, 1e5):
+        b.observe(v)                       # 1e5 lands in b's overflow
+    out = a.merge(b)
+    assert out is a                        # merge-in-place, chainable
+    assert a.count == 5
+    assert a.counts[-1] == 1               # overflow carried across
+    assert a.vmin == 0.001 and a.vmax == 1e5
+    assert a.total == pytest.approx(0.001 + 0.5 + 2.0 + 0.25 + 1e5)
+    assert a.vmin <= a.p50 <= a.p99 <= a.vmax
+    # geometry must match exactly: different lo, hi, or resolution all
+    # refuse rather than silently mis-bucket
+    for other in (Histogram("g", lo=1e-3, hi=1e4),
+                  Histogram("g", lo=1e-4, hi=1e3),
+                  Histogram("g", lo=1e-4, hi=1e4, per_decade=4)):
+        with pytest.raises(ValueError):
+            a.merge(other)
+
+
 def test_histogram_memory_is_fixed():
     h = Histogram("x", lo=1e-4, hi=1e4, per_decade=8)
     n_buckets = len(h.counts)
@@ -383,6 +435,37 @@ def test_terminal_cloud_error_autodumps_flight(executor, tmp_path):
     kinds = {e["kind"] for e in doc["events"]}
     assert "cloud_error" in kinds and "retry" in kinds
     assert doc["stats"]["cloud_errors"] == 1
+
+
+def test_ttft_percentiles_positive_and_ordered(executor):
+    """Regression for the serving/chaos ``ttft_p50_s=0.0`` anomaly:
+    over a real (finite-bandwidth) channel every served request's first
+    token strictly follows its submission, so whenever anything was
+    served the TTFT histogram reports 0 < p50 <= p99. (The anomaly was
+    the loopback transport's instant delivery stamping t_first_token at
+    submission time — a transport bug surfaced as a percentile bug.)"""
+    from repro.engine import ChannelTransport
+    from repro.network.traces import constant_trace
+    reqs = _edge_requests(executor, 4, seed=23)
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=2,
+                         transport=ChannelTransport.from_trace(
+                             constant_trace(20.0, duration_s=60)))
+    futs = [engine.submit_packet(p, q, it, time_s=float(i))
+            for i, (p, q, it) in enumerate(reqs)]
+    engine.drain()
+    served = [f.result() for f in futs if f.result().failure is None]
+    assert served, "channel serve delivered nothing"
+    for r in served:
+        assert r.ttft_s is not None and r.ttft_s > 0.0
+    st = engine.stats
+    seen = 0
+    for cls in ("latency", "throughput"):
+        if st[f"ttft_{cls}_n"] > 0:
+            seen += 1
+            assert 0.0 < st[f"ttft_{cls}_p50_s"] \
+                <= st[f"ttft_{cls}_p99_s"]
+    assert seen > 0
 
 
 # ---- stats() key stability ----

@@ -1,0 +1,214 @@
+"""The perf-regression gate: metric classification, the diff budgets
+(direction + tolerance, zero-tolerance leaks, missing rows/metrics),
+CLI exit codes, the baseline update round-trip, and the sha-stamped
+history log."""
+import copy
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "perf_gate", REPO / "scripts" / "perf_gate.py")
+perf_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_gate)
+
+
+BENCH = {
+    "serving/alpha": {
+        "us": 1000.0, "req_s": 150.0, "ttft_p50_s": 0.01,
+        "ttft_p99_s": 0.5, "page_leaks": 0.0, "seed": 0.0,
+        "delivered_under_slo": 0.96, "note": "free-text",
+    },
+    "serving/beta": {
+        "us": 2000.0, "speedup_vs_paged": 1.4, "acceptance_rate": 0.8,
+    },
+}
+
+
+def _dump(path, records):
+    path.write_text(json.dumps(
+        {"benchmark": "BENCH_serving", "records": records}, indent=2))
+    return str(path)
+
+
+# ---- classification ----
+
+
+@pytest.mark.parametrize("metric,kind", [
+    ("us", "lower"), ("ttft_p50_s", "lower"), ("wait_p95_us", "lower"),
+    ("profile_overhead", "lower"),
+    ("req_s", "higher"), ("delivered_under_slo", "higher"),
+    ("jain", "higher"), ("speedup_vs_paged", "higher"),
+    ("page_leaks", "zero"),
+    ("seed", "ignore"), ("note", "ignore"), ("compile_events", "ignore"),
+    ("ledger_flops_total", "ignore"), ("some_unknown_counter", "ignore"),
+])
+def test_classify(metric, kind):
+    assert perf_gate.classify(metric) == kind
+
+
+# ---- compare(): budgets and directions ----
+
+
+def test_identical_bench_is_clean():
+    regs, infos = perf_gate.compare(BENCH, BENCH, 0.5, 0.05)
+    assert regs == [] and infos == []
+
+
+def test_timing_regression_beyond_tolerance():
+    bench = copy.deepcopy(BENCH)
+    bench["serving/alpha"]["us"] = 10000.0          # 10x the baseline
+    regs, _ = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert len(regs) == 1 and "serving/alpha.us" in regs[0]
+    # ...but within the budget it's noise, not a regression
+    bench["serving/alpha"]["us"] = 1400.0           # +40% < +50%
+    regs, _ = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert regs == []
+
+
+def test_quality_drop_beyond_tolerance():
+    bench = copy.deepcopy(BENCH)
+    bench["serving/alpha"]["delivered_under_slo"] = 0.5
+    bench["serving/beta"]["acceptance_rate"] = 0.79  # -1.25% < -5%
+    regs, _ = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert len(regs) == 1
+    assert "serving/alpha.delivered_under_slo" in regs[0]
+
+
+def test_speedup_rides_the_time_tolerance():
+    bench = copy.deepcopy(BENCH)
+    bench["serving/beta"]["speedup_vs_paged"] = 1.0  # -29%: inside +-50%
+    regs, _ = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert regs == []
+    bench["serving/beta"]["speedup_vs_paged"] = 0.6  # -57%: beyond
+    regs, _ = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert len(regs) == 1 and "speedup_vs_paged" in regs[0]
+
+
+def test_page_leak_is_zero_tolerance():
+    bench = copy.deepcopy(BENCH)
+    bench["serving/alpha"]["page_leaks"] = 1.0
+    regs, _ = perf_gate.compare(bench, BENCH, 100.0, 1.0)
+    assert len(regs) == 1 and "page_leaks" in regs[0]
+
+
+def test_missing_row_and_metric_are_regressions():
+    bench = copy.deepcopy(BENCH)
+    del bench["serving/beta"]
+    del bench["serving/alpha"]["ttft_p99_s"]
+    regs, _ = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert any("serving/beta: row missing" in r for r in regs)
+    assert any("ttft_p99_s: metric missing" in r for r in regs)
+    # ignored metrics going missing is fine (they were never gated)
+    bench2 = copy.deepcopy(BENCH)
+    del bench2["serving/alpha"]["seed"]
+    regs, _ = perf_gate.compare(bench2, BENCH, 0.5, 0.05)
+    assert regs == []
+
+
+def test_new_rows_and_metrics_are_informational():
+    bench = copy.deepcopy(BENCH)
+    bench["serving/gamma"] = {"us": 5.0}
+    bench["serving/alpha"]["thr_p50_s"] = 1.0
+    regs, infos = perf_gate.compare(bench, BENCH, 0.5, 0.05)
+    assert regs == []
+    assert any("serving/gamma: new row" in i for i in infos)
+    assert any("thr_p50_s: new metric" in i for i in infos)
+
+
+# ---- the CLI: exit codes, baseline round-trip, history ----
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    bench = _dump(tmp_path / "bench.json", BENCH)
+    base = _dump(tmp_path / "base.json", BENCH)
+    assert perf_gate.main(["--bench", bench, "--baseline", base]) == 0
+    assert "clean" in capsys.readouterr().out
+    worse = copy.deepcopy(BENCH)
+    worse["serving/alpha"]["us"] = 10000.0
+    bad = _dump(tmp_path / "bad.json", worse)
+    assert perf_gate.main(["--bench", bad, "--baseline", base]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # a raised tolerance admits the same diff
+    assert perf_gate.main(["--bench", bad, "--baseline", base,
+                           "--tolerance", "10.0"]) == 0
+    capsys.readouterr()
+    missing = str(tmp_path / "nope.json")
+    assert perf_gate.main(["--bench", missing, "--baseline", base]) == 2
+    assert perf_gate.main(["--bench", bench, "--baseline", missing]) == 2
+
+
+def test_update_baseline_roundtrip(tmp_path, capsys):
+    worse = copy.deepcopy(BENCH)
+    worse["serving/alpha"]["us"] = 10000.0
+    bench = _dump(tmp_path / "bench.json", worse)
+    base = str(tmp_path / "base.json")
+    # an intentional perf change: admit the new numbers, gate is clean
+    assert perf_gate.main(["--bench", bench, "--baseline", base,
+                           "--update-baseline"]) == 0
+    capsys.readouterr()
+    assert perf_gate.main(["--bench", bench, "--baseline", base]) == 0
+    written = json.loads(Path(base).read_text())
+    assert written["records"]["serving/alpha"]["us"] == 10000.0
+
+
+def test_json_report_and_history(tmp_path, capsys):
+    bench = _dump(tmp_path / "bench.json", BENCH)
+    base = _dump(tmp_path / "base.json", BENCH)
+    hist = tmp_path / "hist.jsonl"
+    assert perf_gate.main(["--bench", bench, "--baseline", base,
+                           "--json", "--append-history", str(hist)]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["ok"] is True and report["regressions"] == []
+    # history appends one parseable sha-stamped entry per run
+    assert perf_gate.main(["--bench", bench, "--baseline", base,
+                           "--append-history", str(hist)]) == 0
+    capsys.readouterr()
+    lines = hist.read_text().splitlines()
+    assert len(lines) == 2
+    for line in lines:
+        entry = json.loads(line)
+        assert entry["sha"] and entry["time_utc"]
+        assert entry["records"] == BENCH
+
+
+def test_write_bench_json_seeds_merge_from_committed_mirror(tmp_path,
+                                                            monkeypatch):
+    """A fresh checkout has no ``benchmarks/artifacts/`` bench file but
+    does have the committed root mirror: a partial (smoke) run must
+    merge into the tracked trajectory, not clobber it down to its own
+    rows — the gate treats a vanished row as a regression, so the
+    merge base is load-bearing for CI on clean clones."""
+    spec = importlib.util.spec_from_file_location(
+        "bench_common", REPO / "benchmarks" / "common.py")
+    common = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(common)
+    art = tmp_path / "repo" / "benchmarks" / "artifacts"
+    monkeypatch.setattr(common, "ART", str(art))
+    mirror = tmp_path / "repo" / "BENCH_serving.json"
+    mirror.parent.mkdir(parents=True)
+    _dump(mirror, {"serving/full": {"us": 9.0, "req_s": 100.0}})
+    common.write_bench_json(["serving/smoke,5,req_s=42.0"])
+    merged = json.loads(mirror.read_text())["records"]
+    assert set(merged) == {"serving/full", "serving/smoke"}
+    assert merged["serving/smoke"]["req_s"] == 42.0
+    # once the artifact exists it is the merge base (and wins over the
+    # now-stale mirror): a second run updates its row in place
+    common.write_bench_json(["serving/smoke,5,req_s=43.0"])
+    merged = json.loads(mirror.read_text())["records"]
+    assert set(merged) == {"serving/full", "serving/smoke"}
+    assert merged["serving/smoke"]["req_s"] == 43.0
+
+
+def test_committed_baseline_gates_committed_bench(capsys):
+    """The repo's own artifacts: the committed bench must pass the
+    committed baseline under the full-run budgets (CI runs the smoke
+    budgets, so this is the stricter check)."""
+    rc = perf_gate.main(["--bench", str(REPO / "BENCH_serving.json"),
+                         "--baseline", str(REPO / "BENCH_baseline.json")])
+    out = capsys.readouterr().out
+    assert rc == 0, f"committed bench regresses committed baseline:\n{out}"

@@ -1,0 +1,251 @@
+"""Device-level observability: the stage profiler (opt-in knob, stats
+surface, Perfetto device track, <5% overhead + token-exactness), the
+cost/energy ledger against the analytic ``network/energy.py`` model,
+and the compile observatory's pool-growth visibility."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.intent import Intent
+from repro.engine import AveryEngine, StageProfiler
+from repro.engine.observability import (DEVICE_TRACK_PID,
+                                        validate_chrome_trace)
+from repro.engine.profiler import PROFILED_STAGES
+
+from test_engine import LUT, StubExecutor, _edge_requests
+
+BASE_SNAPSHOT = "tests/fixtures/engine_stats_keys.json"
+PROFILED_SNAPSHOT = "tests/fixtures/engine_stats_keys_profiled.json"
+
+
+@pytest.fixture(scope="module")
+def executor():
+    from repro.configs.lisa_mini import CONFIG as PCFG
+    from repro.core import DualStreamExecutor, profile as prof
+    params, bns, _ = prof.random_init_system(PCFG, lut=LUT)
+    return DualStreamExecutor(pcfg=PCFG, params=params, bottlenecks=bns,
+                              lut=LUT, max_new_tokens=3, flash_decode=False)
+
+
+def _profiled_engine(executor, **kw):
+    kw.setdefault("wallclock", time.perf_counter)
+    return AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                       profile=True, **kw)
+
+
+# ---- the opt-in knob ----
+
+
+def test_profile_requires_wallclock():
+    """Engine code never reads the wall clock itself (AV502/AV603):
+    ``profile=True`` without an injected wallclock must refuse."""
+    with pytest.raises(ValueError, match="wallclock"):
+        AveryEngine(lut=LUT, executor=StubExecutor(), profile=True)
+    with pytest.raises(ValueError, match="wallclock"):
+        StageProfiler(wallclock=None)
+
+
+# ---- stats() surface: off-path byte-identical, on-path pinned ----
+
+
+def test_profiled_stats_key_snapshot(executor):
+    """With the profiler on, stats() grows exactly the pinned profiler
+    key block — and nothing else. Together with PR 9's base snapshot
+    test (which runs the same scenario with the profiler off against
+    the unchanged base fixture), this proves the off-by-default path
+    leaves the stats surface byte-identical."""
+    from pathlib import Path
+    reqs = _edge_requests(executor, 3, seed=11)
+    engine = _profiled_engine(executor, max_batch=2)
+    for i, (p, q, it) in enumerate(reqs):
+        engine.submit_packet(p, q, it, time_s=float(i))
+    engine.drain()
+    keys = sorted(engine.stats)
+    fixtures = Path(__file__).resolve().parent / "fixtures"
+    expected = json.loads((fixtures /
+                           "engine_stats_keys_profiled.json").read_text())
+    assert keys == expected, (
+        "profiled engine.stats() keys changed; if intentional, update "
+        f"{PROFILED_SNAPSHOT} in the same commit")
+    base = json.loads((fixtures / "engine_stats_keys.json").read_text())
+    extra = sorted(set(keys) - set(base))
+    per_stage = [k for s in PROFILED_STAGES
+                 for k in (f"stage_{s}_calls", f"stage_{s}_p50_s")]
+    assert extra == sorted(per_stage + [
+        "profiled_stage_calls", "profiled_wall_s", "compile_events",
+        "compile_wall_s", "compiled_roots", "ledger_flops_total",
+        "ledger_hbm_bytes_total", "ledger_energy_j_total",
+        "decode_roofline_frac"])
+    assert set(base) <= set(keys)          # profiler only adds
+    st = engine.stats
+    assert st["profiled_stage_calls"] > 0
+    assert st["profiled_wall_s"] > 0.0
+    assert st["stage_cloud_decode_rows_calls"] > 0
+    assert st["stage_draft_calls"] == 0    # no speculative decode ran
+
+
+# ---- Perfetto device track ----
+
+
+def test_device_track_in_chrome_export(executor, tmp_path):
+    """A profiled + traced serve exports the device stages as their own
+    Perfetto process (pid 3) alongside the operator/slot tracks, and
+    the merged document still validates."""
+    reqs = _edge_requests(executor, 3, seed=11)
+    engine = _profiled_engine(executor, max_batch=2, trace=True)
+    for i, (p, q, it) in enumerate(reqs):
+        engine.submit_packet(p, q, it, time_s=float(i))
+    engine.drain()
+    path = engine.dump_trace(str(tmp_path / "profiled.json"))
+    doc = json.loads(open(path).read())
+    assert validate_chrome_trace(doc) == []
+    device = [e for e in doc["traceEvents"]
+              if e.get("pid") == DEVICE_TRACK_PID and e.get("ph") == "X"]
+    assert device, "no device spans in the export"
+    stages = {e["name"] for e in device}
+    assert stages <= set(PROFILED_STAGES)
+    assert "cloud_decode_rows" in stages and "cloud_prefix" in stages
+    # the track is labelled for the Perfetto UI
+    names = [e for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e.get("pid") == DEVICE_TRACK_PID]
+    assert any(e["name"] == "process_name" for e in names)
+    labelled = {e["args"]["name"] for e in names
+                if e["name"] == "thread_name"}
+    assert stages <= labelled
+    # operator (pid 1) and slot (pid 2) tracks survive the merge
+    pids = {e.get("pid") for e in doc["traceEvents"]}
+    assert {1, 2, DEVICE_TRACK_PID} <= pids
+
+
+# ---- cost/energy ledger vs the analytic model ----
+
+
+def test_ledger_matches_analytic_model(executor):
+    """On a pinned config, a single prefix-miss request's ledger equals
+    the closed-form ``network/energy.py`` cost: one full-sequence
+    prefill plus one decode token per step at its attended context
+    length (T = max_new_tokens steps, the last one scoring <SEG>)."""
+    from repro.network.energy import (CloudDevice, decode_token_flops,
+                                      decode_token_hbm_bytes,
+                                      encoder_flops)
+    pkt, q, it = _edge_requests(executor, 1, seed=7)[0]
+    engine = _profiled_engine(executor, max_batch=1)
+    fut = engine.submit_packet(pkt, q, it, time_s=0.0)
+    engine.drain()
+    r = fut.result()
+    assert r.failure is None
+
+    pcfg = executor.pcfg
+    prefix_len = pcfg.clip_tokens + int(np.asarray(q).shape[-1])
+    T = executor.max_new_tokens
+    flops = encoder_flops(pcfg.llm, prefix_len) + sum(
+        decode_token_flops(pcfg.llm, prefix_len + i)
+        for i in range(1, T + 1))
+    hbm = sum(decode_token_hbm_bytes(pcfg.llm, prefix_len + i)
+              for i in range(1, T + 1))
+    assert r.cloud_flops == pytest.approx(flops, rel=1e-9)
+    assert r.cloud_hbm_bytes == pytest.approx(hbm, rel=1e-9)
+    assert r.cloud_energy_j == pytest.approx(
+        CloudDevice().compute_energy_j(flops), rel=1e-9)
+    # the engine-level ledger is the sum over responses (here: one)
+    st = engine.stats
+    assert st["ledger_flops_total"] == pytest.approx(r.cloud_flops)
+    assert st["ledger_hbm_bytes_total"] == pytest.approx(
+        r.cloud_hbm_bytes)
+    assert st["ledger_energy_j_total"] == pytest.approx(r.cloud_energy_j)
+    # achieved vs roofline: a fraction, strictly positive on a real run
+    assert 0.0 < st["decode_roofline_frac"] < 1.0
+
+
+def test_ledger_absent_without_profiler(executor):
+    """The ledger rides the profiler knob: an unprofiled response keeps
+    the cost fields at None (no silent zero-cost claims)."""
+    pkt, q, it = _edge_requests(executor, 1, seed=7)[0]
+    engine = AveryEngine(lut=LUT, executor=executor, batching="inflight",
+                         max_batch=1)
+    fut = engine.submit_packet(pkt, q, it, time_s=0.0)
+    engine.drain()
+    r = fut.result()
+    assert r.failure is None
+    assert r.cloud_flops is None and r.cloud_hbm_bytes is None
+    assert r.cloud_energy_j is None
+
+
+# ---- compile observatory: pool growth is a spike, not an exception ----
+
+
+def test_pool_growth_compile_spike_is_visible(executor):
+    """PR 8's ``debug_recompiles`` turns pool-growth churn into a hard
+    error; the observatory (no debug knob) turns it into telemetry: a
+    tiny pool served distinct-prefix requests, the forced growth
+    recompiled the decode stages, the counter rose, serving continued,
+    and the flight recorder kept the events."""
+    import jax.numpy as jnp
+
+    from repro.data import floodseg
+    rng = np.random.RandomState(311)
+
+    def submit(engine, i):
+        b = floodseg.make_batch(rng, 1, "segment", augment=False)
+        pkt = executor.edge_insight(jnp.asarray(b["images"]),
+                                    LUT.tiers[0], i, 0.0)
+        return engine.submit_packet(pkt, b["query"], Intent.INSIGHT,
+                                    time_s=float(i),
+                                    session=engine.session(f"uav-{i}"))
+
+    engine = _profiled_engine(executor, max_batch=4, kv_pages=2)
+    futs = [submit(engine, 0)]
+    engine.drain()
+    warm = engine.stats["compile_events"]       # cold-cache compiles
+    pages0 = engine.stats["kv_pages_total"]
+    # enough distinct prefixes to outgrow the first prefill's capacity
+    # hint: the pool doubles mid-flight, the decode shapes change, and
+    # the paged stages recompile
+    futs += [submit(engine, i) for i in range(1, 8)]
+    engine.drain()
+    st = engine.stats
+    assert st["compile_events"] > warm, (
+        "pool growth recompiled nothing visible")
+    assert st["kv_pages_total"] > pages0    # the pool really grew
+    assert st["compile_wall_s"] > 0.0 and st["compiled_roots"] > 0
+    assert all(f.result().failure is None for f in futs)
+    compiles = [e for e in engine.flight.snapshot()
+                if e["kind"] == "compile"]
+    assert compiles
+    assert all(e["data"]["delta"] >= 1 and e["data"]["root"]
+               for e in compiles)
+
+
+# ---- overhead budget + token-exactness ----
+
+
+def test_profiler_overhead_and_token_exactness(executor):
+    """Profiling must be cheap enough to leave on for benches (<5% of
+    bare wall time, plus a small epsilon against timer noise) and must
+    not perturb the serve: profiled responses are token-exact with
+    bare ones."""
+    reqs = _edge_requests(executor, 4, seed=5)
+
+    def run(profile):
+        t0 = time.perf_counter()
+        engine = AveryEngine(
+            lut=LUT, executor=executor, batching="inflight", max_batch=4,
+            profile=profile,
+            wallclock=time.perf_counter if profile else None)
+        futs = [engine.submit_packet(p, q, it, time_s=float(i))
+                for i, (p, q, it) in enumerate(reqs)]
+        engine.drain()
+        toks = [np.asarray(f.result().tokens).tolist() for f in futs]
+        return time.perf_counter() - t0, toks
+
+    run(False)                            # warm the compiled stages
+    run(True)                             # ...and the profiled wrappers
+    bare = min(run(False)[0] for _ in range(3))
+    t_prof, toks_prof = min((run(True) for _ in range(3)),
+                            key=lambda r: r[0])
+    assert toks_prof == run(False)[1]     # profiling never changes tokens
+    assert t_prof <= bare * 1.05 + 0.02, (
+        f"profiler overhead too high: {t_prof:.4f}s profiled vs "
+        f"{bare:.4f}s bare")
