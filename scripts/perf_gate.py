@@ -19,7 +19,15 @@ Metric classification (``classify``):
     FLOPs/bytes. Regression when the new value falls below baseline by
     more than ``--quality-tolerance`` (relative); ``speedup_*`` ratios
     are timing-derived, so they use the (looser) time tolerance on the
-    same lower bound.
+    same lower bound — BUT a speedup is self-normalized (numerator and
+    denominator are measured in the same run, so machine load largely
+    cancels), so any speedup whose baseline claims a material win
+    (>= ``SPEEDUP_PARITY_MARGIN``) additionally gates hard at the
+    parity floor: a recorded value below 1.0 means the accelerated
+    path measured *slower* than its own in-run baseline, which no
+    tolerance excuses. Near-parity baselines (e.g. the CPU-container
+    spec-decode row, whose draft shares the target's geometry) stay
+    on the relative budget only, so they cannot flap CI.
   * **zero-tolerance** — ``page_leaks``: any nonzero value is a
     regression regardless of baseline or tolerance.
   * **ignored** — run geometry (seeds, sizes, SLOs), fault-schedule
@@ -57,6 +65,13 @@ DEFAULT_TOLERANCE = 0.50          # lower-better metrics may grow 50%
 DEFAULT_QUALITY_TOLERANCE = 0.05  # higher-better metrics may drop 5%
 SMOKE_TOLERANCE = 1.50
 SMOKE_QUALITY_TOLERANCE = 0.30
+
+# speedup ratios cancel machine noise; a baseline at/above the margin
+# claims a real win, and such a row dropping below the floor means the
+# fast path measured slower than its own in-run baseline — gated in
+# every mode, independent of the relative budgets above
+SPEEDUP_PARITY_MARGIN = 1.10
+SPEEDUP_PARITY_FLOOR = 1.0
 
 HIGHER_BETTER = {
     "req_s", "admit_req_s", "decode_tok_s", "delivered_under_slo",
@@ -142,13 +157,21 @@ def compare(bench: Dict[str, Dict[str, Any]],
                         f"{name}.{metric}: {new:g} > {old:g} "
                         f"(+{tolerance:.0%} budget -> {limit:g})")
             else:   # higher-better; speedups ride the time tolerance
-                tol = (tolerance if metric.startswith("speedup_")
-                       else quality_tolerance)
+                is_speedup = metric.startswith("speedup_")
+                tol = tolerance if is_speedup else quality_tolerance
                 limit = old * (1.0 - tol)
                 if new < limit:
                     regressions.append(
                         f"{name}.{metric}: {new:g} < {old:g} "
                         f"(-{tol:.0%} budget -> {limit:g})")
+                elif is_speedup and old >= SPEEDUP_PARITY_MARGIN \
+                        and new < SPEEDUP_PARITY_FLOOR:
+                    regressions.append(
+                        f"{name}.{metric}: {new:g} fell below parity "
+                        f"(baseline {old:g} claimed a >="
+                        f"{SPEEDUP_PARITY_MARGIN:g}x win; the "
+                        f"accelerated path now measures slower than "
+                        f"its in-run baseline)")
         for metric in sorted(set(row) - set(base_row)):
             if isinstance(row[metric], (int, float)) \
                     and classify(metric) != "ignore":

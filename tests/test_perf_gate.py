@@ -89,6 +89,38 @@ def test_speedup_rides_the_time_tolerance():
     assert len(regs) == 1 and "speedup_vs_paged" in regs[0]
 
 
+def test_speedup_parity_floor_gates_hard():
+    # baseline claims a 1.4x win: a recorded value below 1.0 means the
+    # fast path measured slower than its own in-run baseline — gated
+    # even inside the loose smoke time tolerance (which would otherwise
+    # admit anything down to 1.4 * (1 - 1.5) < 0)
+    bench = copy.deepcopy(BENCH)
+    bench["serving/beta"]["speedup_vs_paged"] = 0.95
+    regs, _ = perf_gate.compare(bench, BENCH, 1.5, 0.30)
+    assert len(regs) == 1 and "below parity" in regs[0]
+    # at parity or above, the relative budget alone governs
+    bench["serving/beta"]["speedup_vs_paged"] = 1.0
+    regs, _ = perf_gate.compare(bench, BENCH, 1.5, 0.30)
+    assert regs == []
+
+
+def test_near_parity_speedup_baseline_skips_the_floor():
+    # a row whose baseline never claimed a material win (the
+    # CPU-container spec-decode row sits near 1.0 by design: the draft
+    # shares the target's geometry) must not flap CI on noise dipping
+    # below 1.0...
+    base = copy.deepcopy(BENCH)
+    base["serving/beta"]["speedup_vs_paged"] = 1.01
+    bench = copy.deepcopy(base)
+    bench["serving/beta"]["speedup_vs_paged"] = 0.79
+    regs, _ = perf_gate.compare(bench, base, 1.5, 0.30)
+    assert regs == []
+    # ...though the relative time budget still bounds the fall
+    bench["serving/beta"]["speedup_vs_paged"] = 0.2
+    regs, _ = perf_gate.compare(bench, base, 0.5, 0.05)
+    assert len(regs) == 1 and "speedup_vs_paged" in regs[0]
+
+
 def test_page_leak_is_zero_tolerance():
     bench = copy.deepcopy(BENCH)
     bench["serving/alpha"]["page_leaks"] = 1.0
